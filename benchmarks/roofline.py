@@ -1,0 +1,218 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/<mesh>/*.json (written by
+repro.launch.dryrun) and derives, per (arch × shape) cell:
+
+    compute term    = HLO_FLOPs/dev   / peak_FLOP/s          [s]
+    memory term     = HLO_bytes/dev   / HBM_bw               [s]
+    collective term = coll_bytes/dev  / link_bw              [s]
+
+plus the dominant term, MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE, and the
+family-appropriate analogue for GNN/recsys/search), the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
+
+    frac = model_compute_time / max(compute, memory, collective)
+
+— the fraction of the binding roofline actually spent on model math (1.0 ⇔
+the cell runs at the hardware bound with zero waste).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod1_16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK = 197e12          # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9         # B/s per chip
+ICI_BW = 50e9          # B/s per link per chip
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _chips(mesh_name: str) -> int:
+    return 512 if "2x16x16" in mesh_name else 256
+
+
+# -- analytic MODEL_FLOPS per cell (global, forward-equivalent useful math) ----
+
+
+def lm_model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_arch
+    cfg = get_arch(arch).full_config()
+    n_active = cfg.active_param_count()
+    B = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+         "long_500k": 1}[shape]
+    S = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+         "long_500k": 1}[shape]
+    tokens = B * S
+    mult = 6 if shape == "train_4k" else 2      # fwd+bwd vs fwd
+    flops = mult * n_active * tokens
+    # decode attention reads: 2·B·L·Hkv-width dot over kv_len — count the
+    # attention math for decode cells (it dominates decode usefulness)
+    if shape == "decode_32k":
+        kv = 32768
+        flops += 4 * B * cfg.n_layers * cfg.n_heads * cfg.qk_dim * kv
+    if shape == "long_500k" and cfg.window:
+        flops += 4 * B * cfg.n_layers * cfg.n_heads * cfg.qk_dim * cfg.window
+    return flops
+
+
+def gnn_model_flops(shape: str) -> float:
+    from repro.configs.cells import GNN_SHAPES
+    from repro.configs import get_arch
+    sh = GNN_SHAPES[shape]
+    cfg = get_arch("graphcast").full_config(d_feat=sh["d_feat"])
+    h, L = cfg.d_hidden, cfg.n_layers
+    E = sh["n_edges"] * sh.get("batch", 1)
+    N = sh["n_nodes"] * sh.get("batch", 1)
+    per_edge = 2 * (3 * h * h + h * h)          # edge MLP
+    per_node = 2 * (2 * h * h + h * h)          # node MLP
+    enc_dec = 2 * N * (sh["d_feat"] * h + h * h) * 2 + 2 * E * (2 * h * h + h * h)
+    fwd = L * (E * per_edge + N * per_node) + enc_dec
+    return 3 * fwd                               # train: fwd + bwd
+
+
+def recsys_model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_arch
+    from repro.configs.cells import RECSYS_SHAPES
+    cfg = get_arch(arch).full_config()
+    B = RECSYS_SHAPES[shape]["batch"]
+    d = cfg.embed_dim
+    if cfg.kind == "fm":
+        per = 4 * cfg.n_sparse * d
+    elif cfg.kind == "dcn":
+        d0 = cfg.n_dense + cfg.n_sparse * d
+        per = 2 * (cfg.n_cross_layers * d0 * d0)
+        dims = (d0,) + tuple(cfg.mlp_dims)
+        per += 2 * sum(a * b for a, b in zip(dims, dims[1:]))
+    else:
+        S = cfg.seq_len + (1 if cfg.kind == "bst" else 0)
+        per_block = 2 * (4 * d * d * S + 2 * S * S * d + 8 * d * d * S)
+        per = cfg.n_blocks * per_block
+        if cfg.kind == "bst":
+            dims = ((S) * d,) + tuple(cfg.mlp_dims) + (1,)
+            per += 2 * sum(a * b for a, b in zip(dims, dims[1:]))
+    if shape == "retrieval_cand":
+        return 2 * RECSYS_SHAPES[shape]["cands"] * d
+    mult = 3 if shape == "train_batch" else 1
+    if cfg.kind == "bert4rec" and shape == "train_batch":
+        per += 2 * 32 * 1025 * d                 # sampled softmax
+    if cfg.kind == "bert4rec" and shape.startswith("serve"):
+        per += 2 * (cfg.n_items + 2) * d         # full-vocab last-position
+    return mult * B * per
+
+
+def search_model_flops(shape: str, n_parts: int) -> float:
+    from repro.configs.anlessini import SHAPES, full_config
+    cfg = full_config(n_parts)
+    Q = SHAPES[shape]["Q"]
+    # per query-term-block BM25: ~6 flops per posting slot
+    return Q * cfg.max_terms * cfg.max_blocks * cfg.block * 6.0 * n_parts
+
+
+def model_flops(cell: str, mesh_name: str) -> float | None:
+    arch, shape = cell.split("/")
+    try:
+        if arch == "graphcast":
+            return gnn_model_flops(shape)
+        if arch == "anlessini":
+            return search_model_flops(shape, _chips(mesh_name))
+        from repro.configs import get_arch
+        fam = get_arch(arch).FAMILY
+        if fam == "lm":
+            return lm_model_flops(arch, shape)
+        if fam == "recsys":
+            return recsys_model_flops(arch, shape)
+    except Exception:
+        return None
+    return None
+
+
+# -- table ------------------------------------------------------------------------
+
+
+def analyze(mesh_name: str) -> list[dict]:
+    d = os.path.join(RESULTS, mesh_name)
+    rows = []
+    if not os.path.isdir(d):
+        return rows
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(d, fn)))
+        if rec.get("skip"):
+            rows.append({"cell": rec["cell"], "skip": True,
+                         "note": rec.get("note", "")})
+            continue
+        if not rec.get("ok"):
+            rows.append({"cell": rec["cell"], "error": rec.get("error")})
+            continue
+        pd = rec["per_device"]
+        t_c = pd["flops"] / PEAK
+        t_m = pd["bytes_accessed"] / HBM_BW
+        t_x = rec["collectives"]["total_bytes"] / ICI_BW
+        dominant = max(("compute", t_c), ("memory", t_m),
+                       ("collective", t_x), key=lambda kv: kv[1])[0]
+        mf = model_flops(rec["cell"], mesh_name)
+        chips = _chips(mesh_name)
+        mf_dev = mf / chips if mf else None
+        rows.append({
+            "cell": rec["cell"],
+            "kind": rec.get("kind"),
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dominant,
+            "hlo_flops_dev": pd["flops"],
+            "model_flops_dev": mf_dev,
+            "useful_ratio": (mf_dev / pd["flops"]) if mf_dev and pd["flops"]
+                            else None,
+            "roofline_frac": (mf_dev / PEAK) / max(t_c, t_m, t_x, 1e-30)
+                             if mf_dev else None,
+            "peak_gib": pd["peak_bytes"] / 2 ** 30,
+            "args_gib": pd["argument_bytes"] / 2 ** 30,
+            "fits_16g": (pd["argument_bytes"] + pd["output_bytes"]) < 16 * 2 ** 30,
+        })
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'cell':34s} {'dom':10s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'useful':>7s} {'roofl%':>7s} {'args GiB':>9s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("skip"):
+            out.append(f"{r['cell']:34s} {'—  (N/A: sub-quadratic gate)'}")
+            continue
+        if r.get("error"):
+            out.append(f"{r['cell']:34s} ERROR {r['error'][:60]}")
+            continue
+        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "  —"
+        rf = f"{100 * r['roofline_frac']:.1f}" if r["roofline_frac"] else "  —"
+        out.append(
+            f"{r['cell']:34s} {r['dominant']:10s} "
+            f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+            f"{r['t_collective_s']:9.2e} {u:>7s} {rf:>7s} "
+            f"{r['args_gib']:9.2f}")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1_16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = analyze(args.mesh)
+    print(f"Roofline — mesh {args.mesh} ({_chips(args.mesh)} chips), "
+          f"peak {PEAK/1e12:.0f} TF/s bf16, HBM {HBM_BW/1e9:.0f} GB/s, "
+          f"ICI {ICI_BW/1e9:.0f} GB/s")
+    print(fmt_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

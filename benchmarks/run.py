@@ -1,0 +1,241 @@
+"""Benchmark harness — one benchmark per paper table/claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
+  B1  end-to-end warm latency < 300 ms; cold vs warm split        (§2)
+  B2  ~10× faster than Crane & Lin '17 KV-postings design         (§2)
+  B3  ~100,000 queries per US dollar at 2 GB × 300 ms             (§2)
+  B4  cost fungibility: 10 QPS × 10,000 s == 100 QPS × 1,000 s    (§2)
+  B5  index size: ~700 MB for 8.8 M passages (bytes/doc parity)   (§2)
+  B6  document partitioning scale-out (§3) — latency vs partitions
+  B7  batch reindex + zero-downtime switch-over (§3)
+  B8  roofline summary over the dry-run artifacts (if present)
+
+Output: "name,value,unit,derived" CSV lines + a human summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, value, unit: str, derived: str = "") -> None:
+    ROWS.append((name, value, unit, derived))
+    print(f"  {name:42s} {value!s:>12} {unit:12s} {derived}")
+
+
+def bench_latency(n_docs: int, n_queries: int) -> None:
+    from repro.core.runtime import RuntimeConfig
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.service import build_search_app
+
+    print("\nB1: end-to-end latency (paper: <300 ms warm, interactive)")
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=1)
+    app = build_search_app(docs, runtime_config=RuntimeConfig())
+    t = 0.0
+    for q in queries:
+        app.query(q, t_arrival=t)
+        t = app.runtime.clock + 0.05          # 20 QPS steady state
+    recs = list(app.runtime.records)
+    warm = [r.latency_s for r in recs if not r.cold]
+    cold = [r.latency_s for r in recs if r.cold]
+    emit("warm_latency_p50_ms", round(float(np.median(warm)) * 1e3, 2), "ms",
+         "paper budget: <300")
+    emit("warm_latency_p99_ms",
+         round(float(np.quantile(warm, 0.99)) * 1e3, 2), "ms")
+    emit("cold_latency_p50_ms",
+         round(float(np.median(cold)) * 1e3, 2) if cold else 0, "ms",
+         "hydration + container boot")
+    emit("warm_under_300ms",
+         int(100 * np.mean(np.asarray(warm) < 0.3)), "%", "pass if 100")
+
+
+def bench_baseline(n_docs: int, n_queries: int) -> None:
+    from repro.baselines.kvstore_search import KVPostingsIndex
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.service import build_search_app
+
+    print("\nB2: vs Crane & Lin '17 (paper: ~3 s → <300 ms, ≥10×)")
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=2)
+    kv = KVPostingsIndex()
+    kv.build(docs)
+    kv_lat = []
+    for q in queries:
+        _, s = kv.search(q)
+        kv_lat.append(s)
+    app = build_search_app(docs)
+    t = 0.0
+    for q in queries:
+        app.query(q, t_arrival=t)
+        t = app.runtime.clock + 0.05
+    warm = [r.latency_s for r in app.runtime.records if not r.cold]
+    kv_p50 = float(np.median(kv_lat))
+    our_p50 = float(np.median(warm))
+    emit("kvstore_baseline_p50_ms", round(kv_p50 * 1e3, 1), "ms",
+         "Crane&Lin'17 design")
+    emit("anlessini_warm_p50_ms", round(our_p50 * 1e3, 1), "ms")
+    emit("speedup_x", round(kv_p50 / max(our_p50, 1e-9), 1), "x",
+         "paper: ~10x")
+
+
+def bench_cost() -> None:
+    from repro.core.cost import (CostLedger, Invocation, fungibility_check,
+                                 paper_headline_cost)
+
+    print("\nB3/B4: Lambda cost model (paper: 100k q/$; load fungibility)")
+    emit("queries_per_dollar_2GB_300ms", round(paper_headline_cost()), "q/$",
+         "paper: 100,000")
+    a, b = fungibility_check(10, 10_000, 100, 1_000)
+    emit("fungibility_10qps_10000s", round(a, 4), "$")
+    emit("fungibility_100qps_1000s", round(b, 4), "$", "must be equal")
+    led = CostLedger()
+    for _ in range(1000):
+        led.charge(Invocation(2 << 30, 0.3))
+    emit("ledger_1000q_cost", round(led.compute_dollars, 4), "$",
+         "≈ 0.01 (1000 q at 100k q/$)")
+
+
+def bench_index_size(n_docs: int) -> None:
+    from repro.data.corpus import synth_corpus
+    from repro.index.builder import IndexWriter, write_segment
+
+    print("\nB5: index size (paper: ~700 MB for 8.8 M passages ≈ 83 B/doc)")
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    w = IndexWriter()
+    w.add_many(docs)
+    packed = w.pack()
+    seg = write_segment(packed)
+    total = sum(len(seg.files[f]) for f in seg.list())
+    n_postings = int((packed.block_docs < packed.meta.n_docs).sum())
+    pad_frac = 1 - n_postings / packed.block_docs.size
+    emit("index_bytes", total, "B")
+    emit("index_bytes_per_doc", round(total / n_docs, 1), "B/doc",
+         "paper: ~83 B/doc")
+    emit("index_bytes_per_posting", round(total / n_postings, 2), "B/posting",
+         f"pad={pad_frac:.0%}; Lucene ≈1.4 B/posting (compressed)")
+    # MS MARCO: 8.8M passages ≈ 495M postings; at scale padding amortizes
+    # toward the 5 B/posting floor of the uncompressed blocked format.
+    emit("extrapolated_msmarco_MB",
+         round(5.0 * 495e6 / 2 ** 20), "MB",
+         "paper: ~700 MB (ours uncompressed: dense-blocked trade-off)")
+
+
+def bench_partitions(n_docs: int, n_queries: int) -> None:
+    print("\nB6: document partitioning (paper §3 scale-out path)")
+    from repro.core.kvstore import KVStore
+    from repro.core.object_store import ObjectStore
+    from repro.core.partition import ScatterGather
+    from repro.core.runtime import FaaSRuntime, RuntimeConfig
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.distributed import partition_corpus
+    from repro.search.searcher import SearchConfig, make_search_handler
+    from repro.search.service import index_corpus
+
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=3)
+    for p in (1, 2, 4):
+        parts, _ = partition_corpus(docs, p)
+        store, doc_store = ObjectStore(), KVStore()
+        runtime = FaaSRuntime(RuntimeConfig())
+        fns = []
+        for i, pd in enumerate(parts):
+            cat = index_corpus(pd, store, doc_store, asset=f"idx{i}")
+            runtime.register(f"s{i}", make_search_handler(
+                cat, doc_store, f"idx{i}", SearchConfig()))
+            fns.append(f"s{i}")
+        sg = ScatterGather(runtime, fns)
+        lats = []
+        for q in queries:
+            _, lat, _ = sg.search({"q": q, "k": 10}, 10,
+                                  t_arrival=runtime.clock + 0.05)
+            lats.append(lat)
+        emit(f"partitions_{p}_p50_ms",
+             round(float(np.median(lats)) * 1e3, 1), "ms",
+             f"fleet={runtime.fleet_size}")
+
+
+def bench_refresh() -> None:
+    print("\nB7: batch reindex + atomic switch-over (paper §3)")
+    from repro.core.directory import RamDirectory
+    from repro.core.object_store import ObjectStore
+    from repro.core.refresh import AssetCatalog, refresh_fleet
+    from repro.core.runtime import FaaSRuntime
+
+    s = ObjectStore()
+    cat = AssetCatalog(s)
+    cat.publish("idx", "v1", RamDirectory({"seg": b"x" * 1024}))
+
+    def handler(cache, payload):
+        v = cat.current_version("idx")
+        cache.get_or_hydrate("idx", v, lambda: (v, 0.05))
+        return v, 0.001
+
+    rt = FaaSRuntime()
+    rt.register("f", handler)
+    rt.invoke("f", None)
+    t0 = time.perf_counter()
+    cat.publish("idx", "v2", RamDirectory({"seg": b"y" * 1024}))
+    n = refresh_fleet(rt, "idx")
+    switch_ms = (time.perf_counter() - t0) * 1e3
+    out, _ = rt.invoke("f", None, t_arrival=rt.clock + 0.1)
+    emit("switchover_wall_ms", round(switch_ms, 2), "ms",
+         "publish + invalidate (zero downtime)")
+    emit("post_refresh_version_ok", int(out == "v2"), "bool",
+         f"instances refreshed: {n}")
+
+
+def bench_roofline_summary() -> None:
+    print("\nB8: roofline summary (from dry-run artifacts, if present)")
+    from benchmarks.roofline import analyze
+    for mesh in ("pod1_16x16", "pod2_2x16x16"):
+        rows = [r for r in analyze(mesh) if "t_compute_s" in r]
+        if not rows:
+            emit(f"{mesh}_cells", 0, "cells", "run repro.launch.dryrun first")
+            continue
+        dom: dict[str, int] = {}
+        for r in rows:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        fracs = [r["roofline_frac"] for r in rows if r["roofline_frac"]]
+        emit(f"{mesh}_cells", len(rows), "cells", f"dominant: {dom}")
+        if fracs:
+            emit(f"{mesh}_roofline_frac_median",
+                 round(float(np.median(fracs)), 3), "frac")
+            emit(f"{mesh}_roofline_frac_best",
+                 round(float(np.max(fracs)), 3), "frac")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI-speed)")
+    ap.add_argument("--docs", type=int, default=None)
+    ap.add_argument("--queries", type=int, default=None)
+    args = ap.parse_args()
+    n_docs = args.docs or (2_000 if args.fast else 20_000)
+    n_q = args.queries or (100 if args.fast else 400)
+
+    t0 = time.time()
+    bench_latency(n_docs, n_q)
+    bench_baseline(n_docs, min(n_q, 200))
+    bench_cost()
+    bench_index_size(n_docs)
+    bench_partitions(min(n_docs, 8_000), min(n_q, 100))
+    bench_refresh()
+    bench_roofline_summary()
+
+    print(f"\n# total bench wall time: {time.time() - t0:.1f}s")
+    print("\nname,value,unit,derived")
+    for r in ROWS:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing through the versioned ObjectStore asset machinery."""
+
+from repro.checkpoint.manager import (CheckpointConfig, CheckpointManager,
+                                      load_pytree, save_pytree)
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "load_pytree",
+           "save_pytree"]

@@ -1,0 +1,169 @@
+"""Checkpointing to the ObjectStore — training's durable state, through the
+same versioned-asset machinery the paper uses for index switch-over (§3).
+
+A checkpoint is one asset version (``ckpt/<name>`` at version ``step-%09d``):
+each pytree leaf is one ``.npy`` object plus a JSON manifest of paths/shapes/
+dtypes. Publishing is atomic (AssetCatalog's compare-and-set manifest), so a
+crash mid-save never corrupts the restore point — the manifest still names
+the previous complete version. This *is* the paper's "new indexes placed
+alongside the old, then switch" pattern applied to train state.
+
+``CheckpointManager`` adds: save-every-N cadence, async save (background
+thread — training continues while bytes stream out), keep-last-K GC, and
+restore-latest. Restore reshards to the live mesh via ``jax.device_put``
+with the caller's shardings — which is also the *elastic rescale* path: a
+checkpoint written on one mesh restores onto any other.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+import orjson
+
+from repro.core.directory import RamDirectory
+from repro.core.object_store import ObjectStore
+from repro.core.refresh import AssetCatalog
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) or "_root"
+
+
+def save_pytree(tree: Any) -> RamDirectory:
+    """Serialize a pytree of arrays into Directory files + manifest."""
+    d = RamDirectory()
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    manifest = []
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        fname = f"leaf{i:05d}.npy"
+        d.write(fname, buf.getvalue())
+        manifest.append({"key": _leaf_key(path), "file": fname,
+                         "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    d.write("manifest.json", orjson.dumps(manifest))
+    return d
+
+
+def load_pytree(directory, like: Any, *, shardings: Any = None) -> Any:
+    """Read leaves back and unflatten into `like`'s structure; device_put
+    with `shardings` if given (elastic restore onto a different mesh)."""
+    manifest = orjson.loads(directory.open_input("manifest.json").read_all())
+    leaves_like, tdef = jax.tree_util.tree_flatten(like)
+    if len(manifest) != len(leaves_like):
+        raise ValueError(f"checkpoint has {len(manifest)} leaves, "
+                         f"expected {len(leaves_like)}")
+    for ent, leaf in zip(manifest, leaves_like):
+        if tuple(ent["shape"]) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {ent['key']!r} has shape "
+                f"{tuple(ent['shape'])}, expected {tuple(leaf.shape)} — "
+                f"stale checkpoint for a different config?")
+    arrs = []
+    for ent in manifest:
+        data = directory.open_input(ent["file"]).read_all()
+        arrs.append(np.load(io.BytesIO(data), allow_pickle=False))
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(shardings)
+        arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
+    return jax.tree_util.tree_unflatten(tdef, arrs)
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    every_steps: int = 50
+    keep: int = 3
+    async_save: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, store: ObjectStore, name: str = "train",
+                 config: CheckpointConfig | None = None) -> None:
+        self.catalog = AssetCatalog(store, root="ckpt")
+        self.name = name
+        self.config = config or CheckpointConfig()
+        self._pending: threading.Thread | None = None
+        self.saves = 0
+        self.save_seconds = 0.0
+
+    # -- write ------------------------------------------------------------------
+
+    def _version(self, step: int) -> str:
+        return f"step-{step:09d}"
+
+    def maybe_save(self, step: int, state: Any) -> bool:
+        if step % self.config.every_steps != 0:
+            return False
+        self.save(step, state)
+        return True
+
+    def save(self, step: int, state: Any) -> None:
+        # snapshot to host BEFORE handing to the writer thread (donated
+        # buffers may be reused by the next step otherwise)
+        host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        self.wait()                       # one in-flight save at a time
+
+        def _write():
+            t0 = time.perf_counter()
+            d = save_pytree(host_state)
+            self.catalog.publish(self.name, self._version(step), d)
+            self.catalog.gc(self.name, keep=self.config.keep)
+            self.save_seconds += time.perf_counter() - t0
+            self.saves += 1
+
+        if self.config.async_save:
+            self._pending = threading.Thread(target=_write, daemon=True)
+            self._pending.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- read -------------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        try:
+            v = self.catalog.current_version(self.name)
+        except Exception:
+            return None
+        return int(v.split("-")[1])
+
+    def restore(self, like: Any, *, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        """Returns (state, step). Raises if no checkpoint exists."""
+        self.wait()
+        version = None if step is None else self._version(step)
+        v, directory = self.catalog.open(self.name, version)
+        state = load_pytree(directory, like, shardings=shardings)
+        return state, int(v.split("-")[1])
+
+    def restore_or_init(self, init_fn: Callable[[], Any], *,
+                        shardings: Any = None) -> tuple[Any, int]:
+        like = jax.eval_shape(init_fn)
+        try:
+            return self.restore(like, shardings=shardings)
+        except Exception:
+            state = init_fn()
+            if shardings is not None:
+                state = jax.tree_util.tree_map(
+                    lambda x, s: jax.device_put(x, s), state, shardings)
+            return state, 0

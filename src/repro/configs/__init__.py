@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Ten assigned architectures + the paper's own (anlessini). Each module
+exposes ``full_config() / reduced_config() / rules() / cells(rules, reduced)``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_MODULES = {
+    # LM family
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    # GNN
+    "graphcast": "repro.configs.graphcast",
+    # recsys
+    "fm": "repro.configs.fm",
+    "bst": "repro.configs.bst",
+    "dcn-v2": "repro.configs.dcn_v2",
+    "bert4rec": "repro.configs.bert4rec",
+    # the paper's own
+    "anlessini": "repro.configs.anlessini",
+}
+
+ASSIGNED = [a for a in ARCH_MODULES if a != "anlessini"]
+
+
+def get_arch(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[name])
+
+
+def build_cells(name: str, *, multi_pod: bool = False, reduced: bool = False):
+    """dict[shape_name, CellSpec] for one arch under the given mesh kind."""
+    mod = get_arch(name)
+    rules = mod.rules()
+    if multi_pod:
+        rules = rules.with_pod()
+    return mod.cells(rules, reduced=reduced)
+
+
+def all_cells(*, multi_pod: bool = False, reduced: bool = False,
+              include_paper_arch: bool = True):
+    out = {}
+    names = list(ASSIGNED) + (["anlessini"] if include_paper_arch else [])
+    for name in names:
+        for sname, cell in build_cells(
+                name, multi_pod=multi_pod, reduced=reduced).items():
+            out[f"{name}/{sname}"] = cell
+    return out

@@ -1,0 +1,41 @@
+"""bert4rec [arXiv:1904.06690]: bidirectional 2-block transformer over
+200-item sequences, embed_dim=64, 2 heads; masked-item objective.
+
+Item vocab 2²⁰−2 (+[PAD]/[MASK] rows → 2²⁰ table rows, row-sharded).
+Training uses sampled softmax (1024 shared negatives over 32 masked
+positions per sequence) — full softmax over B·S·V is petabyte-scale at
+train_batch=65536 (DESIGN.md §5)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.cells import recsys_cells
+from repro.models.recsys import RecsysConfig
+from repro.parallel.sharding import recsys_rules
+
+ARCH_ID = "bert4rec"
+FAMILY = "recsys"
+
+
+def full_config(**over) -> RecsysConfig:
+    kw = dict(name=ARCH_ID, kind="bert4rec", embed_dim=64, seq_len=200,
+              n_blocks=2, n_heads=2, n_items=(1 << 20) - 2,
+              dtype=jnp.float32)
+    kw.update(over)
+    return RecsysConfig(**kw)
+
+
+def reduced_config() -> RecsysConfig:
+    return RecsysConfig(name=ARCH_ID + "-reduced", kind="bert4rec",
+                        embed_dim=8, seq_len=12, n_blocks=1, n_heads=2,
+                        n_items=254, dtype=jnp.float32)
+
+
+def rules(**kw):
+    return recsys_rules()
+
+
+def cells(rules_, *, reduced: bool = False):
+    cfg = reduced_config() if reduced else full_config(unroll=True)
+    return recsys_cells(ARCH_ID, cfg, rules_, reduced=reduced)

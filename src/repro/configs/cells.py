@@ -1,0 +1,392 @@
+"""Cell builders: one CellSpec per (architecture × input shape).
+
+A *cell* is the unit of the multi-pod dry-run and the roofline table: a pure
+step function + abstract (ShapeDtypeStruct) inputs + PartitionSpecs. The
+dry-run binds a mesh, jits with the specs, lowers, compiles, and reads
+memory/cost analysis — no arrays are ever allocated for the full configs.
+
+Families: LM (train / prefill / decode / long-decode), GNN (train on four
+graph regimes), recsys (train / serve / bulk / retrieval), plus the paper's
+own search arch (see repro.configs.anlessini).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import abstract_params
+from repro.parallel.sharding import ShardRules, param_specs
+from repro.train.optim import OptConfig
+from repro.train.steps import make_train_step
+
+
+def SDS(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode | serve | retrieval
+    fn: Callable | None
+    args: tuple                     # abstract argument pytrees
+    in_specs: tuple                 # PartitionSpec pytrees, same structure
+    donate: tuple[int, ...] = ()
+    note: str = ""
+    skip: bool = False              # inapplicable cell (reason in note)
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+# -- train-state helpers -------------------------------------------------------
+
+
+def abstract_train_state(defs) -> dict:
+    params = abstract_params(defs)
+    f32 = jax.tree_util.tree_map(
+        lambda s: SDS(s.shape, jnp.float32), params)
+    return {"params": params,
+            "opt": {"m": f32, "v": f32, "count": SDS((), jnp.int32)}}
+
+
+def train_state_specs(defs, rules: ShardRules) -> dict:
+    ps = param_specs(defs, rules)
+    return {"params": ps, "opt": {"m": ps, "v": ps, "count": P()}}
+
+
+# ================================ LM family =====================================
+
+LM_SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524_288, batch=1, long=True),
+}
+
+LM_SHAPES_REDUCED = {
+    "train_4k":    dict(kind="train",   seq=32,  batch=4),
+    "prefill_32k": dict(kind="prefill", seq=64,  batch=2),
+    "decode_32k":  dict(kind="decode",  seq=64,  batch=2),
+    "long_500k":   dict(kind="decode",  seq=128, batch=1, long=True),
+}
+
+
+def _lm_cache_abstract(cfg, batch: int, seq: int):
+    from repro.models.transformer import make_cache
+    return jax.tree_util.tree_map(
+        lambda x: SDS(x.shape, x.dtype),
+        jax.eval_shape(lambda: make_cache(cfg, batch, seq)))
+
+
+def _lm_cache_specs(cfg, rules: ShardRules, *, batch: int, shard_seq: bool):
+    """KV-cache sharding for decode.
+
+    The cache SEQ dim shards over `model` (flash-decoding style): uniformly
+    divisible (32768 % 16 == 0) regardless of Hkv — head-sharding breaks for
+    GQA archs with Hkv < mesh (starcoder2 Hkv=2) — and the partial-softmax
+    combine GSPMD inserts is the decode-attention pattern we want.
+    long-decode (batch=1): batch replicated, seq over (data, model)."""
+    if shard_seq:                       # long_500k: batch=1
+        bax, seq_ax = None, ("data", "model")
+    else:
+        b = rules.batch_spec()
+        bax = b[0] if len(b) else None
+        seq_ax = "model"
+    if cfg.mla is not None:
+        return {"ckv": P(None, bax, seq_ax, None),
+                "krope": P(None, bax, seq_ax, None)}
+    return {"k": P(None, bax, None, seq_ax, None),
+            "v": P(None, bax, None, seq_ax, None)}
+
+
+def lm_cells(arch: str, cfg, rules: ShardRules, *, reduced: bool = False,
+             opt: OptConfig | None = None) -> dict[str, CellSpec]:
+    from repro.models.transformer import (lm_decode, lm_loss, lm_param_defs,
+                                          lm_prefill)
+
+    shapes = LM_SHAPES_REDUCED if reduced else LM_SHAPES
+    defs = lm_param_defs(cfg)
+    pspecs = param_specs(defs, rules)
+    opt = opt or OptConfig()
+    cells: dict[str, CellSpec] = {}
+
+    for sname, sh in shapes.items():
+        B, S = sh["batch"], sh["seq"]
+        kind = sh["kind"]
+        if sh.get("long") and cfg.window is None:
+            cells[sname] = CellSpec(
+                arch, sname, kind, None, (), (), skip=True,
+                note=("N/A: pure full-attention arch — 512k-token KV cache "
+                      "is architecturally unservable (DESIGN.md "
+                      "§Arch-applicability); sub-quadratic attention "
+                      "required. Runs for SWA archs."))
+            continue
+
+        if kind == "train":
+            loss = functools.partial(_lm_loss_adapter, cfg=cfg)
+            fn = make_train_step(loss, opt)
+            args = (abstract_train_state(defs),
+                    {"tokens": SDS((B, S), jnp.int32),
+                     "labels": SDS((B, S), jnp.int32)})
+            specs = (train_state_specs(defs, rules),
+                     {"tokens": rules.batch_spec(None),
+                      "labels": rules.batch_spec(None)})
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs,
+                                    donate=(0,))
+        elif kind == "prefill":
+            fn = functools.partial(_lm_prefill_adapter, cfg=cfg, max_len=S)
+            args = (abstract_params(defs), SDS((B, S), jnp.int32))
+            specs = (pspecs, rules.batch_spec(None))
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs)
+        elif kind == "decode":
+            shard_seq = bool(sh.get("long"))
+            cache = _lm_cache_abstract(cfg, B, S)
+            fn = functools.partial(_lm_decode_adapter, cfg=cfg)
+            args = (abstract_params(defs), cache,
+                    SDS((B, 1), jnp.int32), SDS((), jnp.int32))
+            specs = (pspecs,
+                     _lm_cache_specs(cfg, rules, batch=B, shard_seq=shard_seq),
+                     P() if shard_seq else rules.batch_spec(None), P())
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs,
+                                    donate=(1,))
+    return cells
+
+
+def _lm_loss_adapter(params, batch, *, cfg):
+    from repro.models.transformer import lm_loss
+    return lm_loss(params, batch, cfg)
+
+
+def _lm_prefill_adapter(params, tokens, *, cfg, max_len):
+    from repro.models.transformer import lm_prefill
+    return lm_prefill(params, tokens, cfg, max_len=max_len)
+
+
+def _lm_decode_adapter(params, cache, token, pos, *, cfg):
+    from repro.models.transformer import lm_decode
+    return lm_decode(params, cache, token, pos, cfg)
+
+
+# ================================ GNN family ====================================
+
+# minibatch_lg: 1024 seeds, fanout 15 then 10 → padded sampled subgraph.
+_MB_NODES = 1024 + 1024 * 15 + 1024 * 15 * 10     # 169,984
+_MB_EDGES = 1024 * 15 + 1024 * 15 * 10            # 168,960
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2_708, n_edges=10_556, d_feat=1_433),
+    "minibatch_lg":  dict(n_nodes=_MB_NODES, n_edges=_MB_EDGES, d_feat=602,
+                          sampled=True),
+    "ogb_products":  dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                          big=True),
+    "molecule":      dict(n_nodes=30, n_edges=64, d_feat=32, batch=128),
+}
+
+GNN_SHAPES_REDUCED = {
+    "full_graph_sm": dict(n_nodes=40, n_edges=120, d_feat=12),
+    "minibatch_lg":  dict(n_nodes=8 + 8 * 3 + 8 * 6, n_edges=8 * 3 + 24 * 2,
+                          d_feat=10, sampled=True),
+    "ogb_products":  dict(n_nodes=64, n_edges=256, d_feat=8, big=True),
+    "molecule":      dict(n_nodes=10, n_edges=20, d_feat=6, batch=4),
+}
+
+
+def gnn_cells(arch: str, cfg, rules: ShardRules, *, reduced: bool = False,
+              opt: OptConfig | None = None) -> dict[str, CellSpec]:
+    from repro.models.gnn import gnn_loss, gnn_param_defs
+
+    shapes = GNN_SHAPES_REDUCED if reduced else GNN_SHAPES
+    defs = gnn_param_defs(cfg)
+    opt = opt or OptConfig()
+    cells = {}
+
+    def _pad(x: int, m: int = 256) -> int:
+        return -(-x // m) * m
+
+    for sname, sh in shapes.items():
+        N, E, F = sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+        if not reduced and not sh.get("batch"):
+            # pad sharded dims to the production-mesh multiple (dump-edge /
+            # dump-node convention: padding is semantically a no-op)
+            E = _pad(E)
+            if sh.get("big"):
+                N = _pad(N)
+        G = sh.get("batch")
+        loss = functools.partial(_gnn_loss_adapter, cfg=cfg)
+        fn = make_train_step(loss, opt)
+        if G:                                    # batched small graphs
+            batch = {
+                "feat": SDS((G, N, F), jnp.float32),
+                "src": SDS((G, E), jnp.int32),
+                "dst": SDS((G, E), jnp.int32),
+                "target": SDS((G, N, cfg.d_out), jnp.float32),
+                "node_mask": SDS((G, N), jnp.float32),
+            }
+            bspec = {
+                "feat": rules.batch_spec(None, None),
+                "src": rules.batch_spec(None),
+                "dst": rules.batch_spec(None),
+                "target": rules.batch_spec(None, None),
+                "node_mask": rules.batch_spec(None),
+            }
+        else:
+            # edges shard over (data [, model]); features/targets of big
+            # graphs shard rows over data; small graphs replicate.
+            big = bool(sh.get("big"))
+            edge_spec = P(("data", "model")) if big else P("data")
+            row = P("data", None) if big else P(None, None)
+            batch = {
+                "feat": SDS((N, F), jnp.float32),
+                "src": SDS((E,), jnp.int32),
+                "dst": SDS((E,), jnp.int32),
+                "target": SDS((N, cfg.d_out), jnp.float32),
+                "node_mask": SDS((N,), jnp.float32),
+            }
+            bspec = {
+                "feat": row, "src": edge_spec, "dst": edge_spec,
+                "target": row,
+                "node_mask": P("data") if big else P(None),
+            }
+        args = (abstract_train_state(defs), batch)
+        specs = (train_state_specs(defs, rules), bspec)
+        cells[sname] = CellSpec(arch, sname, "train", fn, args, specs,
+                                donate=(0,))
+    return cells
+
+
+def _gnn_loss_adapter(params, batch, *, cfg):
+    from repro.models.gnn import gnn_loss
+    return gnn_loss(params, batch, cfg)
+
+
+# =============================== recsys family ===================================
+
+RECSYS_SHAPES = {
+    "train_batch":    dict(kind="train", batch=65_536),
+    "serve_p99":      dict(kind="serve", batch=512),
+    "serve_bulk":     dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, cands=1_000_000),
+}
+
+RECSYS_SHAPES_REDUCED = {
+    "train_batch":    dict(kind="train", batch=64),
+    "serve_p99":      dict(kind="serve", batch=8),
+    "serve_bulk":     dict(kind="serve", batch=128),
+    "retrieval_cand": dict(kind="retrieval", batch=1, cands=512),
+}
+
+_N_NEG = 1024        # bert4rec sampled-softmax negatives
+_N_MASK = 32         # masked positions scored per sequence
+
+
+def _recsys_batch(cfg, B: int, *, train: bool, reduced: bool):
+    """(abstract batch, batch specs) for one arch kind."""
+    i32, f32 = jnp.int32, jnp.float32
+    if cfg.kind == "fm":
+        b = {"sparse": SDS((B, cfg.n_sparse), i32)}
+        s = {"sparse": "b1"}
+    elif cfg.kind == "dcn":
+        b = {"dense": SDS((B, cfg.n_dense), f32),
+             "sparse": SDS((B, cfg.n_sparse), i32)}
+        s = {"dense": "b1", "sparse": "b1"}
+    elif cfg.kind == "bst":
+        b = {"seq": SDS((B, cfg.seq_len), i32), "target": SDS((B,), i32)}
+        s = {"seq": "b1", "target": "b0"}
+    elif cfg.kind == "bert4rec":
+        b = {"seq": SDS((B, cfg.seq_len), i32)}
+        s = {"seq": "b1"}
+        if train:
+            n_mask = min(_N_MASK, cfg.seq_len)
+            n_neg = min(_N_NEG, cfg.n_items)
+            b.update({"mask_pos": SDS((B, n_mask), i32),
+                      "labels": SDS((B, n_mask), i32),
+                      "neg_ids": SDS((n_neg,), i32)})
+            s.update({"mask_pos": "b1", "labels": "b1", "neg_ids": "r"})
+    else:
+        raise ValueError(cfg.kind)
+    if train and cfg.kind != "bert4rec":
+        b["label"] = SDS((B,), f32)
+        s["label"] = "b0"
+    return b, s
+
+
+def _resolve_batch_specs(tags: dict, rules: ShardRules):
+    out = {}
+    for k, t in tags.items():
+        if t == "b0":
+            out[k] = rules.batch_spec()
+        elif t == "b1":
+            out[k] = rules.batch_spec(None)
+        else:
+            out[k] = P(*([None] * 1))
+    return out
+
+
+def recsys_cells(arch: str, cfg, rules: ShardRules, *, reduced: bool = False,
+                 opt: OptConfig | None = None) -> dict[str, CellSpec]:
+    from repro.models.recsys import recsys_param_defs
+
+    shapes = RECSYS_SHAPES_REDUCED if reduced else RECSYS_SHAPES
+    defs = recsys_param_defs(cfg)
+    pspecs = param_specs(defs, rules)
+    opt = opt or OptConfig()
+    cells = {}
+    for sname, sh in shapes.items():
+        B = sh["batch"]
+        kind = sh["kind"]
+        if kind == "train":
+            batch, tags = _recsys_batch(cfg, B, train=True, reduced=reduced)
+            fn = make_train_step(
+                functools.partial(_recsys_loss_adapter, cfg=cfg), opt)
+            args = (abstract_train_state(defs), batch)
+            specs = (train_state_specs(defs, rules),
+                     _resolve_batch_specs(tags, rules))
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs,
+                                    donate=(0,))
+        elif kind == "serve":
+            batch, tags = _recsys_batch(cfg, B, train=False, reduced=reduced)
+            fn = functools.partial(_recsys_serve_adapter, cfg=cfg)
+            args = (abstract_params(defs), batch)
+            specs = (pspecs, _resolve_batch_specs(tags, rules))
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs)
+        elif kind == "retrieval":
+            batch, tags = _recsys_batch(cfg, B, train=False, reduced=reduced)
+            D = cfg.embed_dim
+            cand = SDS((sh["cands"], D), jnp.float32)
+            fn = functools.partial(_recsys_retrieval_adapter, cfg=cfg)
+            args = (abstract_params(defs), batch, cand)
+            specs = (pspecs, _resolve_batch_specs_repl(tags), P("data", None))
+            cells[sname] = CellSpec(arch, sname, kind, fn, args, specs)
+    return cells
+
+
+def _resolve_batch_specs_repl(tags: dict):
+    return {k: P() if t == "b0" else P(None, None) if t == "b1" else P(None)
+            for k, t in tags.items()}
+
+
+def _recsys_loss_adapter(params, batch, *, cfg):
+    from repro.models.recsys import recsys_loss
+    return recsys_loss(params, batch, cfg)
+
+
+def _recsys_serve_adapter(params, batch, *, cfg):
+    from repro.models.recsys import bert4rec_serve_topk, recsys_forward
+    if cfg.kind == "bert4rec":
+        return bert4rec_serve_topk(params, batch["seq"], cfg,
+                                   k=min(100, cfg.n_items))
+    return recsys_forward(params, batch, cfg)
+
+
+def _recsys_retrieval_adapter(params, batch, cand, *, cfg):
+    from repro.models.recsys import retrieval_topk
+    return retrieval_topk(params, batch, cfg, cand, k=min(100, cand.shape[0]))

@@ -1,0 +1,47 @@
+"""graphcast [arXiv:2212.12794]: encoder-processor-decoder mesh GNN,
+16 processor layers, d_hidden=512, sum aggregation, n_vars=227.
+
+mesh_refinement=6 parameterizes GraphCast's icosahedral mesh construction;
+the assigned shapes supply generic graph benchmarks instead, so the
+encode-process-decode stack (the compute core) runs on the given edge lists
+(DESIGN.md §Arch-applicability)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.cells import GNN_SHAPES, GNN_SHAPES_REDUCED, gnn_cells
+from repro.models.gnn import GNNConfig
+from repro.parallel.sharding import gnn_rules
+
+ARCH_ID = "graphcast"
+FAMILY = "gnn"
+
+
+def full_config(d_feat: int = 100, **over) -> GNNConfig:
+    kw = dict(name=ARCH_ID, d_feat=d_feat, d_out=227, n_layers=16,
+              d_hidden=512, aggregator="sum", mesh_refinement=6,
+              dtype=jnp.float32)
+    kw.update(over)
+    return GNNConfig(**kw)
+
+
+def reduced_config(d_feat: int = 12) -> GNNConfig:
+    return GNNConfig(name=ARCH_ID + "-reduced", d_feat=d_feat, d_out=8,
+                     n_layers=2, d_hidden=32, dtype=jnp.float32)
+
+
+def rules(**kw):
+    return gnn_rules()
+
+
+def cells(rules_, *, reduced: bool = False):
+    # one config per shape (each graph regime has its own feature dim)
+    shapes = GNN_SHAPES_REDUCED if reduced else GNN_SHAPES
+    out = {}
+    for sname, sh in shapes.items():
+        cfg = (reduced_config(d_feat=sh["d_feat"]) if reduced
+               else full_config(d_feat=sh["d_feat"], unroll=True))
+        cell = gnn_cells(ARCH_ID, cfg, rules_, reduced=reduced)[sname]
+        out[sname] = cell
+    return out

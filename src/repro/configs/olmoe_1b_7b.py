@@ -1,0 +1,51 @@
+"""olmoe-1b-7b [arXiv:2409.02060]: 16L d2048 16H (kv=16) MoE 64e top-8,
+d_ff(expert)=1024, vocab 50304. ~6.9B total / ~1.3B active params."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.cells import lm_cells
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+from repro.parallel.sharding import lm_rules
+
+ARCH_ID = "olmoe-1b-7b"
+FAMILY = "lm"
+
+
+def full_config(**over) -> LMConfig:
+    kw = dict(
+        name=ARCH_ID, n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1024, vocab=50304,
+        moe=MoEConfig(n_experts=64, top_k=8, d_model=2048, d_ff=1024,
+                      capacity_factor=1.25),
+        # Shipped dispatch = explicit expert parallelism: the GSPMD
+        # global-scatter baseline materializes 304 GiB/device temp and
+        # 1.1e12 B/device collectives at train_4k (EXPERIMENTS.md §Perf B).
+        moe_impl="ep",
+        dtype=jnp.bfloat16,
+    )
+    kw.update(over)
+    return LMConfig(**kw)
+
+
+def reduced_config() -> LMConfig:
+    return LMConfig(
+        name=ARCH_ID + "-reduced", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=32, vocab=512,
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=32,
+                      capacity_factor=2.0),
+        dtype=jnp.float32,
+    )
+
+
+def rules(**kw):
+    # 6.9B params × (2B + 8B moments) replicated ≫ 16 GB HBM → FSDP
+    return lm_rules(fsdp=True)
+
+
+def cells(rules_, *, reduced: bool = False):
+    cfg = reduced_config() if reduced else full_config(
+        ep_batch_axes=tuple(rules_.batch), unroll=True)
+    return lm_cells(ARCH_ID, cfg, rules_, reduced=reduced)

@@ -1,0 +1,34 @@
+"""Core: the paper's contribution — serverless search/serving substrate.
+
+State lives in :mod:`repro.core.object_store`; the Lucene ``Directory`` seam
+is :mod:`repro.core.directory`; warm/cold caching in :mod:`repro.core.cache`;
+the FaaS fleet in :mod:`repro.core.runtime`; REST fronting in
+:mod:`repro.core.gateway`; the Lambda cost model in :mod:`repro.core.cost`;
+document partitioning + top-k merge in :mod:`repro.core.partition`; batch
+index refresh in :mod:`repro.core.refresh`.
+"""
+
+from repro.core.cache import HydrationCache, pytree_nbytes
+from repro.core.cost import CostLedger, Invocation, paper_headline_cost
+from repro.core.directory import Directory, IndexInput, RamDirectory, StoreDirectory
+from repro.core.gateway import Gateway, Response
+from repro.core.kvstore import KVStore
+from repro.core.object_store import (
+    FilesystemBackend,
+    MemoryBackend,
+    NetworkModel,
+    NoSuchKey,
+    ObjectStore,
+)
+from repro.core.partition import ScatterGather, merge_topk, shard_topk_merge
+from repro.core.refresh import AssetCatalog, refresh_fleet
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+
+__all__ = [
+    "AssetCatalog", "CostLedger", "Directory", "FaaSRuntime",
+    "FilesystemBackend", "Gateway", "HydrationCache", "IndexInput",
+    "Invocation", "KVStore", "MemoryBackend", "NetworkModel", "NoSuchKey",
+    "ObjectStore", "RamDirectory", "Response", "RuntimeConfig",
+    "ScatterGather", "StoreDirectory", "merge_topk", "paper_headline_cost",
+    "pytree_nbytes", "refresh_fleet", "shard_topk_merge",
+]

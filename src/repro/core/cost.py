@@ -1,0 +1,113 @@
+"""Lambda cost model — paper §2's economics, reproduced exactly.
+
+"Lambda invocation is charged in terms of memory and time; at the time of
+writing, each GB/s costs $0.000016667. ... let's assume a (generous) instance
+with 2GB memory running for 300ms; this translates into 100,000 queries per
+US dollar. The beauty of the serverless cost model is that query load is
+entirely fungible — 10 QPS for 10,000 seconds or 100 QPS for 1,000 seconds
+costs exactly the same."
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+GB = 1024 ** 3
+
+# AWS Lambda pricing at the time of the paper's writing.
+PRICE_PER_GB_S = 0.000016667
+PRICE_PER_REQUEST = 0.0000002   # $0.20 / 1M requests (ignored by the paper's
+                                # round numbers; tracked separately here)
+LAMBDA_BILLING_QUANTUM_S = 0.001  # post-2020 1 ms billing granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class Invocation:
+    memory_bytes: int
+    duration_s: float
+    cold_start: bool = False
+
+
+@dataclasses.dataclass
+class CostLedger:
+    """Accumulates per-invocation GB·s charges."""
+
+    gb_seconds: float = 0.0
+    invocations: int = 0
+    cold_starts: int = 0
+    duration_s: float = 0.0
+
+    def charge(self, inv: Invocation) -> float:
+        quantum = LAMBDA_BILLING_QUANTUM_S
+        billed_s = max(quantum,
+                       -(-inv.duration_s // quantum) * quantum)  # ceil to quantum
+        gbs = (inv.memory_bytes / GB) * billed_s
+        self.gb_seconds += gbs
+        self.invocations += 1
+        self.cold_starts += int(inv.cold_start)
+        self.duration_s += inv.duration_s
+        return gbs * PRICE_PER_GB_S
+
+    @property
+    def compute_dollars(self) -> float:
+        return self.gb_seconds * PRICE_PER_GB_S
+
+    @property
+    def request_dollars(self) -> float:
+        return self.invocations * PRICE_PER_REQUEST
+
+    @property
+    def total_dollars(self) -> float:
+        return self.compute_dollars + self.request_dollars
+
+    def queries_per_dollar(self) -> float:
+        if self.total_dollars == 0:
+            return float("inf")
+        return self.invocations / self.total_dollars
+
+
+def paper_headline_cost(memory_gb: float = 2.0, duration_s: float = 0.3) -> float:
+    """The paper's round-number calculation: queries per dollar for a 2GB
+    instance running 300 ms (compute charge only, as the paper does)."""
+    dollars_per_query = memory_gb * duration_s * PRICE_PER_GB_S
+    return 1.0 / dollars_per_query
+
+
+def fungibility_check(qps_a: float, secs_a: float, qps_b: float, secs_b: float,
+                      memory_gb: float = 2.0, duration_s: float = 0.3) -> tuple[float, float]:
+    """Cost of two load shapes with equal total queries — they must match
+    (paper: 10 QPS × 10,000 s == 100 QPS × 1,000 s)."""
+    cost = lambda qps, secs: qps * secs * memory_gb * duration_s * PRICE_PER_GB_S
+    return cost(qps_a, secs_a), cost(qps_b, secs_b)
+
+
+# -- TPU-side serving-cost adaptation ---------------------------------------
+#
+# The same fungible per-invocation accounting applied to TPU partitions: a
+# "serverless TPU instance" is billed chip-seconds; the ledger form is
+# identical, only the unit price changes. This lets benchmarks compare the
+# paper's Lambda economics with a TPU-v5e serving deployment.
+
+TPU_V5E_DOLLARS_PER_CHIP_HOUR = 1.2  # on-demand list price, order of magnitude
+
+
+@dataclasses.dataclass
+class TPUCostLedger:
+    chip_seconds: float = 0.0
+    invocations: int = 0
+
+    def charge(self, n_chips: int, duration_s: float) -> float:
+        cs = n_chips * duration_s
+        self.chip_seconds += cs
+        self.invocations += 1
+        return cs / 3600.0 * TPU_V5E_DOLLARS_PER_CHIP_HOUR
+
+    @property
+    def total_dollars(self) -> float:
+        return self.chip_seconds / 3600.0 * TPU_V5E_DOLLARS_PER_CHIP_HOUR
+
+    def queries_per_dollar(self) -> float:
+        if self.total_dollars == 0:
+            return float("inf")
+        return self.invocations / self.total_dollars

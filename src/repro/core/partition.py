@@ -1,0 +1,120 @@
+"""Document partitioning + global top-k merge (paper §3's scaling path).
+
+"This barrier to scalability ... can be straightforwardly solved by standard
+document partitioning practices, where separate Lambda instances are assigned
+to different partitions of the document collection."
+
+Two realizations, same math:
+
+* **Mesh-level** (`partitioned_topk`, `shard_topk_merge`): shards of the
+  candidate/document axis live on different devices along a mesh axis; each
+  device computes its local top-k; the k·P survivors are all-gathered and
+  reduced to the global top-k. k ≪ N/P makes the collective tiny — this is
+  why partition-then-merge is the right TPU mapping of the paper's design.
+
+* **Fleet-level** (`ScatterGather`): one FaaS function per partition; the
+  coordinator fans out a query to every partition's function and merges the
+  per-partition hits. Latency = max over partitions (+merge), i.e. the
+  straggler profile the runtime's hedging targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def local_topk(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k of (scores, ids) along the last axis."""
+    v, idx = jax.lax.top_k(scores, k)
+    return v, jnp.take_along_axis(ids, idx, axis=-1)
+
+
+def merge_topk(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Merge candidate sets along the last axis into top-k (ties → lower id
+    wins is NOT guaranteed; scores ordering only, like Lucene's by-score)."""
+    return local_topk(scores, ids, k)
+
+
+def shard_topk_merge(scores: jax.Array, ids: jax.Array, k: int, axis_name: str):
+    """Inside shard_map: local top-k, all-gather survivors, global top-k.
+
+    scores/ids: (..., n_local). Returns (..., k) replicated across axis_name.
+    """
+    lv, li = local_topk(scores, ids, k)
+    gv = jax.lax.all_gather(lv, axis_name, axis=-1, tiled=True)   # (..., k*P)
+    gi = jax.lax.all_gather(li, axis_name, axis=-1, tiled=True)
+    return merge_topk(gv, gi, k)
+
+
+def partitioned_topk(
+    score_fn: Callable[..., jax.Array],
+    mesh: jax.sharding.Mesh,
+    axis_name: str,
+    k: int,
+    *,
+    in_specs: Any,
+    query_spec: Any = None,
+) -> Callable[..., tuple[jax.Array, jax.Array]]:
+    """Build a shard_map'd global-top-k scorer.
+
+    ``score_fn(query, *state_shards) -> (..., n_local) scores`` runs per
+    partition; doc ids are reconstructed as partition-local offsets shifted
+    by the partition index so returned ids are global.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def per_shard(query, *state):
+        scores = score_fn(query, *state)
+        n_local = scores.shape[-1]
+        p = jax.lax.axis_index(axis_name)
+        base = (p * n_local).astype(jnp.int32)
+        ids = base + jnp.arange(n_local, dtype=jnp.int32)
+        ids = jnp.broadcast_to(ids, scores.shape)
+        return shard_topk_merge(scores, ids, k, axis_name)
+
+    qspec = query_spec if query_spec is not None else P()
+    return shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(qspec,) + tuple(in_specs),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+
+# -- fleet-level scatter/gather ------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionHit:
+    doc_id: int
+    score: float
+    partition: int
+
+
+class ScatterGather:
+    """Fan a query out to one FaaS function per partition and merge hits."""
+
+    def __init__(self, runtime, fn_names: Sequence[str]) -> None:
+        self.runtime = runtime
+        self.fn_names = list(fn_names)
+
+    def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
+        all_hits: list[PartitionHit] = []
+        lat = 0.0
+        records = []
+        for p, fn in enumerate(self.fn_names):
+            # partitions execute concurrently on separate instances; latency
+            # is the max, not the sum (scatter-gather semantics)
+            result, rec = self.runtime.invoke(fn, payload, t_arrival=t_arrival)
+            records.append(rec)
+            lat = max(lat, rec.latency_s)
+            for doc_id, score in zip(result["ids"], result["scores"]):
+                all_hits.append(PartitionHit(int(doc_id), float(score), p))
+        all_hits.sort(key=lambda h: -h.score)
+        return all_hits[:k], lat, records

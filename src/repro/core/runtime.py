@@ -1,0 +1,244 @@
+"""FaaS runtime simulator — the Lambda execution substrate of the paper.
+
+Models what AWS does "behind the scenes" (§2): provisioning containers,
+scaling the fleet up/down with load, load-balancing, and the cold/warm
+distinction. One request occupies one instance for its duration (Lambda's
+concurrency = instance model); a request that finds no idle instance forces a
+*cold start*: container provision + asset hydration, both charged to that
+request's latency.
+
+The simulator runs on a virtual clock (simulated seconds) so behaviour is
+deterministic and fast; actual compute time for a request is supplied by the
+handler (measured wall time of the jitted scoring fn, or a model).
+
+Fault tolerance: instances can be killed (failure injection); in-flight
+requests are retried on another instance. Straggler mitigation: requests
+whose execution exceeds ``hedge_after_s`` are duplicated ("backup requests",
+Dean's tail-at-scale trick) and the earlier completion wins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+from typing import Any, Callable
+
+from repro.core.cache import HydrationCache
+from repro.core.cost import CostLedger, Invocation
+
+
+class RuntimeError_(Exception):
+    pass
+
+
+# A handler receives (instance_cache, payload) and returns
+# (result, exec_seconds). exec_seconds is the simulated compute time for the
+# request *excluding* hydration (the cache accounts hydration separately).
+Handler = Callable[[HydrationCache, Any], tuple[Any, float]]
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    memory_bytes: int = 2 << 30          # the paper's "generous 2GB instance"
+    provision_s: float = 0.150           # container cold-boot (JVM/runtime init)
+    idle_timeout_s: float = 600.0        # AWS reaps idle containers ~5-15 min
+    max_instances: int = 1000            # account concurrency limit
+    hedge_after_s: float | None = None   # straggler mitigation threshold
+    failure_rate: float = 0.0            # per-invocation instance-death prob
+    max_retries: int = 2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    fn: str
+    t_arrival: float
+    t_done: float
+    latency_s: float
+    exec_s: float
+    hydrate_s: float
+    cold: bool
+    instance_id: int
+    retries: int = 0
+    hedged: bool = False
+
+    @property
+    def overhead_s(self) -> float:
+        return self.latency_s - self.exec_s
+
+
+class Instance:
+    _ids = itertools.count()
+
+    def __init__(self, memory_bytes: int, now: float) -> None:
+        self.id = next(Instance._ids)
+        self.cache = HydrationCache(memory_bytes)
+        self.busy_until = now
+        self.last_used = now
+        self.born = now
+        self.invocations = 0
+        self.alive = True
+
+    def is_warm_for(self, asset_key: tuple[str, str]) -> bool:
+        return asset_key in self.cache
+
+
+class FaaSRuntime:
+    """The fleet. ``invoke`` is the Lambda entry point."""
+
+    def __init__(self, config: RuntimeConfig | None = None) -> None:
+        self.config = config if config is not None else RuntimeConfig()
+        self._handlers: dict[str, Handler] = {}
+        self._instances: list[Instance] = []
+        self._rng = random.Random(self.config.seed)
+        self.ledger = CostLedger()
+        self.records: list[InvocationRecord] = []
+        self.clock = 0.0
+
+    # -- registration ---------------------------------------------------------
+
+    def register(self, fn_name: str, handler: Handler) -> None:
+        self._handlers[fn_name] = handler
+
+    # -- fleet management (what AWS does behind the scenes) --------------------
+
+    def _reap_idle(self, now: float) -> None:
+        cfg = self.config
+        self._instances = [
+            i for i in self._instances
+            if i.alive and (now - i.last_used) <= cfg.idle_timeout_s
+        ]
+
+    def _acquire(self, now: float) -> tuple[Instance, bool]:
+        """Find an idle warm instance, else provision a cold one."""
+        self._reap_idle(now)
+        idle = [i for i in self._instances if i.busy_until <= now]
+        if idle:
+            # prefer the most-recently-used (keeps the warm set small — this
+            # is AWS's observed bin-packing behaviour, and maximizes warmth)
+            inst = max(idle, key=lambda i: i.last_used)
+            return inst, False
+        if len(self._instances) >= self.config.max_instances:
+            # throttled: wait for the earliest-free instance (429 + retry
+            # in real Lambda; modeled as queueing delay)
+            inst = min(self._instances, key=lambda i: i.busy_until)
+            return inst, False
+        inst = Instance(self.config.memory_bytes, now)
+        self._instances.append(inst)
+        return inst, True
+
+    def kill_instance(self, instance_id: int | None = None) -> bool:
+        """Failure injection: kill one instance (random if unspecified)."""
+        live = [i for i in self._instances if i.alive]
+        if not live:
+            return False
+        victim = None
+        if instance_id is None:
+            victim = self._rng.choice(live)
+        else:
+            for i in live:
+                if i.id == instance_id:
+                    victim = i
+        if victim is None:
+            return False
+        victim.alive = False
+        self._instances.remove(victim)
+        return True
+
+    # -- invocation -------------------------------------------------------------
+
+    def invoke(self, fn: str, payload: Any, *, t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
+        if fn not in self._handlers:
+            raise RuntimeError_(f"no function {fn!r} registered")
+        now = self.clock if t_arrival is None else max(t_arrival, 0.0)
+        self.clock = max(self.clock, now)
+
+        attempt = 0
+        while True:
+            try:
+                return self._invoke_once(fn, payload, now, attempt)
+            except _InstanceDied:
+                attempt += 1
+                if attempt > self.config.max_retries:
+                    raise RuntimeError_(f"{fn}: instance died {attempt} times") from None
+                # retry immediately on another instance (client-side retry)
+
+    def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int):
+        cfg = self.config
+        inst, fresh = self._acquire(now)
+        queue_wait = max(0.0, inst.busy_until - now)
+        t_start = now + queue_wait
+        cold_boot = cfg.provision_s if fresh else 0.0
+
+        if cfg.failure_rate and self._rng.random() < cfg.failure_rate:
+            inst.alive = False
+            if inst in self._instances:
+                self._instances.remove(inst)
+            raise _InstanceDied()
+
+        hyd_before = inst.cache.stats.hydrate_seconds
+        result, exec_s = self._handlers[fn](inst.cache, payload)
+        hydrate_s = inst.cache.stats.hydrate_seconds - hyd_before
+        cold = fresh or hydrate_s > 0
+
+        duration = cold_boot + hydrate_s + exec_s
+
+        # Straggler hedging: if this execution ran past the hedge threshold,
+        # fire a backup request on a second instance and take the faster.
+        hedged = False
+        if cfg.hedge_after_s is not None and exec_s > cfg.hedge_after_s:
+            inst2, fresh2 = self._acquire(t_start + cfg.hedge_after_s)
+            hyd2_before = inst2.cache.stats.hydrate_seconds
+            result2, exec2_s = self._handlers[fn](inst2.cache, payload)
+            hyd2 = inst2.cache.stats.hydrate_seconds - hyd2_before
+            dur2 = cfg.hedge_after_s + (cfg.provision_s if fresh2 else 0.0) + hyd2 + exec2_s
+            if dur2 < duration:
+                result, duration = result2, dur2
+            inst2.busy_until = t_start + dur2
+            inst2.last_used = inst2.busy_until
+            inst2.invocations += 1
+            self.ledger.charge(Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2))
+            hedged = True
+
+        inst.busy_until = t_start + duration
+        inst.last_used = inst.busy_until
+        inst.invocations += 1
+        self.clock = max(self.clock, inst.busy_until)
+
+        self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s, cold))
+        rec = InvocationRecord(
+            fn=fn, t_arrival=now, t_done=t_start + duration,
+            latency_s=queue_wait + duration, exec_s=exec_s,
+            hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
+            retries=attempt, hedged=hedged,
+        )
+        self.records.append(rec)
+        return result, rec
+
+    # -- introspection ------------------------------------------------------------
+
+    @property
+    def fleet_size(self) -> int:
+        return len(self._instances)
+
+    def latency_percentiles(self, fn: str | None = None, qs=(0.5, 0.9, 0.99)) -> dict[float, float]:
+        lats = sorted(r.latency_s for r in self.records if fn is None or r.fn == fn)
+        if not lats:
+            return {q: float("nan") for q in qs}
+        out = {}
+        for q in qs:
+            idx = min(len(lats) - 1, int(q * len(lats)))
+            out[q] = lats[idx]
+        return out
+
+    def warm_fraction(self, fn: str | None = None) -> float:
+        recs = [r for r in self.records if fn is None or r.fn == fn]
+        if not recs:
+            return 0.0
+        return sum(not r.cold for r in recs) / len(recs)
+
+
+class _InstanceDied(Exception):
+    pass

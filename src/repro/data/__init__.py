@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic corpora (search), resumable LM token streams,
+graphs + neighbor sampler (GNN), click/sequence streams (recsys)."""

@@ -1,0 +1,51 @@
+"""Synthetic corpora with Zipfian term statistics (MS MARCO stand-in).
+
+No datasets ship with this container, so benchmarks/examples generate
+corpora whose statistics mimic web passages: Zipf-distributed vocabulary,
+log-normal document lengths, queries sampled from document terms (so every
+query has matches, like MS MARCO's passage-sourced queries).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# pronounceable fake terms: cheap bijection id -> string
+_SYL = ["ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du",
+        "ka", "ke", "ki", "ko", "ku", "ma", "me", "mi", "mo", "mu",
+        "na", "ne", "ni", "no", "nu", "ra", "re", "ri", "ro", "ru",
+        "sa", "se", "si", "so", "su", "ta", "te", "ti", "to", "tu"]
+
+
+def term_string(tid: int) -> str:
+    s = []
+    tid += 1
+    while tid:
+        tid, r = divmod(tid, len(_SYL))
+        s.append(_SYL[r])
+    return "".join(s)
+
+
+def synth_corpus(n_docs: int, *, vocab: int = 5000, mean_len: int = 60,
+                 seed: int = 0, zipf_a: float = 1.3) -> list[tuple[str, str]]:
+    rng = np.random.default_rng(seed)
+    lens = np.maximum(4, rng.lognormal(np.log(mean_len), 0.4, n_docs)).astype(int)
+    docs = []
+    for i in range(n_docs):
+        tids = rng.zipf(zipf_a, lens[i]) % vocab
+        text = " ".join(term_string(int(t)) for t in tids)
+        docs.append((f"doc{i}", text))
+    return docs
+
+
+def synth_queries(docs: list[tuple[str, str]], n_queries: int, *,
+                  terms_per_query: int = 3, seed: int = 1) -> list[str]:
+    rng = np.random.default_rng(seed)
+    queries = []
+    for _ in range(n_queries):
+        _, text = docs[rng.integers(len(docs))]
+        toks = text.split()
+        take = min(terms_per_query, len(toks))
+        picks = rng.choice(len(toks), size=take, replace=False)
+        queries.append(" ".join(toks[p] for p in picks))
+    return queries

@@ -1,0 +1,121 @@
+"""Fault tolerance for the training loop: failure injection, checkpoint
+restart, elastic rescale, and straggler accounting.
+
+The serving side's fault tolerance lives in the FaaS runtime (instance
+death → retry; hedged backup requests — repro.core.runtime). This module
+covers the *training* side, which the paper's §3 batch-rebuild story feeds
+(training publishes versioned assets; serving refreshes):
+
+* ``FailureInjector`` — deterministic pseudo-random step failures
+  (preemption / device loss) for tests and drills.
+* ``run_with_restarts`` — the supervisor loop: run steps, on failure restore
+  the latest checkpoint and continue; bounded restart budget; counts
+  lost steps (the recovery-cost metric).
+* ``reshard_state`` — elastic rescale: move a state pytree onto a different
+  mesh (grown or shrunk data axis) via device_put with the new shardings.
+  Combined with CheckpointManager.restore(shardings=...) this is
+  checkpoint-free *in-flight* rescaling on a live cluster, or
+  checkpoint-based rescaling across restarts.
+* ``StragglerMonitor`` — flags steps ≥ k·median (tail-at-scale detection);
+  the mitigation at serving level is request hedging (runtime), at training
+  level the monitor drives exclusion/rescale decisions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    rate: float = 0.0               # per-step failure probability
+    seed: int = 0
+    fail_at: tuple[int, ...] = ()   # deterministic failure steps
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+        self._pending = set(self.fail_at)     # deterministic faults fire once
+
+    def check(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise InjectedFailure(f"injected failure at step {step}")
+        if self.rate and self._rng.random() < self.rate:
+            raise InjectedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class RestartStats:
+    restarts: int = 0
+    steps_lost: int = 0
+    steps_run: int = 0
+
+
+def run_with_restarts(step_fn: Callable[[Any, int], Any], init_state: Any,
+                      n_steps: int, ckpt, *,
+                      injector: FailureInjector | None = None,
+                      max_restarts: int = 10) -> tuple[Any, RestartStats]:
+    """Supervisor: run ``state = step_fn(state, step)`` for n_steps with
+    checkpoint/restart recovery. `ckpt` is a CheckpointManager."""
+    stats = RestartStats()
+    state = init_state
+    step = 0
+    last_saved = -1
+    while step < n_steps:
+        try:
+            if injector is not None:
+                injector.check(step)
+            state = step_fn(state, step)
+            stats.steps_run += 1
+            if ckpt.maybe_save(step, state):
+                last_saved = step
+            step += 1
+        except InjectedFailure:
+            stats.restarts += 1
+            if stats.restarts > max_restarts:
+                raise
+            like = jax.tree_util.tree_map(lambda x: x, state)
+            try:
+                state, restored_step = ckpt.restore(like)
+            except Exception:
+                state, restored_step = init_state, -1
+            stats.steps_lost += step - (restored_step + 1)
+            step = restored_step + 1
+    ckpt.wait()
+    return state, stats
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Elastic rescale: place every leaf onto the new mesh's shardings."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 50
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self.flagged: list[int] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        self._times.append(seconds)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        med = float(np.median(self._times))
+        slow = len(self._times) >= 5 and seconds > self.factor * med
+        if slow:
+            self.flagged.append(step)
+        return slow

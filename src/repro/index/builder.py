@@ -1,0 +1,250 @@
+"""Inverted-index builder → packed, blocked, impact-ordered arrays.
+
+Lucene stores postings as compressed, doc-ordered skip-list streams —
+pointer-chasing that the TPU's vector units cannot traverse. The TPU-native
+equivalent (DESIGN.md §2) packs each term's postings into fixed-width blocks:
+
+    term_offsets : (V+1,)      int32   block range of term t = [off[t], off[t+1])
+    block_docs   : (NB, B)     int32   doc ids, PAD = n_docs (dump slot)
+    block_tf     : (NB, B)     uint8   term frequency, clamped to 255
+    block_max    : (NB,)       float32 max BM25 impact within the block
+    doc_len      : (n_docs+1,) float32 document length (dump slot appended)
+    idf          : (V,)        float32 BM25 idf per term
+
+Blocks within a term are sorted by descending ``block_max`` (impact ordering,
+Lin & Trotman '17 — cited by the paper): truncating evaluation to the first M
+blocks of each term is the classic score-at-a-time approximation, and gives
+the fixed shapes jit needs. B = 128 matches the TPU lane width.
+
+BM25 (Lucene's variant, k1=0.9, b=0.4 Anserini defaults):
+
+    idf(t)   = ln(1 + (N - df + 0.5)/(df + 0.5))
+    score    = idf(t) * tf / (tf + k1 * (1 - b + b * dl/avgdl))
+
+(Lucene folds the (k1+1) numerator constant away since it is rank-neutral;
+we follow Lucene.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import math
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+import orjson
+
+from repro.core.directory import Directory, RamDirectory
+from repro.index.tokenizer import tokenize
+
+BLOCK = 128          # lane width
+K1_DEFAULT = 0.9     # Anserini defaults
+B_DEFAULT = 0.4
+
+
+@dataclasses.dataclass
+class IndexMeta:
+    n_docs: int
+    n_terms: int
+    n_blocks: int
+    block: int
+    avgdl: float
+    k1: float
+    b: float
+    doc_ids: list[str]          # external ids, position = internal id
+
+    def to_json(self) -> bytes:
+        return orjson.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, data: bytes) -> "IndexMeta":
+        return cls(**orjson.loads(data))
+
+
+@dataclasses.dataclass
+class PackedIndex:
+    """The hydrated, array-form index (a pytree of numpy/jax arrays)."""
+
+    meta: IndexMeta
+    vocab: dict[str, int]
+    term_offsets: np.ndarray    # (V+1,) int32
+    block_docs: np.ndarray      # (NB, B) int32
+    block_tf: np.ndarray        # (NB, B) uint8
+    block_max: np.ndarray       # (NB,) float32
+    doc_len: np.ndarray         # (n_docs+1,) float32
+    idf: np.ndarray             # (V,) float32
+
+    def term_id(self, term: str) -> int:
+        return self.vocab.get(term, -1)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in (
+            self.term_offsets, self.block_docs, self.block_tf,
+            self.block_max, self.doc_len, self.idf))
+
+
+def compute_global_stats(docs: Iterable[tuple[str, str]]) -> dict:
+    """Corpus-wide BM25 statistics for document-partitioned indexing.
+
+    Distributed IR subtlety the paper's §3 glosses over: each partition's
+    index must score with GLOBAL idf/avgdl, or the merged ranking diverges
+    from a single-index build. The offline batch indexer computes these
+    once and passes them to every partition's writer.
+    """
+    from collections import Counter
+    df: Counter = Counter()
+    total_len = 0
+    n_docs = 0
+    for _, text in docs:
+        toks = tokenize(text)
+        total_len += len(toks)
+        n_docs += 1
+        df.update(set(toks))
+    return {"n_docs": n_docs,
+            "avgdl": total_len / max(1, n_docs),
+            "df": dict(df)}
+
+
+class IndexWriter:
+    """Accumulates documents, then packs. Offline batch side of paper §3.
+
+    ``global_stats`` (from :func:`compute_global_stats`) overrides the
+    local corpus statistics — required when this writer packs one
+    partition of a document-partitioned deployment.
+    """
+
+    def __init__(self, *, k1: float = K1_DEFAULT, b: float = B_DEFAULT,
+                 block: int = BLOCK, global_stats: dict | None = None) -> None:
+        self.k1 = k1
+        self.b = b
+        self.block = block
+        self.global_stats = global_stats
+        self._postings: dict[str, dict[int, int]] = {}   # term -> {doc: tf}
+        self._doc_ids: list[str] = []
+        self._doc_len: list[int] = []
+
+    def add(self, ext_id: str, text: str) -> int:
+        doc = len(self._doc_ids)
+        self._doc_ids.append(ext_id)
+        toks = tokenize(text)
+        self._doc_len.append(len(toks))
+        for t in toks:
+            self._postings.setdefault(t, {})
+            self._postings[t][doc] = self._postings[t].get(doc, 0) + 1
+        return doc
+
+    def add_many(self, docs: Iterable[tuple[str, str]]) -> None:
+        for ext_id, text in docs:
+            self.add(ext_id, text)
+
+    # -- packing ----------------------------------------------------------------
+
+    def pack(self) -> PackedIndex:
+        n_docs = len(self._doc_ids)
+        if n_docs == 0:
+            raise ValueError("empty index")
+        terms = sorted(self._postings)
+        vocab = {t: i for i, t in enumerate(terms)}
+        V = len(terms)
+        avgdl = float(np.mean(self._doc_len)) if self._doc_len else 0.0
+        gs = self.global_stats
+        stat_docs = gs["n_docs"] if gs else n_docs
+        if gs:
+            avgdl = gs["avgdl"]
+        doc_len = np.asarray(self._doc_len + [1.0], dtype=np.float32)  # +dump
+
+        idf = np.zeros(V, dtype=np.float32)
+        blocks_docs: list[np.ndarray] = []
+        blocks_tf: list[np.ndarray] = []
+        blocks_max: list[float] = []
+        offsets = np.zeros(V + 1, dtype=np.int32)
+
+        B = self.block
+        k1, b = self.k1, self.b
+        for ti, term in enumerate(terms):
+            plist = self._postings[term]
+            local_df = len(plist)                    # postings in THIS shard
+            df = gs["df"].get(term, local_df) if gs else local_df  # global
+            idf[ti] = math.log(1.0 + (stat_docs - df + 0.5) / (df + 0.5))
+            docs = np.fromiter(plist.keys(), dtype=np.int32, count=local_df)
+            tfs = np.fromiter(plist.values(), dtype=np.int64, count=local_df)
+            # per-posting impact for ordering
+            dl = doc_len[docs]
+            imp = idf[ti] * tfs / (tfs + k1 * (1 - b + b * dl / avgdl))
+            # impact-sort postings descending, then cut into blocks: the
+            # first blocks of each term carry its highest-scoring docs.
+            order = np.argsort(-imp, kind="stable")
+            docs, tfs, imp = docs[order], tfs[order], imp[order]
+            n_blk = -(-local_df // B)
+            pad = n_blk * B - local_df
+            docs = np.concatenate([docs, np.full(pad, n_docs, np.int32)])
+            tfs = np.concatenate([np.minimum(tfs, 255).astype(np.uint8),
+                                  np.zeros(pad, np.uint8)])
+            imp = np.concatenate([imp, np.zeros(pad)])
+            for j in range(n_blk):
+                sl = slice(j * B, (j + 1) * B)
+                blocks_docs.append(docs[sl])
+                blocks_tf.append(tfs[sl])
+                blocks_max.append(float(imp[sl].max(initial=0.0)))
+            offsets[ti + 1] = offsets[ti] + n_blk
+
+        NB = len(blocks_docs)
+        meta = IndexMeta(
+            n_docs=n_docs, n_terms=V, n_blocks=NB, block=B, avgdl=avgdl,
+            k1=k1, b=b, doc_ids=self._doc_ids,
+        )
+        return PackedIndex(
+            meta=meta,
+            vocab=vocab,
+            term_offsets=offsets,
+            block_docs=np.stack(blocks_docs) if NB else np.zeros((0, B), np.int32),
+            block_tf=np.stack(blocks_tf) if NB else np.zeros((0, B), np.uint8),
+            block_max=np.asarray(blocks_max, dtype=np.float32),
+            doc_len=doc_len,
+            idf=idf,
+        )
+
+
+# -- segment (de)serialization through the Directory seam ------------------------
+
+
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _npy_load(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+SEGMENT_FILES = ("term_offsets", "block_docs", "block_tf", "block_max",
+                 "doc_len", "idf")
+
+
+def write_segment(index: PackedIndex, directory: RamDirectory | None = None) -> RamDirectory:
+    """Serialize to Directory files (then publish via AssetCatalog)."""
+    d = directory if directory is not None else RamDirectory()
+    d.write("meta.json", index.meta.to_json())
+    d.write("vocab.json", orjson.dumps(index.vocab))
+    for name in SEGMENT_FILES:
+        d.write(name + ".npy", _npy_bytes(getattr(index, name)))
+    return d
+
+
+def read_segment(directory: Directory) -> PackedIndex:
+    """Hydrate a PackedIndex through any Directory (Ram or Store-backed).
+
+    Reading through :class:`StoreDirectory` charges simulated network time to
+    the store's stats — that is the cold-start hydration cost the runtime
+    bills (paper §2 cold/warm distinction).
+    """
+    meta = IndexMeta.from_json(directory.open_input("meta.json").read_all())
+    vocab = orjson.loads(directory.open_input("vocab.json").read_all())
+    arrays = {
+        name: _npy_load(directory.open_input(name + ".npy").read_all())
+        for name in SEGMENT_FILES
+    }
+    return PackedIndex(meta=meta, vocab=vocab, **arrays)

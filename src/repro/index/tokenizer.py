@@ -1,0 +1,26 @@
+"""Minimal Lucene-style analyzer: lowercase, alnum tokenization, stopwords.
+
+Anserini's default analyzer additionally applies Porter stemming; we keep
+analysis deliberately simple (documented deviation — ranking-quality
+parity with Anserini is not a claim of this reproduction; latency/cost are).
+"""
+
+from __future__ import annotations
+
+import re
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+")
+
+# Lucene's classic English stopword set.
+STOPWORDS = frozenset(
+    "a an and are as at be but by for if in into is it no not of on or such "
+    "that the their then there these they this to was will with".split()
+)
+
+
+def tokenize(text: str, *, stopwords: frozenset[str] = STOPWORDS,
+             max_token_len: int = 64) -> list[str]:
+    return [
+        t for t in _TOKEN_RE.findall(text.lower())
+        if t not in stopwords and len(t) <= max_token_len
+    ]

@@ -1,0 +1,79 @@
+"""Pallas kernel: fused candidate scoring + streaming top-k (retrieval).
+
+The recsys ``retrieval_cand`` shape — one query against 10⁶ candidates — is
+the paper's query-evaluation problem in dense form. The fusion matters: an
+unfused pipeline writes the (N,) score vector to HBM and reads it back for
+top-k; fusing the matvec with the local top-k keeps each candidate chunk's
+scores in VMEM, so candidate embeddings are read exactly once and *nothing*
+per-candidate is ever written back (output is n_chunks·k survivors).
+
+    chunk scores (MXU):  s = C_chunk @ q        (chunk, D) × (D,)
+    local top-k  (VPU):  k rounds of max/argmax/mask
+    merge (XLA):         lax.top_k over survivors
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_CHUNK = 1024
+
+
+def _dot_topk_kernel(q_ref, c_ref, vals_ref, ids_ref, *, k: int, chunk: int,
+                     n_valid: int):
+    ci = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)                     # (1, D)
+    c = c_ref[...].astype(jnp.float32)                     # (chunk, D)
+    s = jax.lax.dot_general(c, q, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)[:, 0]
+    base = ci * chunk
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    s = jnp.where(base + idx < n_valid, s, -jnp.inf)       # mask pad rows
+
+    def body(i, carry):
+        s_cur, = carry
+        m = jnp.max(s_cur)
+        am = jnp.argmax(s_cur).astype(jnp.int32)
+        vals_ref[i] = m
+        ids_ref[i] = base + am
+        return (jnp.where(idx == am, -jnp.inf, s_cur),)
+
+    jax.lax.fori_loop(0, k, body, (s,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def dot_topk(query, cands, k: int, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = True):
+    """query (D,), cands (N,D) → (vals (k,), ids (k,) i32)."""
+    N, D = cands.shape
+    chunk = max(min(chunk, N), k)
+    pad = (-N) % chunk
+    if pad:
+        cands = jnp.pad(cands, ((0, pad), (0, 0)))
+    n_chunks = (N + pad) // chunk
+    q2 = query[None, :]
+
+    vals, ids = pl.pallas_call(
+        functools.partial(_dot_topk_kernel, k=k, chunk=chunk, n_valid=N),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+            pl.BlockSpec((chunk, D), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((k,), lambda i: (i,)),
+                   pl.BlockSpec((k,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n_chunks * k,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_chunks * k,), jnp.int32)],
+        interpret=interpret,
+    )(q2, cands)
+
+    # mask padded candidates (their score is 0·q = 0, could beat negatives)
+    valid = ids < N
+    vals = jnp.where(valid, vals, -jnp.inf)
+    mv, mi = jax.lax.top_k(vals, k)
+    return mv, ids[mi]

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container every kernel runs in ``interpret=True`` (the kernel
+body executes as traced jnp on CPU — bit-accurate semantics, no Mosaic).
+On a real TPU set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to
+lower through Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.bm25_block import bm25_block_scores as _bm25
+from repro.kernels.dot_topk import dot_topk as _dot_topk
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.topk import topk as _topk
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def bm25_block_scores(tf, dl, idf, k1, b, avgdl, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _bm25(tf, dl, idf, k1, b, avgdl, **kw)
+
+
+def topk(scores, k, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _topk(scores, k, **kw)
+
+
+def dot_topk(query, cands, k, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _dot_topk(query, cands, k, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash(q, k, v, **kw)
+
+
+def embedding_bag(table, idx, weights, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _embedding_bag(table, idx, weights, **kw)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bm25_block_scores_ref(tf, dl, idf, k1, b, avgdl):
+    """tf (T,M,B) uint8, dl (T,M,B) f32, idf (T,) f32 → impacts (T,M,B) f32."""
+    tff = tf.astype(jnp.float32)
+    denom = tff + k1 * (1.0 - b + b * dl / avgdl)
+    return idf[:, None, None] * tff / denom
+
+
+def topk_ref(scores, k):
+    """scores (N,) f32 → (vals (k,), ids (k,) i32), descending."""
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)
+
+
+def dot_topk_ref(query, cands, k):
+    """query (D,), cands (N, D) → top-k of cands @ query."""
+    scores = cands.astype(jnp.float32) @ query.astype(jnp.float32)
+    return topk_ref(scores, k)
+
+
+def embedding_bag_ref(table, idx, weights):
+    """table (V,D), idx (B,L) i32 (pad<0), weights (B,L) → (B,D) f32 sums."""
+    safe = jnp.maximum(idx, 0)
+    gathered = table[safe].astype(jnp.float32)            # (B, L, D)
+    w = jnp.where(idx >= 0, weights, 0.0).astype(jnp.float32)
+    return jnp.einsum("blD,bl->bD", gathered, w)
+
+
+def mha_attention_ref(q, k, v, *, causal=False, window=None, sm_scale=None,
+                      kv_len=None):
+    """q (B,Hq,Sq,D), k (B,Hkv,Skv,D), v (B,Hkv,Skv,Dv); Hq % Hkv == 0.
+
+    window: sliding-window size W (key j visible to query i iff
+    i - W < j <= i, positions aligned at the sequence end).
+    kv_len: number of valid kv positions (rest masked), for decode.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(D)
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    # positions: queries occupy the LAST Sq positions of the kv axis
+    qpos = jnp.arange(Sq) + (Skv - Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)   # fully-masked rows
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, Dv).astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Pallas kernel: streaming top-k over a long score vector.
+
+Phase 1 (this kernel): the score vector is tiled into VMEM-sized chunks; each
+chunk's local top-k is extracted by k rounds of (max, argmax, mask) — pure
+VPU reductions, no sort. Survivors (n_chunks × k) land in HBM.
+Phase 2 (XLA): one small ``lax.top_k`` merge over survivors.
+
+Why this shape: ``lax.top_k`` over N=8.8M scores materializes/sorts the whole
+vector in HBM; the streaming pass reads each score exactly once (memory-bound
+at HBM bandwidth, the roofline floor) and reduces the sort to k·P elements,
+P = n_chunks. Used for BM25 dense accumulation and recsys retrieval scoring.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_CHUNK = 16384    # f32 chunk = 64KB of VMEM
+
+
+def _local_topk_kernel(scores_ref, vals_ref, ids_ref, *, k: int, chunk: int):
+    ci = pl.program_id(0)
+    s = scores_ref[...]                                   # (chunk,)
+    base = ci * chunk
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+
+    def body(i, carry):
+        s_cur, = carry
+        m = jnp.max(s_cur)
+        am = jnp.argmax(s_cur).astype(jnp.int32)
+        vals_ref[i] = m
+        ids_ref[i] = base + am
+        s_cur = jnp.where(idx == am, -jnp.inf, s_cur)
+        return (s_cur,)
+
+    jax.lax.fori_loop(0, k, body, (s,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def topk(scores, k: int, *, chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """scores (N,) f32 → (vals (k,), ids (k,) i32), descending order."""
+    (N,) = scores.shape
+    chunk = max(chunk, k)   # a chunk must hold at least k survivors
+    pad = (-N) % chunk
+    if pad:
+        scores = jnp.pad(scores, (0, pad), constant_values=-jnp.inf)
+    n_chunks = (N + pad) // chunk
+
+    vals, ids = pl.pallas_call(
+        functools.partial(_local_topk_kernel, k=k, chunk=chunk),
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((k,), lambda i: (i,)),
+                   pl.BlockSpec((k,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n_chunks * k,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_chunks * k,), jnp.int32)],
+        interpret=interpret,
+    )(scores)
+
+    # phase 2: tiny merge
+    mv, mi = jax.lax.top_k(vals, k)
+    return mv, ids[mi]

@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, multi-pod dry-run, train and serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+dedicated process (python -m repro.launch.dryrun)."""

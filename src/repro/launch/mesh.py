@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benches see the 1 real CPU device.
+
+Mesh topology (TPU v5e target):
+  single pod : (data=16, model=16)            — 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips, `pod` = outer DP
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh over however many (CPU) devices exist — tests/examples."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_devices(mesh: Mesh) -> int:
+    return mesh.devices.size
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_BF16_FLOPS = 197e12        # 197 TFLOP/s bf16
+HBM_BW = 819e9                  # 819 GB/s
+ICI_BW = 50e9                   # ~50 GB/s per link (per-direction, per chip)
+HBM_PER_CHIP = 16 * 1024 ** 3   # 16 GiB

@@ -1,0 +1,126 @@
+"""Serving driver — the paper's architecture end to end (Figure 1).
+
+Builds the full serverless stack on a synthetic MS-MARCO-like corpus:
+ObjectStore (S3) ← index segments, KVStore (DynamoDB) ← raw docs,
+FaaSRuntime (Lambda fleet) + Gateway (API Gateway) → search clients.
+Replays a query load, reports the paper's numbers: end-to-end latency
+percentiles (target < 300 ms warm), cold/warm split, queries-per-dollar
+(target ~100k/$ at 2GB×300ms), and load fungibility.
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 20000 --queries 500
+    PYTHONPATH=src python -m repro.launch.serve --partitions 4   # §3 scale-out
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.cost import paper_headline_cost
+from repro.core.partition import ScatterGather
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_search_app
+
+
+def run_single(args) -> dict:
+    docs = synth_corpus(args.docs, vocab=args.vocab, seed=0)
+    queries = synth_queries(docs, args.queries, seed=1)
+    app = build_search_app(
+        docs,
+        runtime_config=RuntimeConfig(memory_bytes=args.memory_gb << 30,
+                                     hedge_after_s=args.hedge or None),
+        search_config=SearchConfig(k=args.k, use_kernel=args.kernel),
+    )
+    # Poisson arrivals at --qps
+    rng = np.random.default_rng(2)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.qps, len(queries)))
+    t0 = time.perf_counter()
+    n_hits = 0
+    for q, t in zip(queries, arrivals):
+        r = app.query(q, k=args.k, t_arrival=float(t))
+        assert r.ok, r
+        n_hits += len(r.body["ids"])
+    wall = time.perf_counter() - t0
+
+    lat = app.runtime.latency_percentiles("search")
+    ledger = app.runtime.ledger
+    out = {
+        "queries": len(queries),
+        "wall_s": round(wall, 2),
+        "latency_p50_ms": round(lat[0.5] * 1e3, 1),
+        "latency_p90_ms": round(lat[0.9] * 1e3, 1),
+        "latency_p99_ms": round(lat[0.99] * 1e3, 1),
+        "warm_fraction": round(app.runtime.warm_fraction("search"), 3),
+        "fleet_size": app.runtime.fleet_size,
+        "queries_per_dollar": round(ledger.queries_per_dollar()),
+        "paper_headline_q_per_dollar": round(paper_headline_cost()),
+        "index_bytes": sum(m.size for m in app.store.list("assets/")),
+        "avg_hits": n_hits / len(queries),
+    }
+    return out
+
+
+def run_partitioned(args) -> dict:
+    from repro.search.service import index_corpus
+    from repro.core.object_store import ObjectStore
+    from repro.core.kvstore import KVStore
+    from repro.core.gateway import Gateway
+    from repro.search.searcher import make_search_handler
+    from repro.search.distributed import partition_corpus
+
+    docs = synth_corpus(args.docs, vocab=args.vocab, seed=0)
+    queries = synth_queries(docs, args.queries, seed=1)
+    parts, per = partition_corpus(docs, args.partitions)
+
+    store = ObjectStore()
+    doc_store = KVStore()
+    runtime = FaaSRuntime(RuntimeConfig(memory_bytes=args.memory_gb << 30))
+    fns = []
+    for p, pdocs in enumerate(parts):
+        catalog = index_corpus(pdocs, store, doc_store, asset=f"index-p{p}")
+        fn = f"search-p{p}"
+        runtime.register(fn, make_search_handler(
+            catalog, doc_store, f"index-p{p}", SearchConfig(k=args.k)))
+        fns.append(fn)
+    sg = ScatterGather(runtime, fns)
+
+    lats = []
+    for q in queries:
+        hits, lat, _ = sg.search({"q": q, "k": args.k}, args.k)
+        lats.append(lat)
+    lats.sort()
+    return {
+        "partitions": args.partitions,
+        "queries": len(queries),
+        "latency_p50_ms": round(lats[len(lats) // 2] * 1e3, 1),
+        "latency_p99_ms": round(lats[int(len(lats) * 0.99)] * 1e3, 1),
+        "queries_per_dollar": round(runtime.ledger.queries_per_dollar()),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--queries", type=int, default=500)
+    ap.add_argument("--vocab", type=int, default=20_000)
+    ap.add_argument("--qps", type=float, default=20.0)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--memory-gb", type=int, default=2)
+    ap.add_argument("--partitions", type=int, default=0)
+    ap.add_argument("--hedge", type=float, default=0.0)
+    ap.add_argument("--kernel", action="store_true",
+                    help="use the Pallas BM25 kernel (interpret on CPU)")
+    args = ap.parse_args()
+
+    out = run_partitioned(args) if args.partitions else run_single(args)
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""Model zoo: one LM transformer definition (GQA/SWA/MoE/MLA), GraphCast-
+style GNN, and four recsys architectures — all declared via ParamDef trees
+with logical sharding axes (repro.models.common)."""
+
+from repro.models.common import (ParamDef, abstract_params, count_params,
+                                 init_params)
+from repro.models.transformer import LMConfig, MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+
+__all__ = ["ParamDef", "abstract_params", "count_params", "init_params",
+           "LMConfig", "MLAConfig", "MoEConfig", "GNNConfig", "RecsysConfig"]

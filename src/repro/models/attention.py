@@ -1,0 +1,87 @@
+"""Attention implementations: chunked-reference (pure JAX) and Pallas.
+
+``chunked_attention`` is the default everywhere: a q-block ``lax.scan`` with
+online softmax — O(bq·Skv) peak score memory instead of O(Sq·Skv), lowers on
+any backend (the dry-run path), and is numerically identical to the oracle.
+On real TPU hardware, ``impl="pallas"`` dispatches to the FlashAttention
+kernel in :mod:`repro.kernels.flash_attention`.
+
+Conventions: q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D), GQA via Hq % Hkv == 0;
+queries occupy the LAST Sq positions of the kv axis (prefill Sq==Skv,
+decode Sq==1); ``window`` = sliding-window size; ``kv_len`` masks a
+partially-filled cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(qpos, kpos, *, causal, window, kv_len):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=jnp.bool_)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= (kpos < kv_len)[None, :]
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=False, window=None, kv_len=None,
+                      sm_scale=None, block_q: int = 512, unroll: bool = False):
+    """Memory-efficient attention via scan over q blocks.
+
+    v may have a different head dim than q/k (MLA's v_dim ≠ qk_dim).
+    kv_len may be a traced scalar (decode over a growing cache).
+    unroll: unroll the q-block loop — REQUIRED for dry-run cost analysis
+    (XLA counts a while-loop body once, not ×trip-count).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else float(D) ** -0.5
+    qg = q.reshape(B, Hkv, G, Sq, D)
+
+    bq = min(block_q, Sq)
+    if Sq % bq:
+        bq = Sq
+    nq = Sq // bq
+    kpos = jnp.arange(Skv)
+
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def one_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32), k32) * scale
+        qpos = qi * bq + jnp.arange(bq) + (Skv - Sq)
+        m = _mask(qpos, kpos, causal=causal, window=window, kv_len=kv_len)
+        s = jnp.where(m[None, None, None], s, -jnp.inf)
+        mx = jnp.max(s, axis=-1, keepdims=True)
+        mx_safe = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        p = jnp.where(m[None, None, None], jnp.exp(s - mx_safe), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v32)
+        return jnp.where(l > 0, o / l, 0.0)
+
+    if nq == 1:
+        out = one_block(0)
+    else:
+        _, out = jax.lax.scan(lambda _, qi: (None, one_block(qi)), None,
+                              jnp.arange(nq), unroll=nq if unroll else 1)
+        out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, Sq, Dv)
+    return out.reshape(B, Hq, Sq, Dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", **kw):
+    if impl == "pallas":
+        kw.pop("unroll", None)
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, **kw)
+    block_q = kw.pop("block_q", 512)
+    return chunked_attention(q, k, v, block_q=block_q, **kw)

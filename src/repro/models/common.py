@@ -1,0 +1,152 @@
+"""Model substrate: parameter definitions with logical sharding axes.
+
+Every model declares its parameters once as a pytree of :class:`ParamDef`
+(shape + logical axes + initializer). From that single declaration we derive:
+
+* ``init_params``   — materialized arrays (CPU smoke tests, real training),
+* ``abstract_params`` — ShapeDtypeStructs (dry-run lowering, no allocation),
+* ``param_specs``   — PartitionSpecs via the logical→mesh rules in
+  :mod:`repro.parallel.sharding`.
+
+Logical axis names used across the zoo:
+    "embed"   d_model-sized dims            (replicated; MLP-partner dims shard)
+    "vocab"   vocabulary/output rows        → model
+    "heads"   attention-head dims           → model
+    "mlp"     FFN hidden dims               → model
+    "experts" MoE expert axis               → model (EP)
+    "rows"    huge embedding-table rows     → model (row-sharded tables)
+    "layers"  scan-stacked layer axis       (never sharded)
+    None      replicated dim
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # None → 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map_defs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_param_def)
+
+
+def abstract_params(defs) -> Any:
+    """ShapeDtypeStruct tree for .lower() — zero allocation."""
+    return _tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def param_axes(defs) -> Any:
+    return _tree_map_defs(lambda d: d.axes, defs)
+
+
+def init_params(defs, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+            if d.init == "embed":
+                scale = d.scale if d.scale is not None else 0.02
+            out.append((jax.random.normal(k, d.shape) * scale).astype(d.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_param_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# -- building blocks (pure fns over param dicts) ---------------------------------
+
+
+def rms_norm(x, gamma, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma + beta
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gelu_mlp_defs(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "wi": ParamDef((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "bi": ParamDef((d_ff,), ("mlp",), init="zeros", dtype=dtype),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+        "bo": ParamDef((d_model,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return dense(jax.nn.gelu(dense(x, p["wi"], p["bi"])), p["wo"], p["bo"])
+
+
+def swiglu_mlp_defs(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "wg": ParamDef((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wi": ParamDef((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def swiglu_mlp(p, x):
+    return dense(jax.nn.silu(dense(x, p["wg"])) * dense(x, p["wi"]), p["wo"])
+
+
+def mlp_stack_defs(dims: tuple[int, ...], dtype, *, final_axis: str | None = None) -> dict:
+    """Plain ReLU MLP tower (recsys/GNN). dims = (in, h1, ..., out)."""
+    out = {}
+    for i in range(len(dims) - 1):
+        ax_in = "embed" if i == 0 else None
+        ax_out = final_axis if i == len(dims) - 2 else None
+        out[f"w{i}"] = ParamDef((dims[i], dims[i + 1]), (ax_in, ax_out), dtype=dtype)
+        out[f"b{i}"] = ParamDef((dims[i + 1],), (ax_out,), init="zeros", dtype=dtype)
+    return out
+
+
+def mlp_stack(p, x, *, act=jax.nn.relu, final_act: bool = False):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = dense(x, p[f"w{i}"], p[f"b{i}"])
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,83 @@
+"""Embedding lookup / EmbeddingBag for huge row-sharded tables.
+
+JAX has no native EmbeddingBag and no CSR sparse — the lookup is built here
+from ``jnp.take`` + ``jax.ops.segment_sum`` (the assignment's explicit
+requirement). Two execution paths:
+
+* ``embedding_lookup`` — plain ``jnp.take``; under pjit with the table
+  row-sharded (rows → model axis), GSPMD partitions the gather into
+  clamp + masked local gather + all-reduce. Baseline path.
+* ``sharded_lookup_shardmap`` — the same mod-sharding written explicitly
+  with shard_map + psum, used when we want to control the collective
+  (perf iterations) and to test GSPMD against a hand-written reference.
+* ``embedding_bag`` — gather + weighted segment-sum over ragged bags
+  (offsets form), mirroring torch.nn.EmbeddingBag("sum").
+
+This is also where the paper's state/compute split bites for recsys: the
+tables are the "index in S3" — hydrated into device HBM by the serving
+runtime, row-partitioned exactly like the paper's §3 document partitions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def embedding_lookup(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """table (R,D), idx (...,) int32 in [0,R) → (..., D)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def sharded_lookup_local(table_shard, idx, axis_name: str = "model"):
+    """Inside shard_map: each shard owns rows [lo, lo+R_local); masked local
+    gather + psum reconstructs the full lookup."""
+    R_local = table_shard.shape[0]
+    shard = jax.lax.axis_index(axis_name)
+    local = idx - shard * R_local
+    ok = (local >= 0) & (local < R_local)
+    safe = jnp.clip(local, 0, R_local - 1)
+    vals = jnp.where(ok[..., None], jnp.take(table_shard, safe, axis=0), 0.0)
+    return jax.lax.psum(vals, axis_name)
+
+
+def sharded_lookup_shardmap(mesh, table, idx, *, axis_name: str = "model",
+                            batch_axis: str | None = "data"):
+    """Explicit mod-sharded lookup: table rows on `axis_name`, batch on
+    `batch_axis`; output batch-sharded, feature-replicated."""
+    bspec = P(batch_axis) if batch_axis else P()
+    fn = shard_map(
+        lambda t, i: sharded_lookup_local(t, i, axis_name),
+        mesh=mesh,
+        in_specs=(P(axis_name, None), bspec),
+        out_specs=bspec,
+        check_rep=False,
+    )
+    return fn(table, idx)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array, offsets: jax.Array,
+                  n_bags: int, *, weights: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """torch.nn.EmbeddingBag semantics (offsets form, fixed n_bags).
+
+    indices (L,) int32; offsets (n_bags,) int32 — bag b covers
+    indices[offsets[b]:offsets[b+1]]; weights (L,) optional.
+    """
+    L = indices.shape[0]
+    pos = jnp.arange(L, dtype=jnp.int32)
+    # bag id of each index = #offsets <= pos  - 1  (searchsorted right)
+    bag = jnp.searchsorted(offsets, pos, side="right") - 1
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    out = jax.ops.segment_sum(rows, bag, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((L, 1), rows.dtype), bag,
+                                  num_segments=n_bags)
+        out = out / jnp.maximum(cnt, 1.0)
+    elif mode != "sum":
+        raise ValueError(mode)
+    return out

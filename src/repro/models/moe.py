@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP-shardable.
+
+Dispatch is the scatter-by-rank scheme (GShard/Switch semantics with token
+dropping on overflow) — memory scales with tokens·topk·cf·d, never with a
+(tokens, E, capacity) one-hot:
+
+    logits → top-k (experts, weights)
+    rank r of each assignment within its expert (masked cumsum)
+    keep if r < capacity; scatter token index into (E, C) slot table
+    gather x → (E, C, d); per-expert GEMMs; combine by scatter-add
+
+Expert weights carry the "experts" logical axis → sharded over the `model`
+mesh axis (expert parallelism); the token axis stays on `data`. XLA inserts
+the all-to-all pair at the dispatch/combine boundaries.
+
+Supports DeepSeek-style shared experts (always-on dense experts added to the
+routed output) and an auxiliary load-balance loss (Switch §2.2).
+
+``moe_ffn_dense_oracle`` computes every expert for every token (dropless) —
+the small-scale correctness oracle: with ample capacity the two must agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    n_shared: int = 0              # DeepSeek shared experts
+    capacity_factor: float = 1.25
+    router_dtype: any = jnp.float32
+
+
+def moe_defs(cfg: MoEConfig, dtype) -> dict:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    defs = {
+        "router": ParamDef((d, E), ("embed", None), dtype=jnp.float32),
+        "wg": ParamDef((E, d, f), ("experts", "embed", "mlp"), dtype=dtype),
+        "wi": ParamDef((E, d, f), ("experts", "embed", "mlp"), dtype=dtype),
+        "wo": ParamDef((E, f, d), ("experts", "mlp", "embed"), dtype=dtype),
+    }
+    if cfg.n_shared:
+        S = cfg.n_shared
+        defs["shared_wg"] = ParamDef((S, d, f), (None, "embed", "mlp"), dtype=dtype)
+        defs["shared_wi"] = ParamDef((S, d, f), (None, "embed", "mlp"), dtype=dtype)
+        defs["shared_wo"] = ParamDef((S, f, d), (None, "mlp", "embed"), dtype=dtype)
+    return defs
+
+
+def _expert_ffn(wg, wi, wo, x):
+    """x (E, C, d) → (E, C, d); SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", x, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_ffn(p, x, cfg: MoEConfig, *, capacity: int | None = None):
+    """x (..., d) → (y (..., d), aux_loss scalar)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)                                   # (T, d)
+    T = xt.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = dense(xt.astype(cfg.router_dtype),
+                   p["router"].astype(cfg.router_dtype))    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                  # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    onehot_top1 = jax.nn.one_hot(expert[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    C = capacity if capacity is not None else max(
+        1, int(math.ceil(T * K / E * cfg.capacity_factor)))
+
+    # rank of each (token, k) assignment within its expert
+    flat_e = expert.reshape(-1)                             # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (T*K, E)
+    ranks = (jnp.cumsum(onehot, axis=0) - onehot)           # exclusive
+    rank = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < C
+
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, rank, C)                       # overflow → dump col
+
+    # scatter token ids into the slot table; dump column sliced off
+    slots = jnp.full((E, C + 1), T, dtype=jnp.int32)        # T = pad token
+    slots = slots.at[slot_e, slot_c].set(jnp.where(keep, tok, T),
+                                         mode="drop")
+    slots = slots[:, :C]                                    # (E, C)
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    xe = xpad[slots]                                        # (E, C, d)
+    ye = _expert_ffn(p["wg"], p["wi"], p["wo"], xe)         # (E, C, d)
+
+    # combine: weight each slot by its token's gate, scatter-add back
+    gflat = jnp.where(keep, gate.reshape(-1), 0.0)          # (T*K,)
+    gslot = jnp.zeros((E, C + 1), jnp.float32).at[slot_e, slot_c].set(
+        gflat, mode="drop")[:, :C]
+    y = jnp.zeros((T + 1, d), ye.dtype).at[slots.reshape(-1)].add(
+        (ye * gslot[..., None].astype(ye.dtype)).reshape(E * C, d),
+        mode="drop")[:T]
+
+    if cfg.n_shared:
+        sh = _expert_ffn(p["shared_wg"], p["shared_wi"], p["shared_wo"],
+                         jnp.broadcast_to(xt[None], (cfg.n_shared, T, d)))
+        y = y + jnp.sum(sh, axis=0)
+
+    return y.reshape(orig_shape), aux
+
+
+def moe_ffn_dense_oracle(p, x, cfg: MoEConfig):
+    """Dropless oracle: every expert on every token, weighted by gates."""
+    orig_shape = x.shape
+    xt = x.reshape(-1, orig_shape[-1])
+    T = xt.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    logits = dense(xt.astype(cfg.router_dtype),
+                   p["router"].astype(cfg.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    w = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], expert].set(gate)           # (T, E)
+    ye = _expert_ffn(p["wg"], p["wi"], p["wo"],
+                     jnp.broadcast_to(xt[None], (E, T, xt.shape[-1])))
+    y = jnp.einsum("etd,te->td", ye, w.astype(ye.dtype))
+    if cfg.n_shared:
+        sh = _expert_ffn(p["shared_wg"], p["shared_wi"], p["shared_wo"],
+                         jnp.broadcast_to(xt[None], (cfg.n_shared, T, xt.shape[-1])))
+        y = y + jnp.sum(sh, axis=0)
+    return y.reshape(orig_shape)

@@ -1,0 +1,370 @@
+"""Recsys architectures: FM, DCN-v2, BST, BERT4Rec.
+
+Shared anatomy (the assignment's recsys regime): huge row-sharded embedding
+tables → feature-interaction op → small MLP → logit. The embedding lookup is
+the hot path; tables carry the "rows" logical axis (→ model mesh axis). The
+serving side plugs into the paper's serverless runtime: tables are the
+immutable "index" hydrated from the object store.
+
+* FM        — 2-way factorization machine, O(nk) sum-square trick [Rendle '10]
+* DCN-v2    — 3 cross layers (x0 ⊙ (W xl + b) + xl) + deep tower [2008.13535]
+* BST       — behavior-sequence transformer: 1 block over the last 20 item
+              embeddings (+target), then MLP [1905.06874]
+* BERT4Rec  — bidirectional 2-block transformer over 200-item sequences,
+              masked-item CE over the item vocab (tied embedding) [1904.06690]
+
+Retrieval (`retrieval_cand`, 1 query × 1M candidates) uses each model's
+two-tower factorization: a user vector dotted against the candidate item
+matrix → top-k (the Pallas `dot_topk` fused kernel on TPU; jnp fallback
+here). For FM the dot IS the model's pairwise term; for DCN/BST/BERT4Rec it
+is the standard retrieval-tower deployment (documented simplification).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention
+from repro.models.common import (ParamDef, dense, layer_norm, mlp_stack,
+                                 mlp_stack_defs)
+from repro.models.embedding import embedding_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                       # fm | dcn | bst | bert4rec
+    n_sparse: int = 26              # sparse fields (fm/dcn)
+    n_dense: int = 0                # dense features (dcn)
+    rows_per_field: int = 1_000_000
+    embed_dim: int = 16
+    n_items: int = 1_000_000        # item vocab (bst/bert4rec)
+    seq_len: int = 20               # behavior-sequence length
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    n_cross_layers: int = 3
+    dtype: Any = jnp.float32
+    unroll: bool = False            # unroll batch-chunk loops (dry-run)
+    sharded_topk: bool = False      # shard_map local-topk serve (perf)
+
+    def param_count(self) -> int:
+        from repro.models.common import count_params
+        return count_params(recsys_param_defs(self))
+
+
+# -- parameter defs ---------------------------------------------------------------
+
+
+def _field_table(cfg: RecsysConfig, dim: int) -> ParamDef:
+    """All sparse fields share one hashed (F·R, dim) table, row-sharded."""
+    return ParamDef((cfg.n_sparse * cfg.rows_per_field, dim),
+                    ("rows", None), init="embed", dtype=cfg.dtype)
+
+
+def _tx_block_defs(d: int, n_heads: int, dt) -> dict:
+    return {
+        "wq": ParamDef((d, d), ("embed", "heads"), dtype=dt),
+        "wk": ParamDef((d, d), ("embed", "heads"), dtype=dt),
+        "wv": ParamDef((d, d), ("embed", "heads"), dtype=dt),
+        "wo": ParamDef((d, d), ("heads", "embed"), dtype=dt),
+        "ln1_g": ParamDef((d,), (None,), init="ones", dtype=dt),
+        "ln1_b": ParamDef((d,), (None,), init="zeros", dtype=dt),
+        "ln2_g": ParamDef((d,), (None,), init="ones", dtype=dt),
+        "ln2_b": ParamDef((d,), (None,), init="zeros", dtype=dt),
+        "ffn": mlp_stack_defs((d, 4 * d, d), dt),
+    }
+
+
+def recsys_param_defs(cfg: RecsysConfig) -> dict:
+    dt = cfg.dtype
+    if cfg.kind == "fm":
+        return {
+            "emb": _field_table(cfg, cfg.embed_dim),
+            "linear": _field_table(cfg, 1),
+            "bias": ParamDef((1,), (None,), init="zeros", dtype=dt),
+        }
+    if cfg.kind == "dcn":
+        d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+        out = {
+            "emb": _field_table(cfg, cfg.embed_dim),
+            "head": ParamDef((cfg.mlp_dims[-1], 1), (None, None), dtype=dt),
+            "head_b": ParamDef((1,), (None,), init="zeros", dtype=dt),
+            "mlp": mlp_stack_defs((d0,) + tuple(cfg.mlp_dims), dt),
+        }
+        for i in range(cfg.n_cross_layers):
+            out[f"cross_w{i}"] = ParamDef((d0, d0), (None, "mlp"), dtype=dt)
+            out[f"cross_b{i}"] = ParamDef((d0,), (None,), init="zeros", dtype=dt)
+        return out
+    if cfg.kind == "bst":
+        d = cfg.embed_dim
+        blocks = {f"b{i}": _tx_block_defs(d, cfg.n_heads, dt)
+                  for i in range(cfg.n_blocks)}
+        feat_dim = (cfg.seq_len + 1) * d
+        return {
+            "item_emb": ParamDef((cfg.n_items, d), ("rows", None),
+                                 init="embed", dtype=dt),
+            "pos_emb": ParamDef((cfg.seq_len + 1, d), (None, None),
+                                init="embed", dtype=dt),
+            **blocks,
+            "mlp": mlp_stack_defs((feat_dim,) + tuple(cfg.mlp_dims) + (1,), dt),
+        }
+    if cfg.kind == "bert4rec":
+        d = cfg.embed_dim
+        blocks = {f"b{i}": _tx_block_defs(d, cfg.n_heads, dt)
+                  for i in range(cfg.n_blocks)}
+        return {
+            # +2 rows: [PAD]=0 is row n_items, [MASK] is row n_items+1
+            "item_emb": ParamDef((cfg.n_items + 2, d), ("rows", None),
+                                 init="embed", dtype=dt),
+            "pos_emb": ParamDef((cfg.seq_len, d), (None, None),
+                                init="embed", dtype=dt),
+            **blocks,
+            "out_b": ParamDef((cfg.n_items + 2,), ("rows",), init="zeros",
+                              dtype=dt),
+        }
+    raise ValueError(cfg.kind)
+
+
+# -- forward passes ------------------------------------------------------------------
+
+
+def _flat_ids(cfg: RecsysConfig, sparse_ids: jax.Array) -> jax.Array:
+    """(B,F) per-field ids → global rows in the shared (F·R, ·) table."""
+    F = cfg.n_sparse
+    base = jnp.arange(F, dtype=jnp.int32) * cfg.rows_per_field
+    return sparse_ids + base[None, :]
+
+
+def fm_forward(params, batch, cfg: RecsysConfig):
+    """batch = {sparse (B,F) int32}. Returns logits (B,)."""
+    ids = _flat_ids(cfg, batch["sparse"])
+    v = embedding_lookup(params["emb"], ids)              # (B,F,D)
+    lin = embedding_lookup(params["linear"], ids)[..., 0]  # (B,F)
+    # 2-way term via the O(nk) identity: ½[(Σv)² − Σv²] summed over dims
+    s = jnp.sum(v, axis=1)                                # (B,D)
+    pair = 0.5 * jnp.sum(s * s - jnp.sum(v * v, axis=1), axis=-1)
+    return params["bias"][0] + jnp.sum(lin, axis=1) + pair
+
+
+def dcn_forward(params, batch, cfg: RecsysConfig):
+    """batch = {dense (B,13) f32, sparse (B,26) int32}. Returns logits (B,)."""
+    ids = _flat_ids(cfg, batch["sparse"])
+    v = embedding_lookup(params["emb"], ids)              # (B,F,D)
+    x0 = jnp.concatenate(
+        [batch["dense"].astype(cfg.dtype), v.reshape(v.shape[0], -1)], -1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        xw = dense(x, params[f"cross_w{i}"]) + params[f"cross_b{i}"]
+        x = x0 * xw + x                                   # DCN-v2 cross
+    h = mlp_stack(params["mlp"], x)
+    return (dense(h, params["head"]) + params["head_b"])[..., 0]
+
+
+def _tx_block(p, x, n_heads: int):
+    """Post-LN encoder block (BST/BERT4Rec style), bidirectional."""
+    B, S, d = x.shape
+    dh = d // n_heads
+    q = dense(x, p["wq"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    k = dense(x, p["wk"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    v = dense(x, p["wv"]).reshape(B, S, n_heads, dh).transpose(0, 2, 1, 3)
+    o = attention(q, k, v)                                # bidirectional
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, d)
+    x = layer_norm(x + dense(o, p["wo"]), p["ln1_g"], p["ln1_b"])
+    h = mlp_stack(p["ffn"], x)
+    return layer_norm(x + h, p["ln2_g"], p["ln2_b"])
+
+
+def bst_forward(params, batch, cfg: RecsysConfig):
+    """batch = {seq (B,S) int32 item history, target (B,) int32}.
+
+    Transformer over [history ; target] with position embeddings, then the
+    flattened sequence through the MLP tower → CTR logit (B,).
+    """
+    seq = jnp.concatenate([batch["seq"], batch["target"][:, None]], axis=1)
+    x = embedding_lookup(params["item_emb"], seq)         # (B,S+1,D)
+    x = x + params["pos_emb"][None]
+    for i in range(cfg.n_blocks):
+        x = _tx_block(params[f"b{i}"], x, cfg.n_heads)
+    flat = x.reshape(x.shape[0], -1)
+    return mlp_stack(params["mlp"], flat)[..., 0]
+
+
+def bert4rec_forward(params, batch, cfg: RecsysConfig):
+    """batch = {seq (B,S) int32 with [MASK]=n_items+1, [PAD]=n_items}.
+
+    Returns logits (B,S,n_items+2) via the tied item embedding.
+    """
+    x = embedding_lookup(params["item_emb"], batch["seq"])
+    x = x + params["pos_emb"][None]
+    for i in range(cfg.n_blocks):
+        x = _tx_block(params[f"b{i}"], x, cfg.n_heads)
+    return x @ params["item_emb"].T + params["out_b"]
+
+
+def recsys_forward(params, batch, cfg: RecsysConfig):
+    fn = {"fm": fm_forward, "dcn": dcn_forward, "bst": bst_forward,
+          "bert4rec": bert4rec_forward}[cfg.kind]
+    return fn(params, batch, cfg)
+
+
+# -- losses ---------------------------------------------------------------------------
+
+
+def ctr_loss(params, batch, cfg: RecsysConfig):
+    """Binary logloss for fm/dcn/bst. batch['label'] (B,) in {0,1}."""
+    logits = recsys_forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    ll = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    loss = jnp.mean(ll)
+    auc_proxy = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"loss": loss, "acc": auc_proxy}
+
+
+def masked_item_loss(params, batch, cfg: RecsysConfig):
+    """BERT4Rec masked-item CE. batch = {seq, labels (B,S) int32, -1=unmasked}."""
+    logits = bert4rec_forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"loss": loss}
+
+
+def _bert4rec_hidden(params, seq, cfg: RecsysConfig):
+    x = embedding_lookup(params["item_emb"], seq)
+    x = x + params["pos_emb"][None]
+    for i in range(cfg.n_blocks):
+        x = _tx_block(params[f"b{i}"], x, cfg.n_heads)
+    return x                                             # (B,S,D)
+
+
+def masked_item_loss_sampled(params, batch, cfg: RecsysConfig):
+    """Sampled-softmax masked-item loss — the production path for 10⁶-item
+    vocabs (full softmax over B·S·V is petabyte-scale at train_batch=65536).
+
+    batch = {seq (B,S), mask_pos (B,P) i32, labels (B,P) i32 (-1 pad),
+             neg_ids (N,) i32} — negatives shared across the batch (uniform
+    sampling; the log-uniform correction term is omitted, noted in DESIGN).
+    """
+    x = _bert4rec_hidden(params, batch["seq"], cfg)
+    xm = jnp.take_along_axis(x, batch["mask_pos"][..., None], axis=1)  # (B,P,D)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    pos_emb = embedding_lookup(params["item_emb"], lab)               # (B,P,D)
+    pos_b = jnp.take(params["out_b"], lab)
+    neg_emb = embedding_lookup(params["item_emb"], batch["neg_ids"])  # (N,D)
+    neg_b = jnp.take(params["out_b"], batch["neg_ids"])
+    logit_pos = jnp.sum(xm * pos_emb, -1) + pos_b                     # (B,P)
+    logit_neg = jnp.einsum("bpd,nd->bpn", xm, neg_emb) + neg_b        # (B,P,N)
+    # CE of the positive against [pos ; negs]
+    all_logits = jnp.concatenate([logit_pos[..., None], logit_neg], -1)
+    lse = jax.nn.logsumexp(all_logits.astype(jnp.float32), axis=-1)
+    nll = jnp.where(valid, lse - logit_pos.astype(jnp.float32), 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"loss": loss}
+
+
+def bert4rec_serve_topk(params, seq, cfg: RecsysConfig, *, k: int = 100,
+                        chunk: int = 2048):
+    """Next-item top-k over the full vocab, batch-chunked so the (chunk, V)
+    score tile never exceeds device memory. Returns (vals, ids) (B,k)."""
+    B = seq.shape[0]
+    chunk = min(chunk, B)
+    pad = (-B) % chunk
+    if pad:
+        seq = jnp.pad(seq, ((0, pad), (0, 0)), constant_values=cfg.n_items)
+    seqc = seq.reshape(-1, chunk, seq.shape[1])
+
+    def score_chunk(s):
+        x = _bert4rec_hidden(params, s, cfg)[:, -1]        # (chunk, D)
+        if cfg.sharded_topk:
+            return _sharded_vocab_topk(x, params["item_emb"],
+                                       params["out_b"], k)
+        logits = x @ params["item_emb"].T + params["out_b"]
+        v, i = jax.lax.top_k(logits, k)
+        return v, i.astype(jnp.int32)
+
+    n_chunks = seqc.shape[0]
+    _, (vals, ids) = jax.lax.scan(
+        lambda _, s: (None, score_chunk(s)), None, seqc,
+        unroll=n_chunks if cfg.unroll else 1)
+    return (vals.reshape(-1, k)[:B], ids.reshape(-1, k)[:B])
+
+
+def _sharded_vocab_topk(x, emb, bias, k: int, *, axis: str = "model"):
+    """Per-vocab-shard scoring + local top-k + k·M merge — replaces the
+    full (chunk, V) logits gather GSPMD otherwise inserts before top_k.
+    Requires an ambient mesh with `axis`; emb rows sharded over `axis`."""
+    from jax.sharding import PartitionSpec as P
+
+    def local(xl, el, bl):
+        j = jax.lax.axis_index(axis)
+        v_loc = el.shape[0]
+        logits = xl @ el.T + bl                            # (chunk, V_loc)
+        lv, li = jax.lax.top_k(logits, k)
+        li = li + j * v_loc
+        gv = jax.lax.all_gather(lv, axis, axis=-1, tiled=True)
+        gi = jax.lax.all_gather(li, axis, axis=-1, tiled=True)
+        mv, mi = jax.lax.top_k(gv, k)
+        return mv, jnp.take_along_axis(gi, mi, axis=-1).astype(jnp.int32)
+
+    return jax.shard_map(local, mesh=None,
+                         in_specs=(P(), P(axis, None), P(axis)),
+                         out_specs=(P(), P()), check_vma=False)(x, emb, bias)
+
+
+def recsys_loss(params, batch, cfg: RecsysConfig):
+    if cfg.kind == "bert4rec":
+        if "mask_pos" in batch:
+            return masked_item_loss_sampled(params, batch, cfg)
+        return masked_item_loss(params, batch, cfg)
+    return ctr_loss(params, batch, cfg)
+
+
+# -- retrieval tower ------------------------------------------------------------------
+
+
+def user_vector(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """User-side tower → (B, D) for candidate dot-scoring."""
+    if cfg.kind == "fm":
+        ids = _flat_ids(cfg, batch["sparse"])
+        return jnp.sum(embedding_lookup(params["emb"], ids), axis=1)
+    if cfg.kind == "dcn":
+        ids = _flat_ids(cfg, batch["sparse"])
+        v = embedding_lookup(params["emb"], ids)
+        return jnp.mean(v, axis=1)
+    if cfg.kind == "bst":
+        x = embedding_lookup(params["item_emb"], batch["seq"])
+        x = x + params["pos_emb"][None, : x.shape[1]]
+        for i in range(cfg.n_blocks):
+            x = _tx_block(params[f"b{i}"], x, cfg.n_heads)
+        return jnp.mean(x, axis=1)
+    if cfg.kind == "bert4rec":
+        x = embedding_lookup(params["item_emb"], batch["seq"])
+        x = x + params["pos_emb"][None]
+        for i in range(cfg.n_blocks):
+            x = _tx_block(params[f"b{i}"], x, cfg.n_heads)
+        return x[:, -1]                                   # last position
+    raise ValueError(cfg.kind)
+
+
+def retrieval_topk(params, batch, cfg: RecsysConfig, cand: jax.Array,
+                   k: int = 100, *, use_kernel: bool = False):
+    """Score 1 query (batch of 1) against cand (N,D) → top-k (vals, ids)."""
+    u = user_vector(params, batch, cfg)[0]                # (D,)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.dot_topk(u, cand, k)
+    scores = cand.astype(jnp.float32) @ u.astype(jnp.float32)
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (RoPE), interleaved-free (GPT-NeoX style)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, *, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x (..., S, D) with D even; positions (S,) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta=theta)                      # (D/2,)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : D // 2], x[..., D // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

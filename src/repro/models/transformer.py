@@ -1,0 +1,531 @@
+"""Decoder-only LM transformer: GQA / RoPE / SWA / MoE / MLA, scanned layers.
+
+One definition covers all five assigned LM architectures:
+
+* dense GQA (starcoder2, stablelm, h2o-danube) — `moe=None, mla=None`
+* MoE (olmoe: 64e top-8)                       — `moe=MoEConfig(...)`
+* MLA + MoE (deepseek-v2: kv_lora 512, 160e top-6 + 2 shared) — `mla=...`
+
+Layers are `lax.scan`-stacked (small HLO, remat-friendly — mandatory for
+512-device dry-run compiles on a CPU host). Three entry points:
+
+* ``lm_loss``       — causal-LM cross entropy (the train_step body)
+* ``lm_prefill``    — full-sequence forward → (last-token logits, kv cache)
+* ``lm_decode``     — one token against a cache → (logits, updated cache)
+
+KV caches: GQA caches (L,B,Hkv,S,Dh) k/v pairs; MLA caches the *latent*
+(L,B,S,kv_lora) + shared rope key (L,B,S,rope_dim) — the compressed-KV point
+of DeepSeek-V2 — and decode uses the weight-absorption trick (w_kv_b folded
+into the query / output projections) so the latent is never re-expanded.
+Sliding-window models may use a ring-buffer cache of `window` slots
+(sub-linear memory — what makes `long_500k` servable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention
+from repro.models.common import (ParamDef, dense, rms_norm, swiglu_mlp,
+                                 swiglu_mlp_defs)
+from repro.models.moe import MoEConfig, moe_defs, moe_ffn
+from repro.models.rope import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention dims."""
+
+    q_lora: int = 1536
+    kv_lora: int = 512
+    rope_dim: int = 64
+    nope_dim: int = 128
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # default d_model // n_heads
+    rope_theta: float = 10000.0
+    rope_pct: float = 1.0                # partial rotary (stablelm: 0.25)
+    ffn_act: str = "swiglu"              # "swiglu" | "gelu" (starcoder2)
+    window: int | None = None            # sliding-window attention (tokens)
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_block_q: int = 512
+    moe_impl: str = "gspmd"              # "gspmd" | "ep" (shard_map EP)
+    ep_batch_axes: tuple = ("data",)     # mesh batch axes for the EP path
+    aux_loss_weight: float = 0.01
+    unroll: bool = False                 # unroll scans (dry-run cost analysis)
+    remat_policy: str = "nothing_saveable"   # | "dots_saveable" | "none"
+    shard_kv_proj: bool = True           # False: replicate k/v projections
+                                         # (GQA with Hkv < mesh: avoids the
+                                         # per-layer kv reshard collective)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def qk_dim(self) -> int:
+        return (self.mla.nope_dim + self.mla.rope_dim) if self.mla else self.dh
+
+    def param_count(self) -> int:
+        from repro.models.common import count_params
+        return count_params(lm_param_defs(self))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        cfg = self.moe
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = (cfg.n_experts - cfg.top_k) * per_expert * self.n_layers
+        return self.param_count() - inactive
+
+
+# -- parameters ----------------------------------------------------------------
+
+
+def _attn_defs(cfg: LMConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    dt = cfg.dtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "wq_a": ParamDef((d, m.q_lora), ("embed", None), dtype=dt),
+            "q_norm": ParamDef((m.q_lora,), (None,), init="ones", dtype=dt),
+            "wq_b": ParamDef((m.q_lora, H * (m.nope_dim + m.rope_dim)),
+                             (None, "heads"), dtype=dt),
+            "wkv_a": ParamDef((d, m.kv_lora + m.rope_dim), ("embed", None), dtype=dt),
+            "kv_norm": ParamDef((m.kv_lora,), (None,), init="ones", dtype=dt),
+            "wkv_b": ParamDef((m.kv_lora, H * (m.nope_dim + m.v_dim)),
+                              (None, "heads"), dtype=dt),
+            "wo": ParamDef((H * m.v_dim, d), ("heads", "embed"), dtype=dt),
+        }
+    kv_ax = "heads" if cfg.shard_kv_proj else None
+    return {
+        "wq": ParamDef((d, H * Dh), ("embed", "heads"), dtype=dt),
+        "wk": ParamDef((d, Hkv * Dh), ("embed", kv_ax), dtype=dt),
+        "wv": ParamDef((d, Hkv * Dh), ("embed", kv_ax), dtype=dt),
+        "wo": ParamDef((H * Dh, d), ("heads", "embed"), dtype=dt),
+    }
+
+
+def _layer_defs(cfg: LMConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    if cfg.moe is not None:
+        ffn = moe_defs(cfg.moe, dt)
+    elif cfg.ffn_act == "gelu":
+        from repro.models.common import gelu_mlp_defs
+        ffn = gelu_mlp_defs(d, cfg.d_ff, dt)
+    else:
+        ffn = swiglu_mlp_defs(d, cfg.d_ff, dt)
+    return {
+        "ln1": ParamDef((d,), ("embed",), init="ones", dtype=dt),
+        "attn": _attn_defs(cfg),
+        "ln2": ParamDef((d,), ("embed",), init="ones", dtype=dt),
+        "ffn": ffn,
+    }
+
+
+def _stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a scanned 'layers' axis to every ParamDef."""
+    return jax.tree_util.tree_map(
+        lambda p: ParamDef((n,) + p.shape, ("layers",) + p.axes,
+                           init=p.init, scale=p.scale, dtype=p.dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def lm_param_defs(cfg: LMConfig) -> dict:
+    d, dt = cfg.d_model, cfg.dtype
+    return {
+        "embed": ParamDef((cfg.vocab, d), ("vocab", "embed"), init="embed", dtype=dt),
+        "layers": _stack_defs(_layer_defs(cfg), cfg.n_layers),
+        "ln_f": ParamDef((d,), ("embed",), init="ones", dtype=dt),
+        "unembed": ParamDef((d, cfg.vocab), ("embed", "vocab"), dtype=dt),
+    }
+
+
+# -- attention sublayers -----------------------------------------------------------
+
+
+def _gqa_attn(p, x, cfg: LMConfig, positions, *, kv_len=None, cache_kv=None):
+    """GQA attention. Returns (out, (k_new, v_new)) — new kv for caching.
+
+    cache_kv: (k (B,Hkv,S,Dh), v) from a cache; new token's k/v attend
+    against cache (decode path). Without cache: self-attention over x.
+    """
+    B, S, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = dense(x, p["wq"]).reshape(B, S, H, Dh)
+    k = dense(x, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = dense(x, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = _rope(q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh), positions,
+              cfg).reshape(B, H, S, Dh)
+    k = _rope(k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh), positions,
+              cfg).reshape(B, Hkv, S, Dh)
+    v = v.transpose(0, 2, 1, 3)
+    if cache_kv is None:
+        o = attention(q, k, v, causal=True, window=cfg.window,
+                      block_q=cfg.attn_block_q, unroll=cfg.unroll)
+    else:
+        ck, cv = cache_kv                                  # (B,Hkv,Sc,Dh)
+        o = attention(q, ck, cv, causal=False, kv_len=kv_len,
+                      block_q=cfg.attn_block_q, unroll=cfg.unroll)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    return dense(o, p["wo"]), (k, v)
+
+
+def _mla_qkv(p, x, cfg: LMConfig, positions):
+    """MLA projections. Returns (q_nope, q_rope, c_kv, k_rope).
+
+    q_nope (B,H,S,nope), q_rope (B,H,S,rope), c_kv (B,S,kv_lora) latent,
+    k_rope (B,S,rope) shared-across-heads rope key.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(dense(x, p["wq_a"]), p["q_norm"])
+    q = dense(cq, p["wq_b"]).reshape(B, S, H, m.nope_dim + m.rope_dim)
+    q = q.transpose(0, 2, 1, 3)                            # (B,H,S,*)
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope.reshape(B * H, S, m.rope_dim), positions,
+                        theta=cfg.rope_theta).reshape(B, H, S, m.rope_dim)
+
+    ckv = dense(x, p["wkv_a"])                             # (B,S,kv_lora+rope)
+    c_kv = rms_norm(ckv[..., :m.kv_lora], p["kv_norm"])
+    k_rope = apply_rope(ckv[..., m.kv_lora:], positions, theta=cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attn_full(p, x, cfg: LMConfig, positions):
+    """MLA self-attention (training/prefill): expand latent per head."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    kv = dense(c_kv, p["wkv_b"]).reshape(B, S, H, m.nope_dim + m.v_dim)
+    kv = kv.transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :m.nope_dim], kv[..., m.nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (B, H, S, m.rope_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    o = attention(q, k, v, causal=True, sm_scale=scale,
+                  block_q=cfg.attn_block_q, unroll=cfg.unroll)  # (B,H,S,v_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_dim)
+    return dense(o, p["wo"]), (c_kv, k_rope)
+
+
+def _mla_attn_core(p, q_nope, q_rope, cache, kv_len, cfg: LMConfig):
+    """MLA decode attention with weight absorption: the latent cache is
+    attended *directly* — w_kv_b's k-half folds into q, its v-half into the
+    output — so per-step FLOPs/bytes scale with kv_lora, not H·Dh
+    (DeepSeek-V2 §2.1). Returns the attention output (B,S,H·v_dim)@wo."""
+    m = cfg.mla
+    B, H, S, _ = q_nope.shape                              # S == 1
+    c_cache, r_cache = cache                               # (B,Sc,kv_lora),(B,Sc,rope)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora, H, m.nope_dim + m.v_dim)
+    wk = wkv_b[..., :m.nope_dim]                           # (kv_lora,H,nope)
+    wv = wkv_b[..., m.nope_dim:]                           # (kv_lora,H,v)
+
+    # absorb: q_lat = q_nope @ wk^T  → (B,H,S,kv_lora)
+    q_lat = jnp.einsum("bhsn,lhn->bhsl", q_nope, wk)
+    scale = 1.0 / math.sqrt(m.nope_dim + m.rope_dim)
+    s_lat = jnp.einsum("bhsl,bcl->bhsc", q_lat.astype(jnp.float32),
+                       c_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhsr,bcr->bhsc", q_rope.astype(jnp.float32),
+                        r_cache.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale                           # (B,H,S,Sc)
+    Sc = c_cache.shape[1]
+    mask = jnp.arange(Sc)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    pr = jnp.where(jnp.isnan(pr), 0.0, pr)
+    o_lat = jnp.einsum("bhsc,bcl->bhsl", pr, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bhsl,lhv->bhsv", o_lat.astype(q_nope.dtype), wv)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_dim)
+    return dense(o, p["wo"])
+
+
+def _mla_attn_decode(p, x, cfg: LMConfig, positions, cache, kv_len):
+    """Convenience: project one token then attend against the latent cache."""
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, positions)
+    o = _mla_attn_core(p, q_nope, q_rope, cache, kv_len, cfg)
+    return o, (c_kv_new, k_rope_new)
+
+
+# -- layer body / scan ----------------------------------------------------------
+
+
+def _ffn(p, x, cfg: LMConfig):
+    if cfg.moe is not None:
+        if cfg.moe_impl == "ep":
+            from repro.models.moe_ep import ep_moe_ffn
+            return ep_moe_ffn(p, x, cfg.moe,
+                              batch_axes=tuple(cfg.ep_batch_axes))
+        return moe_ffn(p, x, cfg.moe)
+    if cfg.ffn_act == "gelu":
+        from repro.models.common import gelu_mlp
+        return gelu_mlp(p, x), jnp.float32(0.0)
+    return swiglu_mlp(p, x), jnp.float32(0.0)
+
+
+def _rope(x, positions, cfg: LMConfig):
+    """RoPE over the first rope_pct fraction of the head dim (partial
+    rotary, stablelm-style); pass-through tail dims."""
+    D = x.shape[-1]
+    rd = int(D * cfg.rope_pct)
+    rd -= rd % 2
+    if rd == D:
+        return apply_rope(x, positions, theta=cfg.rope_theta)
+    head = apply_rope(x[..., :rd], positions, theta=cfg.rope_theta)
+    return jnp.concatenate([head, x[..., rd:]], axis=-1)
+
+
+def _layer(p, x, cfg: LMConfig, positions, *, decode_cache=None, kv_len=None):
+    """Pre-norm block. Returns (x, aux, cache_entry)."""
+    h = rms_norm(x, p["ln1"])
+    if cfg.mla is not None:
+        if decode_cache is not None:
+            a, entry = _mla_attn_decode(p["attn"], h, cfg, positions,
+                                        decode_cache, kv_len)
+        else:
+            a, entry = _mla_attn_full(p["attn"], h, cfg, positions)
+    else:
+        a, entry = _gqa_attn(p["attn"], h, cfg, positions,
+                             kv_len=kv_len, cache_kv=decode_cache)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    f, aux = _ffn(p["ffn"], h, cfg)
+    return x + f, aux, entry
+
+
+def _maybe_remat(body, cfg):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return body
+    policy = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_saveable,
+        "dots_with_no_batch_dims_saveable":
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(body, policy=policy)
+
+
+def lm_forward(params, tokens, cfg: LMConfig, *, positions=None):
+    """tokens (B,S) int32 → (logits (B,S,V), aux scalar)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]                           # (B,S,d)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        y, aux, _ = _layer(lp, x, cfg, positions)
+        return y, aux
+
+    body = _maybe_remat(body, cfg)
+    x, auxes = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    logits = dense(x, params["unembed"])
+    return logits, jnp.sum(auxes)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """batch = {tokens (B,S), labels (B,S) int32, -1 = ignore}."""
+    logits, aux = lm_forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    n = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / n
+    total = loss + cfg.aux_loss_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# -- serving: prefill + decode ------------------------------------------------------
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    """Abstract/zero cache pytree. GQA: k/v (L,B,Hkv,S,Dh); MLA: latent."""
+    L = cfg.n_layers
+    S = min(max_len, cfg.window) if cfg.window is not None else max_len
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((L, batch, S, m.kv_lora), cfg.dtype),
+            "krope": jnp.zeros((L, batch, S, m.rope_dim), cfg.dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, S, cfg.dh), cfg.dtype),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, S, cfg.dh), cfg.dtype),
+    }
+
+
+def cache_spec(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: make_cache(cfg, batch, max_len))
+
+
+def _cache_slots(cfg: LMConfig, max_len: int) -> int:
+    return min(max_len, cfg.window) if cfg.window is not None else max_len
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, *, max_len: int):
+    """tokens (B,S) → (last-token logits (B,V), cache filled to S)."""
+    B, S = tokens.shape
+    slots = _cache_slots(cfg, max_len)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens]
+
+    def body(x, lp):
+        y, _, entry = _layer(lp, x, cfg, positions)
+        return y, entry
+
+    body = _maybe_remat(body, cfg)
+    x, entries = jax.lax.scan(body, x, params["layers"],
+                              unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = dense(x, params["unembed"])[:, 0]            # (B,V)
+
+    # Lay entries into the cache, ring-truncated to the last `slots` tokens.
+    # Ring invariant shared with lm_decode: position p lives at slot
+    # p % slots — for the kept positions [S-take, S) that is a circular
+    # roll by (S - take) % slots. (take == slots whenever the roll is
+    # nonzero, so padding and rolling never interact.)
+    take = min(S, slots)
+    shift = (S - take) % slots
+    if cfg.mla is not None:
+        ckv, krope = entries                              # (L,B,S,*)
+        cache = {
+            "ckv": _ring(_fit(ckv[:, :, S - take:], slots, axis=2), shift, 2),
+            "krope": _ring(_fit(krope[:, :, S - take:], slots, axis=2),
+                           shift, 2),
+        }
+    else:
+        k, v = entries                                    # (L,B,Hkv,S,Dh)
+        cache = {
+            "k": _ring(_fit(k[:, :, :, S - take:], slots, axis=3), shift, 3),
+            "v": _ring(_fit(v[:, :, :, S - take:], slots, axis=3), shift, 3),
+        }
+    return logits, cache
+
+
+def _ring(x, shift: int, axis: int) -> jax.Array:
+    return jnp.roll(x, shift, axis=axis) if shift else x
+
+
+def _fit(x, slots: int, *, axis: int) -> jax.Array:
+    """Pad (or keep) x so the cache axis has exactly `slots` entries."""
+    cur = x.shape[axis]
+    if cur == slots:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, slots - cur)
+    return jnp.pad(x, pad)
+
+
+def lm_decode(params, cache, token, pos, cfg: LMConfig):
+    """One decode step.
+
+    token (B,1) int32; pos () int32 — absolute position of `token`.
+    Returns (logits (B,V), updated cache). Ring-buffer caches (SWA) wrap
+    writes mod window; attention masks to min(pos+1, slots) valid entries.
+    """
+    B = token.shape[0]
+    x = params["embed"][token]                            # (B,1,d)
+    positions = pos[None].astype(jnp.int32)
+    if cfg.mla is not None:
+        slots = cache["ckv"].shape[2]
+    else:
+        slots = cache["k"].shape[3]
+    slot = (pos % slots).astype(jnp.int32)
+    kv_len = jnp.minimum(pos + 1, slots).astype(jnp.int32)
+
+    # Each layer writes its token's k/v (or latent) into its cache slot
+    # *before* attending, so the query sees itself; kv_len includes the slot.
+    if cfg.mla is not None:
+        xs = (params["layers"], cache["ckv"], cache["krope"])
+
+        def body(x, layer_in):
+            lp, ckv_l, kr_l = layer_in
+            h = rms_norm(x, lp["ln1"])
+            q_nope, q_rope, c_new, r_new = _mla_qkv(lp["attn"], h, cfg, positions)
+            ckv_l = jax.lax.dynamic_update_slice(
+                ckv_l, c_new.astype(ckv_l.dtype), (0, slot, 0))
+            kr_l = jax.lax.dynamic_update_slice(
+                kr_l, r_new.astype(kr_l.dtype), (0, slot, 0))
+            a = _mla_attn_core(lp["attn"], q_nope, q_rope, (ckv_l, kr_l),
+                               kv_len, cfg)
+            x = x + a
+            h2 = rms_norm(x, lp["ln2"])
+            f, _ = _ffn(lp["ffn"], h2, cfg)
+            return x + f, (ckv_l, kr_l)
+    else:
+        xs = (params["layers"], cache["k"], cache["v"])
+
+        def body(x, layer_in):
+            lp, k_l, v_l = layer_in
+            h = rms_norm(x, lp["ln1"])
+            a, (k_new, v_new) = _gqa_attn_decode_write(
+                lp["attn"], h, cfg, positions, k_l, v_l, slot, kv_len)
+            x = x + a
+            h2 = rms_norm(x, lp["ln2"])
+            f, _ = _ffn(lp["ffn"], h2, cfg)
+            return x + f, (k_new, v_new)
+
+    x, new_entries = jax.lax.scan(body, x, xs,
+                                  unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    logits = dense(x, params["unembed"])[:, 0]
+
+    if cfg.mla is not None:
+        new_cache = {"ckv": new_entries[0], "krope": new_entries[1]}
+    else:
+        new_cache = {"k": new_entries[0], "v": new_entries[1]}
+    return logits, new_cache
+
+
+def _gqa_attn_decode_write(p, x, cfg: LMConfig, positions, k_cache, v_cache,
+                           slot, kv_len):
+    """Project one token's q/k/v, write k/v into the cache slot, attend."""
+    B, S, d = x.shape                                     # S == 1
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = dense(x, p["wq"]).reshape(B, S, H, Dh)
+    k = dense(x, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = dense(x, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = _rope(q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh), positions,
+              cfg).reshape(B, H, S, Dh)
+    k = _rope(k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh), positions,
+              cfg).reshape(B, Hkv, S, Dh)
+    v = v.transpose(0, 2, 1, 3)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, 0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, 0, slot, 0))
+    o = attention(q, k_cache, v_cache, causal=False, kv_len=kv_len,
+                  block_q=cfg.attn_block_q, unroll=cfg.unroll)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+    return dense(o, p["wo"]), (k_cache, v_cache)

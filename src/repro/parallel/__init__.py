@@ -1,0 +1,9 @@
+"""Mesh-axis sharding rules (DP/TP/EP/SP + pod) and collective helpers."""
+
+from repro.parallel.sharding import (ShardRules, gnn_rules,
+                                     hierarchical_psum, lm_rules,
+                                     param_shardings, param_specs,
+                                     recsys_rules, tree_named)
+
+__all__ = ["ShardRules", "gnn_rules", "hierarchical_psum", "lm_rules",
+           "param_shardings", "param_specs", "recsys_rules", "tree_named"]

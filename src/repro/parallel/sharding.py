@@ -1,0 +1,154 @@
+"""Logical-axis → mesh-axis sharding rules (DP / TP / EP / SP + pod axis).
+
+Models declare parameters with *logical* axes (see repro.models.common);
+configs pick a :class:`ShardRules` mapping those names onto mesh axes. The
+same model lowers under any mesh by swapping rules — this is how the 40
+(arch × shape) dry-run cells share one model zoo.
+
+Conventions:
+
+* mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+  multi-pod (see repro.launch.mesh). ``pod`` is an outer data-parallel axis.
+* ``rules.mapping`` maps logical axis → mesh axis (or tuple of axes, or None
+  for replicated).
+* ``rules.batch`` lists the mesh axes the *batch* dimension of activations
+  shards over — ``("data",)`` or ``("pod", "data")``.
+* FSDP: mapping "embed" → "data" additionally shards the weight-stationary
+  dim over the data axis (ZeRO-3 style); XLA inserts the all-gathers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamDef, is_param_def
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRules:
+    """Logical→mesh mapping + batch axes."""
+
+    mapping: Mapping[str, Any]          # logical name -> mesh axis | tuple | None
+    batch: tuple[str, ...] = ("data",)
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.mapping.get(logical, None)
+
+    def spec(self, axes: Sequence[str | None]) -> P:
+        """PartitionSpec for one param's logical axes (duplicate mesh axes
+        after the first occurrence are dropped — a mesh axis can shard only
+        one dim)."""
+        used: set[str] = set()
+        out = []
+        for ax in axes:
+            m = self.resolve(ax)
+            if m is None:
+                out.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a not in used)
+            used.update(ms)
+            if not ms:
+                out.append(None)
+            elif len(ms) == 1:
+                out.append(ms[0])
+            else:
+                out.append(ms)
+        return P(*out)
+
+    def batch_spec(self, *trailing: Any) -> P:
+        """PartitionSpec with the batch dim sharded over rules.batch."""
+        lead = self.batch[0] if len(self.batch) == 1 else tuple(self.batch)
+        return P(lead, *trailing)
+
+    def with_pod(self) -> "ShardRules":
+        """Extend rules for the multi-pod mesh: pod joins the batch axes."""
+        if "pod" in self.batch:
+            return self
+        return dataclasses.replace(self, batch=("pod",) + tuple(self.batch))
+
+
+# Canonical rule sets ---------------------------------------------------------
+
+def lm_rules(*, fsdp: bool = False) -> ShardRules:
+    """Transformer TP: heads/mlp/vocab/experts on `model`; optional FSDP
+    (embed dim over `data`) for models whose replicated weights+optimizer
+    exceed per-chip HBM."""
+    return ShardRules(mapping={
+        "embed": "data" if fsdp else None,
+        "heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "rows": "model",
+        "kv_lora": None,
+        "layers": None,
+    })
+
+
+def recsys_rules() -> ShardRules:
+    """Row-sharded embedding tables (model-parallel lookup via shard_map);
+    dense towers replicated; batch over data."""
+    return ShardRules(mapping={
+        "rows": "model",
+        "embed": None,
+        "mlp": None,
+        "heads": None,
+        "vocab": "model",
+        "layers": None,
+    })
+
+
+def gnn_rules(*, shard_nodes: bool = False) -> ShardRules:
+    """Edges shard over `data`; weights replicated (they are tiny); node
+    states replicated (small graphs) or node-sharded (ogb_products)."""
+    return ShardRules(mapping={
+        "embed": None,
+        "mlp": "model",
+        "nodes": "data" if shard_nodes else None,
+        "edges": "data",
+        "layers": None,
+    })
+
+
+# Param / pytree shardings ----------------------------------------------------
+
+def param_specs(defs: Any, rules: ShardRules) -> Any:
+    """Tree of PartitionSpec matching a ParamDef tree."""
+    return jax.tree_util.tree_map(
+        lambda d: rules.spec(d.axes), defs, is_leaf=is_param_def)
+
+
+def param_shardings(defs: Any, mesh: Mesh, rules: ShardRules) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, rules.spec(d.axes)),
+        defs, is_leaf=is_param_def)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# Collective helpers -----------------------------------------------------------
+
+def hierarchical_psum(x, *, inner: str = "data", outer: str | None = None):
+    """Gradient reduction, pod-aware: reduce-scatter-free psum over the fast
+    in-pod axis first, then the slow cross-pod axis — keeps inter-pod traffic
+    to one reduced copy instead of raw gradients."""
+    y = jax.lax.psum(x, inner)
+    if outer is not None:
+        y = jax.lax.psum(y, outer)
+    return y

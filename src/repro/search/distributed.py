@@ -1,0 +1,251 @@
+"""Document-partitioned BM25 query evaluation over the device mesh.
+
+Paper §3: "separate Lambda instances are assigned to different partitions of
+the document collection. Given the prototype presented here, building out
+this design is mostly a matter of software engineering." — here it is, as a
+shard_map program: every device owns one document partition's packed index
+arrays (leading partition axis sharded over the whole mesh); a query fans
+out to all partitions, each evaluates BM25 locally (same stateless scoring
+fn as the single-partition searcher), and the k·P survivors are all-gathered
+and merged — the scatter-gather of repro.core.partition, on-device.
+
+idf is GLOBAL (computed over the whole corpus before partitioning), matching
+a correctly-built distributed index; doc ids return globally offset.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partition import local_topk, merge_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class DistSearchConfig:
+    """Static geometry of the partitioned index (per partition)."""
+
+    n_parts: int             # total partitions = product of mesh axes used
+    n_docs_local: int
+    n_blocks_local: int      # NB per partition
+    vocab: int
+    block: int = 128
+    max_terms: int = 16
+    max_blocks: int = 32     # impact-ordered truncation per term
+    k: int = 100
+    compact_ids: bool = False   # uint16 partition-local doc ids (perf)
+    fused_gather: bool = False  # one all-gather over (data,model) vs two
+
+
+def abstract_dist_state(cfg: DistSearchConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the partitioned index arrays."""
+    Pn, NB, B = cfg.n_parts, cfg.n_blocks_local, cfg.block
+    S = jax.ShapeDtypeStruct
+    did = jnp.uint16 if cfg.compact_ids else jnp.int32
+    assert not cfg.compact_ids or cfg.n_docs_local < 65535, \
+        "compact_ids needs n_docs_local < 2^16 - 1"
+    return {
+        "term_offsets": S((Pn, cfg.vocab + 1), jnp.int32),
+        "block_docs": S((Pn, NB, B), did),
+        "block_tf": S((Pn, NB, B), jnp.uint8),
+        "doc_len": S((Pn, cfg.n_docs_local + 1), jnp.float32),
+        "idf": S((cfg.vocab,), jnp.float32),
+        "params": S((3,), jnp.float32),          # k1, b, avgdl
+    }
+
+
+def dist_state_specs(axes: tuple[str, ...]) -> dict:
+    part = axes[0] if len(axes) == 1 else tuple(axes)
+    return {
+        "term_offsets": P(part, None),
+        "block_docs": P(part, None, None),
+        "block_tf": P(part, None, None),
+        "doc_len": P(part, None),
+        "idf": P(None),
+        "params": P(None),
+    }
+
+
+def _local_search(state: dict, term_ids, qtf, cfg: DistSearchConfig,
+                  axes: tuple[str, ...]):
+    """Per-device body: local BM25 over this partition, merged top-k out."""
+    to = state["term_offsets"][0]                  # (V+1,)
+    docs_b = state["block_docs"][0]                # (NB, B)
+    tf_b = state["block_tf"][0]
+    dl = state["doc_len"][0]                       # (n_docs_local+1,)
+    idf = state["idf"]
+    k1, b, avgdl = state["params"][0], state["params"][1], state["params"][2]
+    n_loc = cfg.n_docs_local
+    M = cfg.max_blocks
+
+    def one_query(tids, w):
+        tid = jnp.maximum(tids, 0)
+        off = to[tid]
+        n_blk = to[tid + 1] - off
+        m = jnp.arange(M, dtype=jnp.int32)
+        blk = off[:, None] + m[None, :]
+        valid = (m[None, :] < n_blk[:, None]) & (tids[:, None] >= 0)
+        blk = jnp.where(valid, blk, 0)
+        docs = docs_b[blk].astype(jnp.int32)       # (T, M, B)
+        tf = tf_b[blk]
+        dlv = dl[jnp.minimum(docs, n_loc)]
+        tff = tf.astype(jnp.float32)
+        denom = tff + k1 * (1.0 - b + b * dlv / avgdl)
+        imp = (idf[tid] * w)[:, None, None] * tff / denom
+        imp = jnp.where(valid[..., None] & (docs < n_loc) & (tf > 0), imp, 0.0)
+        acc = jnp.zeros(n_loc + 1, jnp.float32).at[
+            jnp.minimum(docs.reshape(-1), n_loc)].add(imp.reshape(-1))
+        return acc[:n_loc]
+
+    scores = jax.vmap(one_query)(term_ids, qtf)    # (Q, n_loc)
+    pid = jax.lax.axis_index(axes)                 # flattened partition id
+    base = (pid * n_loc).astype(jnp.int32)
+    ids = base + jnp.arange(n_loc, dtype=jnp.int32)
+    ids = jnp.broadcast_to(ids[None], scores.shape)
+    lv, li = local_topk(scores, ids, cfg.k)
+    if cfg.fused_gather:                   # one collective over all axes
+        gv = jax.lax.all_gather(lv, axes, axis=-1, tiled=True)
+        gi = jax.lax.all_gather(li, axes, axis=-1, tiled=True)
+    else:                                  # hierarchical: fast axis first
+        gv, gi = lv, li
+        for ax in axes:
+            gv = jax.lax.all_gather(gv, ax, axis=-1, tiled=True)
+            gi = jax.lax.all_gather(gi, ax, axis=-1, tiled=True)
+    return merge_topk(gv, gi, cfg.k)
+
+
+def make_dist_search_fn(cfg: DistSearchConfig, axes: tuple[str, ...] = ("data", "model")):
+    """Build the shard_map'd global search fn.
+
+    fn(state, term_ids (Q,T) i32, qtf (Q,T) f32) -> (scores (Q,k), ids (Q,k)),
+    replicated. Requires an ambient mesh (jax.set_mesh) whose `axes` sizes
+    multiply to cfg.n_parts — one partition per device."""
+    sspecs = dist_state_specs(axes)
+    body = functools.partial(_local_search, cfg=cfg, axes=axes)
+    inner = jax.shard_map(
+        body, mesh=None,
+        in_specs=(sspecs, P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+
+    def fn(state, term_ids, qtf):
+        mesh = jax.sharding.get_abstract_mesh()
+        n_dev = 1
+        for ax in axes:
+            n_dev *= mesh.shape[ax]
+        if cfg.n_parts != n_dev:
+            raise ValueError(
+                f"DistSearchConfig.n_parts={cfg.n_parts} must equal the mesh "
+                f"extent over {axes} ({n_dev}) — one partition per device")
+        return inner(state, term_ids, qtf)
+
+    return fn
+
+
+# -- host-side partitioned build (real arrays, for tests/examples) ----------------
+
+
+def partition_corpus(docs: list[tuple[str, str]], n_parts: int):
+    """Round-robin document partitioning; returns per-partition doc lists
+    with a global-id map (global id = part * n_local + local id)."""
+    per = -(-len(docs) // n_parts)
+    parts = []
+    for p in range(n_parts):
+        parts.append(docs[p * per: (p + 1) * per])
+    return parts, per
+
+
+def build_partitioned_state(docs: list[tuple[str, str]], n_parts: int,
+                            cfg_hint: dict | None = None):
+    """Build real partitioned arrays (small corpora — tests/examples).
+
+    Returns (state dict of np arrays, DistSearchConfig, vocab)."""
+    from collections import Counter
+    import math as _math
+
+    from repro.index.tokenizer import tokenize
+
+    parts, per = partition_corpus(docs, n_parts)
+    # global stats for idf/avgdl
+    all_toks = [tokenize(t) for _, t in docs]
+    n_docs = len(docs)
+    df: Counter = Counter()
+    for toks in all_toks:
+        df.update(set(toks))
+    vocab = {t: i for i, t in enumerate(sorted(df))}
+    V = len(vocab)
+    avgdl = float(np.mean([len(t) for t in all_toks])) if all_toks else 1.0
+    idf = np.zeros(V, np.float32)
+    for t, i in vocab.items():
+        idf[i] = _math.log(1.0 + (n_docs - df[t] + 0.5) / (df[t] + 0.5))
+
+    hint = cfg_hint or {}
+    B = hint.get("block", 128)
+    k1, b = hint.get("k1", 0.9), hint.get("b", 0.4)
+
+    # per-partition packing (impact-ordered blocks, like IndexWriter.pack)
+    per_to, per_docs, per_tf, per_dl = [], [], [], []
+    max_nb = 0
+    for pdocs in parts:
+        postings: dict[int, dict[int, int]] = {}
+        dl = np.ones(per + 1, np.float32)
+        for li, (_, text) in enumerate(pdocs):
+            toks = tokenize(text)
+            dl[li] = max(len(toks), 1)
+            for t, tf in Counter(toks).items():
+                postings.setdefault(vocab[t], {})[li] = min(tf, 255)
+        to = np.zeros(V + 1, np.int32)
+        bd, bt = [], []
+        for ti in range(V):
+            plist = postings.get(ti)
+            if not plist:
+                to[ti + 1] = to[ti]
+                continue
+            ds = np.fromiter(plist.keys(), np.int32)
+            ts = np.fromiter(plist.values(), np.int64)
+            imp = idf[ti] * ts / (ts + k1 * (1 - b + b * dl[ds] / avgdl))
+            order = np.argsort(-imp, kind="stable")
+            ds, ts = ds[order], ts[order]
+            nb = -(-len(ds) // B)
+            pad = nb * B - len(ds)
+            ds = np.concatenate([ds, np.full(pad, per, np.int32)])
+            ts = np.concatenate([np.minimum(ts, 255).astype(np.uint8),
+                                 np.zeros(pad, np.uint8)])
+            for j in range(nb):
+                bd.append(ds[j * B:(j + 1) * B])
+                bt.append(ts[j * B:(j + 1) * B])
+            to[ti + 1] = to[ti] + nb
+        per_to.append(to)
+        per_docs.append(np.stack(bd) if bd else np.zeros((0, B), np.int32))
+        per_tf.append(np.stack(bt) if bt else np.zeros((0, B), np.uint8))
+        per_dl.append(dl)
+        max_nb = max(max_nb, len(bd))
+
+    NB = max(max_nb, 1)
+    did = np.uint16 if hint.get("compact_ids") and per < 65535 else np.int32
+    state = {
+        "term_offsets": np.stack(per_to),
+        "block_docs": np.stack([
+            np.concatenate([d, np.full((NB - len(d), B), per, np.int32)])
+            for d in per_docs]).astype(did),
+        "block_tf": np.stack([
+            np.concatenate([t, np.zeros((NB - len(t), B), np.uint8)])
+            for t in per_tf]),
+        "doc_len": np.stack(per_dl),
+        "idf": idf,
+        "params": np.asarray([k1, b, avgdl], np.float32),
+    }
+    cfg = DistSearchConfig(
+        n_parts=n_parts, n_docs_local=per, n_blocks_local=NB, vocab=V,
+        block=B, k=hint.get("k", 10), max_terms=hint.get("max_terms", 16),
+        max_blocks=hint.get("max_blocks", 32),
+        compact_ids=bool(did == np.uint16),
+        fused_gather=bool(hint.get("fused_gather", False)))
+    return state, cfg, vocab

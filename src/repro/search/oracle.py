@@ -1,0 +1,46 @@
+"""Exact, dict-based BM25 — the correctness oracle for the JAX searcher.
+
+Implements the same Lucene BM25 variant as the builder (no (k1+1) numerator),
+with the same uint8 tf clamp, so the blocked JAX path must match to float
+tolerance whenever block truncation (M) does not drop postings.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter
+
+from repro.index.tokenizer import tokenize
+
+
+class OracleSearcher:
+    def __init__(self, docs: list[tuple[str, str]], *, k1: float = 0.9,
+                 b: float = 0.4) -> None:
+        self.k1, self.b = k1, b
+        self.doc_ids = [d for d, _ in docs]
+        self.doc_toks = [tokenize(t) for _, t in docs]
+        self.doc_len = [len(t) for t in self.doc_toks]
+        self.avgdl = sum(self.doc_len) / max(1, len(self.doc_len))
+        self.postings: dict[str, dict[int, int]] = {}
+        for i, toks in enumerate(self.doc_toks):
+            for t, tf in Counter(toks).items():
+                self.postings.setdefault(t, {})[i] = min(tf, 255)
+        self.n_docs = len(docs)
+
+    def idf(self, term: str) -> float:
+        df = len(self.postings.get(term, {}))
+        return math.log(1.0 + (self.n_docs - df + 0.5) / (df + 0.5))
+
+    def search(self, query: str, k: int = 10) -> list[tuple[int, float]]:
+        scores: dict[int, float] = {}
+        for term, qtf in Counter(tokenize(query)).items():
+            plist = self.postings.get(term)
+            if not plist:
+                continue
+            idf = self.idf(term)
+            for doc, tf in plist.items():
+                dl = self.doc_len[doc]
+                denom = tf + self.k1 * (1 - self.b + self.b * dl / self.avgdl)
+                scores[doc] = scores.get(doc, 0.0) + qtf * idf * tf / denom
+        ranked = sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
+        return ranked[:k]

@@ -1,0 +1,69 @@
+"""End-to-end Anlessini application assembly (Figure 1 of the paper).
+
+``build_search_app`` wires corpus → index → object store → FaaS runtime →
+gateway and returns the pieces; used by examples, benchmarks, and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.core.gateway import Gateway
+from repro.core.kvstore import KVStore
+from repro.core.object_store import Backend, ObjectStore
+from repro.core.refresh import AssetCatalog
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+from repro.index.builder import IndexWriter, write_segment
+from repro.search.searcher import SearchConfig, make_search_handler
+
+
+@dataclasses.dataclass
+class SearchApp:
+    store: ObjectStore
+    catalog: AssetCatalog
+    doc_store: KVStore
+    runtime: FaaSRuntime
+    gateway: Gateway
+    asset: str
+
+    def query(self, q: str, k: int = 10, *, t_arrival: float | None = None):
+        return self.gateway.request(
+            "GET", "/search", {"q": q, "k": k}, t_arrival=t_arrival)
+
+
+def index_corpus(docs: Iterable[tuple[str, str]], store: ObjectStore,
+                 doc_store: KVStore, *, asset: str = "index",
+                 version: str = "v1",
+                 global_stats: dict | None = None) -> AssetCatalog:
+    """The offline batch side: build, pack, publish (paper §3).
+
+    Pass ``global_stats`` (index.builder.compute_global_stats over the FULL
+    corpus) when these docs are one partition of a larger deployment."""
+    writer = IndexWriter(global_stats=global_stats)
+    for ext_id, text in docs:
+        writer.add(ext_id, text)
+        doc_store.put(ext_id, {"id": ext_id, "contents": text})
+    packed = writer.pack()
+    catalog = AssetCatalog(store)
+    catalog.publish(asset, version, write_segment(packed))
+    return catalog
+
+
+def build_search_app(
+    docs: Iterable[tuple[str, str]],
+    *,
+    runtime_config: RuntimeConfig | None = None,
+    search_config: SearchConfig | None = None,
+    backend: Backend | None = None,
+    asset: str = "index",
+) -> SearchApp:
+    store = ObjectStore(backend)
+    doc_store = KVStore()
+    catalog = index_corpus(docs, store, doc_store, asset=asset)
+    runtime = FaaSRuntime(runtime_config)
+    runtime.register(
+        "search", make_search_handler(catalog, doc_store, asset, search_config))
+    gateway = Gateway(runtime)
+    gateway.route("GET", "/search", "search")
+    return SearchApp(store, catalog, doc_store, runtime, gateway, asset)

@@ -1,0 +1,8 @@
+"""Training substrate: AdamW + schedules (optim), generic step builders
+(steps). No optax dependency — the optimizer is implemented here."""
+
+from repro.train.optim import OptConfig, adamw_init, adamw_update, schedule
+from repro.train.steps import init_train_state, make_eval_step, make_train_step
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "schedule",
+           "init_train_state", "make_eval_step", "make_train_step"]

@@ -1,0 +1,251 @@
+"""Serverless core: object store, directory cache, hydration, runtime,
+gateway, cost model, refresh — the paper's architecture invariants."""
+
+import threading
+
+import pytest
+
+from repro.core.cache import HydrationCache
+from repro.core.cost import (CostLedger, Invocation, PRICE_PER_GB_S,
+                             fungibility_check, paper_headline_cost)
+from repro.core.directory import RamDirectory, StoreDirectory
+from repro.core.gateway import Gateway
+from repro.core.object_store import (MemoryBackend, NoSuchKey, ObjectStore,
+                                     PreconditionFailed)
+from repro.core.refresh import AssetCatalog, PublishConflict, refresh_fleet
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+
+
+# -- object store -------------------------------------------------------------
+
+
+def test_store_put_get_etag_and_range():
+    s = ObjectStore()
+    m1 = s.put("a/b", b"hello world")
+    assert s.get("a/b") == b"hello world"
+    assert s.get("a/b", start=6, length=5) == b"world"
+    m2 = s.put("a/b", b"hello world")        # same content, same etag
+    assert m1.etag == m2.etag
+    with pytest.raises(NoSuchKey):
+        s.get("missing")
+
+
+def test_store_conditional_put():
+    s = ObjectStore()
+    meta = s.put("k", b"v1")
+    s.put("k", b"v2", if_etag=meta.etag)     # CAS with correct etag
+    with pytest.raises(PreconditionFailed):
+        s.put("k", b"v3", if_etag=meta.etag)  # stale etag rejected
+    with pytest.raises(PreconditionFailed):
+        s.put("new", b"x", if_etag="nonempty")  # create-if-absent semantics
+    s.put("new", b"x", if_etag="")
+
+
+def test_store_list_and_network_accounting():
+    s = ObjectStore()
+    for i in range(5):
+        s.put(f"p/{i}", bytes(100))
+    assert len(s.list("p/")) == 5
+    before = s.stats.sim_seconds
+    s.get("p/0")
+    assert s.stats.sim_seconds > before       # reads cost simulated time
+
+
+def test_multipart_visibility():
+    s = ObjectStore()
+    up = s.multipart("big")
+    up.write(b"aaa")
+    up.write(b"bbb")
+    assert "big" not in s                     # invisible until complete
+    up.complete()
+    assert s.get("big") == b"aaabbb"
+
+
+# -- directory + block cache -----------------------------------------------------
+
+
+def test_store_directory_block_cache():
+    s = ObjectStore()
+    s.put("idx/f.bin", bytes(range(256)) * 1024)       # 256 KiB
+    d = StoreDirectory(s, "idx", block_size=64 << 10)
+    inp = d.open_input("f.bin")
+    assert inp.length() == 256 * 1024
+    inp.seek(100)
+    first = inp.read_bytes(16)
+    gets_after_first = s.stats.gets
+    inp.seek(100)
+    assert inp.read_bytes(16) == first                 # warm: served from cache
+    assert s.stats.gets == gets_after_first
+    assert d.hits >= 1 and d.misses >= 1
+    d.drop_cache()
+    inp.seek(100)
+    inp.read_bytes(16)
+    assert s.stats.gets > gets_after_first             # cold again
+
+
+def test_directory_slice_and_reads():
+    d = RamDirectory({"x": b"0123456789abcdef"})
+    inp = d.open_input("x")
+    sl = inp.slice(4, 8)
+    assert sl.read_bytes(4) == b"4567"
+    assert sl.length() == 8
+
+
+# -- hydration cache ----------------------------------------------------------------
+
+
+def test_hydration_cache_warm_cold_and_eviction():
+    import numpy as np
+    cache = HydrationCache(capacity_bytes=1000)
+    calls = []
+
+    def hyd(tag, nbytes):
+        def f():
+            calls.append(tag)
+            return np.zeros(nbytes, np.uint8), 0.5
+        return f
+
+    a = cache.get_or_hydrate("A", "v1", hyd("A", 400))
+    assert cache.stats.misses == 1 and cache.stats.hydrate_seconds == 0.5
+    a2 = cache.get_or_hydrate("A", "v1", hyd("A", 400))
+    assert a2 is a and cache.stats.hits == 1 and calls == ["A"]
+    cache.get_or_hydrate("B", "v1", hyd("B", 400))
+    cache.get_or_hydrate("C", "v1", hyd("C", 400))     # evicts LRU (A)
+    assert cache.stats.evictions >= 1
+    assert ("A", "v1") not in cache
+    # version bump = new key (the §3 refresh path)
+    cache.get_or_hydrate("B", "v2", hyd("B2", 100))
+    assert ("B", "v2") in cache
+
+
+# -- cost model -----------------------------------------------------------------------
+
+
+def test_paper_headline_100k_queries_per_dollar():
+    assert abs(paper_headline_cost() - 100_000) < 100   # 2GB × 300ms
+
+
+def test_fungibility_paper_example():
+    a, b = fungibility_check(10, 10_000, 100, 1_000)
+    assert a == pytest.approx(b)
+
+
+def test_ledger_billing_quantum():
+    led = CostLedger()
+    led.charge(Invocation(memory_bytes=2 << 30, duration_s=0.0003))
+    # sub-millisecond bills at the 1 ms quantum
+    assert led.gb_seconds == pytest.approx(2 * 0.001)
+
+
+# -- FaaS runtime ----------------------------------------------------------------------
+
+
+def _echo_handler(cache, payload):
+    state = cache.get_or_hydrate("state", "v1",
+                                 lambda: ({"ready": True}, 0.2))
+    return {"echo": payload}, 0.01
+
+
+def test_runtime_cold_then_warm():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _echo_handler)
+    _, r1 = rt.invoke("f", 1)
+    assert r1.cold and r1.hydrate_s == pytest.approx(0.2)
+    _, r2 = rt.invoke("f", 2, t_arrival=rt.clock + 1)
+    assert not r2.cold and r2.hydrate_s == 0
+    assert r2.latency_s < r1.latency_s
+
+
+def test_runtime_scales_with_concurrency():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _echo_handler)
+    for _ in range(8):
+        rt.invoke("f", 0, t_arrival=0.0)      # simultaneous arrivals
+    assert rt.fleet_size == 8                 # one container per in-flight req
+
+
+def test_runtime_retry_on_instance_death():
+    rt = FaaSRuntime(RuntimeConfig(failure_rate=1.0, max_retries=2, seed=1))
+    rt.register("f", _echo_handler)
+    with pytest.raises(Exception):
+        rt.invoke("f", 0)
+    rt2 = FaaSRuntime(RuntimeConfig(failure_rate=0.5, max_retries=5, seed=3))
+    rt2.register("f", _echo_handler)
+    out, rec = rt2.invoke("f", 42)
+    assert out["echo"] == 42                  # eventually succeeds
+
+
+def test_runtime_hedging_cuts_tail():
+    slow_first = {"n": 0}
+
+    def handler(cache, payload):
+        slow_first["n"] += 1
+        return payload, (5.0 if slow_first["n"] == 1 else 0.01)
+
+    rt = FaaSRuntime(RuntimeConfig(hedge_after_s=0.1))
+    rt.register("f", handler)
+    _, rec = rt.invoke("f", 0)
+    assert rec.hedged
+    assert rec.latency_s < 5.0                # backup won
+
+
+def test_kill_instance_failover():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _echo_handler)
+    rt.invoke("f", 0)
+    assert rt.kill_instance()
+    out, rec = rt.invoke("f", 1, t_arrival=rt.clock + 1)
+    assert out["echo"] == 1 and rec.cold      # fresh container re-hydrated
+
+
+# -- gateway ----------------------------------------------------------------------------
+
+
+def test_gateway_routes_and_404():
+    rt = FaaSRuntime()
+    rt.register("f", _echo_handler)
+    gw = Gateway(rt)
+    gw.route("GET", "/search", "f")
+    r = gw.request("GET", "/search", {"q": "x"})
+    assert r.ok and r.body["echo"] == {"q": "x"}
+    assert gw.request("GET", "/nope").status == 404
+
+
+# -- versioned publish / refresh ----------------------------------------------------------
+
+
+def test_publish_switchover_and_conflict():
+    s = ObjectStore()
+    cat = AssetCatalog(s)
+    d1 = RamDirectory({"f": b"v1-data"})
+    cat.publish("index", "v1", d1)
+    assert cat.current_version("index") == "v1"
+    d2 = RamDirectory({"f": b"v2-data"})
+    cat.publish("index", "v2", d2)
+    assert cat.current_version("index") == "v2"
+    # old version still readable (rollback safety)
+    _, dir1 = cat.open("index", "v1")
+    assert dir1.open_input("f").read_all() == b"v1-data"
+    assert set(cat.versions("index")) == {"v1", "v2"}
+
+
+def test_refresh_fleet_invalidates_warm_instances():
+    s = ObjectStore()
+    cat = AssetCatalog(s)
+    cat.publish("index", "v1", RamDirectory({"f": b"v1"}))
+
+    def handler(cache, payload):
+        v = cat.current_version("index")
+        data = cache.get_or_hydrate(
+            "index", v,
+            lambda: (cat.open("index", v)[1].open_input("f").read_all(), 0.1))
+        return data.decode(), 0.01
+
+    rt = FaaSRuntime()
+    rt.register("f", handler)
+    out, _ = rt.invoke("f", None)
+    assert out == "v1"
+    cat.publish("index", "v2", RamDirectory({"f": b"v2"}))
+    refresh_fleet(rt, "index")
+    out, rec = rt.invoke("f", None, t_arrival=rt.clock + 0.5)
+    assert out == "v2" and rec.hydrate_s > 0   # re-hydrated new version

@@ -1,0 +1,179 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import (CostLedger, Invocation, PRICE_PER_GB_S,
+                             fungibility_check)
+
+
+# -- cost fungibility: the paper's central economic claim ------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(qps=st.floats(0.1, 1000), secs=st.floats(1, 1e5),
+       scale=st.floats(0.01, 100))
+def test_cost_fungibility(qps, secs, scale):
+    """qps × secs total queries cost the same under any (qps·s, secs/s)
+    reshaping — load shape is irrelevant under per-invocation billing."""
+    a, b = fungibility_check(qps, secs, qps * scale, secs / scale)
+    assert a == np.float64(b) or abs(a - b) <= 1e-9 * max(a, b, 1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(durations=st.lists(st.floats(0.001, 10.0), min_size=1, max_size=40),
+       mem_gb=st.integers(1, 8))
+def test_ledger_order_invariance(durations, mem_gb):
+    """Total cost is invariant to invocation order (associativity)."""
+    l1, l2 = CostLedger(), CostLedger()
+    for d in durations:
+        l1.charge(Invocation(mem_gb << 30, d))
+    for d in reversed(durations):
+        l2.charge(Invocation(mem_gb << 30, d))
+    assert l1.compute_dollars == np.float64(l2.compute_dollars) or \
+        abs(l1.compute_dollars - l2.compute_dollars) < 1e-12
+
+
+# -- partition/merge == global top-k (paper §3's correctness condition) -----------
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(8, 300), parts=st.integers(1, 8), k=st.integers(1, 10),
+       seed=st.integers(0, 2 ** 31))
+def test_partitioned_topk_equals_global(n, parts, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.normal(size=n).astype(np.float32)
+    # unique scores → unambiguous ranking
+    scores += np.arange(n) * 1e-6
+    bounds = np.linspace(0, n, parts + 1).astype(int)
+    survivors = []
+    for p in range(parts):
+        lo, hi = bounds[p], bounds[p + 1]
+        part = scores[lo:hi]
+        kk = min(k, len(part))
+        idx = np.argsort(-part)[:kk]
+        survivors.extend((part[i], lo + i) for i in idx)
+    survivors.sort(key=lambda t: -t[0])
+    got = [i for _, i in survivors[:k]]
+    want = list(np.argsort(-scores)[:min(k, n)])
+    assert got == want
+
+
+# -- sorted-accumulator == dense scatter accumulator --------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_docs=st.integers(4, 64), n_post=st.integers(1, 120),
+       seed=st.integers(0, 2 ** 31))
+def test_accumulators_agree(n_docs, n_post, seed):
+    from repro.search.bm25 import accumulate_dense, accumulate_sorted
+    rng = np.random.default_rng(seed)
+    docs = rng.integers(0, n_docs + 1, n_post).astype(np.int32)  # incl. pad
+    imp = np.where(docs < n_docs,
+                   rng.uniform(0.01, 5, n_post), 0.0).astype(np.float32)
+    k = min(10, n_docs)
+    dense_acc = accumulate_dense(jnp.asarray(docs), jnp.asarray(imp), n_docs)
+    dv, di = jax.lax.top_k(dense_acc, k)
+    sv, si = accumulate_sorted(jnp.asarray(docs), jnp.asarray(imp), n_docs, k)
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(dv), rtol=1e-5,
+                               atol=1e-5)
+    # ids agree wherever scores are positive & untied
+    dvn, svn = np.asarray(dv), np.asarray(sv)
+    for i in range(k):
+        if dvn[i] > 0 and (i == 0 or dvn[i] < dvn[i - 1] - 1e-6):
+            sc = np.asarray(dense_acc)
+            assert abs(sc[np.asarray(si)[i]] - dvn[i]) < 1e-5
+
+
+# -- embedding bag vs naive loop -----------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(v=st.integers(2, 50), d=st.integers(1, 16),
+       bags=st.lists(st.lists(st.integers(0, 49), max_size=6), min_size=1,
+                     max_size=8),
+       seed=st.integers(0, 2 ** 31))
+def test_embedding_bag_offsets_property(v, d, bags, seed):
+    from repro.models.embedding import embedding_bag
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    indices, offsets = [], []
+    for bag in bags:
+        offsets.append(len(indices))
+        indices.extend(i % v for i in bag)
+    if not indices:
+        indices = [0]
+        offsets = [0] + offsets[1:]
+    out = embedding_bag(jnp.asarray(table), jnp.asarray(indices, jnp.int32),
+                        jnp.asarray(offsets, jnp.int32), len(bags))
+    want = np.zeros((len(bags), d), np.float32)
+    for b, off in enumerate(offsets):
+        end = offsets[b + 1] if b + 1 < len(offsets) else len(indices)
+        for i in range(off, end):
+            want[b] += table[indices[i] % v]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+# -- searcher == oracle on random corpora ----------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_searcher_oracle_random_corpora(seed):
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.index.builder import IndexWriter
+    from repro.search.oracle import OracleSearcher
+    from repro.search.searcher import SearchConfig, Searcher
+    docs = synth_corpus(60, vocab=120, mean_len=20, seed=seed)
+    oracle = OracleSearcher(docs)
+    w = IndexWriter()
+    w.add_many(docs)
+    s = Searcher(w.pack(), SearchConfig(max_blocks=64, k=5))
+    for q in synth_queries(docs, 3, seed=seed + 1):
+        got = s.search_one(q, k=5)
+        want = oracle.search(q, k=5)
+        assert [g for g, _ in got] == [w_ for w_, _ in want]
+
+
+# -- LRU hydration-cache invariant -------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 8), st.integers(50, 400)),
+                    min_size=1, max_size=40))
+def test_cache_capacity_invariant(ops):
+    from repro.core.cache import HydrationCache
+    cap = 1000
+    cache = HydrationCache(cap)
+    for name, size in ops:
+        cache.get_or_hydrate(str(name), "v",
+                             lambda s=size: (np.zeros(s, np.uint8), 0.0))
+        # invariant: within capacity whenever more than one entry is held
+        if len(cache) > 1:
+            assert cache.used_bytes <= cap + 400  # at most one over-admit
+
+
+# -- ring-buffer cache: decode equals forward at arbitrary lengths -------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(extra=st.integers(1, 6), seed=st.integers(0, 100))
+def test_swa_ring_decode_property(extra, seed):
+    from repro.models.common import init_params
+    from repro.models.transformer import (LMConfig, lm_decode, lm_forward,
+                                          lm_param_defs, lm_prefill)
+    cfg = LMConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+                   d_ff=64, vocab=64, window=4, dtype=jnp.float32)
+    params = init_params(lm_param_defs(cfg), jax.random.PRNGKey(0))
+    S = 9
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, S + extra), 0, 64)
+    full, _ = lm_forward(params, toks, cfg)
+    _, cache = lm_prefill(params, toks[:, :S], cfg, max_len=S + extra)
+    for t in range(extra):
+        logits, cache = lm_decode(params, cache, toks[:, S + t:S + t + 1],
+                                  jnp.int32(S + t), cfg)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, S + t]), rtol=2e-2,
+                                   atol=2e-2)

@@ -1,0 +1,138 @@
+"""Search stack: JAX searcher vs exact oracle, accumulators, kernel path,
+end-to-end app, baseline comparison, distributed partitioned search."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.baselines.kvstore_search import KVPostingsIndex
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.index.builder import IndexWriter, read_segment, write_segment
+from repro.search.bm25 import SearchState, encode_queries, make_search_fn
+from repro.search.oracle import OracleSearcher
+from repro.search.searcher import SearchConfig, Searcher
+from repro.search.service import build_search_app
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(400, vocab=600, seed=7)
+
+
+@pytest.fixture(scope="module")
+def oracle(corpus):
+    return OracleSearcher(corpus)
+
+
+@pytest.fixture(scope="module")
+def packed(corpus):
+    w = IndexWriter()
+    w.add_many(corpus)
+    return w.pack()
+
+
+def _ids(hits):
+    return [h[0] for h in hits]
+
+
+@pytest.mark.parametrize("accumulator", ["dense", "sorted"])
+def test_searcher_matches_oracle(corpus, oracle, packed, accumulator):
+    cfg = SearchConfig(max_blocks=64, k=10, accumulator=accumulator)
+    s = Searcher(packed, cfg)
+    for q in synth_queries(corpus, 20, seed=3):
+        got = s.search_one(q)
+        want = oracle.search(q, k=10)
+        got_scores = {i: v for i, v in got}
+        for doc, score in want:
+            assert doc in got_scores
+            assert got_scores[doc] == pytest.approx(score, rel=2e-4)
+
+
+def test_kernel_path_matches_plain(corpus, packed):
+    plain = Searcher(packed, SearchConfig(k=10, use_kernel=False))
+    kern = Searcher(packed, SearchConfig(k=10, use_kernel=True,
+                                         use_topk_kernel=True))
+    for q in synth_queries(corpus, 10, seed=5):
+        a = plain.search_one(q)
+        b = kern.search_one(q)
+        assert _ids(a) == _ids(b)
+        np.testing.assert_allclose([v for _, v in a], [v for _, v in b],
+                                   rtol=1e-4)
+
+
+def test_impact_truncation_is_graceful(corpus, oracle, packed):
+    """With tiny max_blocks the top hit should usually survive (impact
+    ordering puts the highest-scoring docs in the first blocks)."""
+    s = Searcher(packed, SearchConfig(max_blocks=2, k=10))
+    hit = 0
+    queries = synth_queries(corpus, 20, seed=9)
+    for q in queries:
+        want = oracle.search(q, k=1)
+        if not want:
+            continue
+        got = _ids(s.search_one(q, k=10))
+        hit += want[0][0] in got
+    assert hit >= 0.8 * len(queries)
+
+
+def test_segment_roundtrip(packed):
+    d = write_segment(packed)
+    back = read_segment(d)
+    assert back.meta.n_docs == packed.meta.n_docs
+    np.testing.assert_array_equal(back.block_docs, packed.block_docs)
+    np.testing.assert_array_equal(back.term_offsets, packed.term_offsets)
+    np.testing.assert_allclose(back.idf, packed.idf)
+    assert back.vocab == packed.vocab
+
+
+def test_end_to_end_app(corpus, oracle):
+    app = build_search_app(corpus)
+    q = synth_queries(corpus, 1, seed=11)[0]
+    r = app.query(q, k=5)
+    assert r.ok
+    want = _ids(oracle.search(q, k=5))
+    assert r.body["ids"] == want
+    # raw documents fetched from the KV store (DynamoDB leg of Figure 1)
+    assert all(doc is not None and "contents" in doc for doc in r.body["docs"])
+    # cold first, warm after
+    r2 = app.query(q, k=5, t_arrival=app.runtime.clock + 1)
+    assert r2.record.hydrate_s == 0
+
+
+def test_kvstore_baseline_matches_ranking_but_slower(corpus, oracle):
+    kv = KVPostingsIndex()
+    kv.build(corpus)
+    app = build_search_app(corpus)
+    q = synth_queries(corpus, 1, seed=13)[0]
+    hits, kv_lat = kv.search(q, k=5)
+    assert _ids(hits) == _ids(oracle.search(q, k=5))
+    app.query(q)                                  # cold
+    r = app.query(q, t_arrival=app.runtime.clock + 1)   # warm
+    # Crane & Lin style per-query store traffic ≫ warm in-memory evaluation
+    assert kv_lat > r.record.exec_s
+
+
+def test_distributed_search_matches_oracle(corpus, oracle):
+    """Document-partitioned shard_map search == oracle on a 1×1 mesh ×4
+    logical partitions is covered in test_distributed; here: partition build
+    + the merged scoring math on a single device partitioning (n_parts=1)."""
+    from repro.search.distributed import (build_partitioned_state,
+                                          make_dist_search_fn)
+    state, cfg, vocab = build_partitioned_state(
+        corpus, 1, {"k": 10, "max_blocks": 64})
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    fn = make_dist_search_fn(cfg, ("data", "model"))
+    queries = synth_queries(corpus, 8, seed=17)
+    tids, qtf = encode_queries(vocab, queries, max_terms=cfg.max_terms)
+    with jax.set_mesh(mesh):
+        scores, ids = jax.jit(fn)(
+            jax.tree_util.tree_map(jax.numpy.asarray, state), tids, qtf)
+    for qi, q in enumerate(queries):
+        want = oracle.search(q, k=10)
+        got = [(int(i), float(v)) for v, i in zip(scores[qi], ids[qi])
+               if v > 0]
+        for (wd, ws), (gd, gs) in zip(want, got):
+            assert gs == pytest.approx(ws, rel=2e-4)
+            tied = any(abs(ws - w2) < 1e-5 for d2, w2 in want if d2 != wd)
+            assert wd == gd or tied

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (assignment deliverable): every assigned
+arch instantiates a REDUCED config of the same family and runs one real
+forward/train step on CPU, asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, build_cells, get_arch
+from repro.train.steps import init_train_state
+
+
+def _materialize_batch(abstract, key):
+    leaves, tdef = jax.tree_util.tree_flatten(abstract)
+    keys = jax.random.split(key, max(len(leaves), 2))
+    out = []
+    for l, k in zip(leaves, keys):
+        if jnp.issubdtype(l.dtype, jnp.integer):
+            out.append(jax.random.randint(k, l.shape, 0, 4).astype(l.dtype))
+        else:
+            out.append(jnp.abs(jax.random.normal(k, l.shape) * 0.05
+                               ).astype(l.dtype))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _materialize_params(abstract, key):
+    leaves, tdef = jax.tree_util.tree_flatten(abstract)
+    keys = jax.random.split(key, len(leaves))
+    out = [(jax.random.normal(k, l.shape) * 0.05).astype(l.dtype)
+           for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def _finite(tree) -> bool:
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating):
+            if not np.all(np.isfinite(np.asarray(l, np.float32))):
+                return False
+    return True
+
+
+_ALL_CELLS = [(arch, shape)
+              for arch in ASSIGNED
+              for shape in build_cells(arch, reduced=True)]
+
+
+@pytest.mark.parametrize("arch,shape", _ALL_CELLS,
+                         ids=[f"{a}-{s}" for a, s in _ALL_CELLS])
+def test_smoke_cell(arch, shape):
+    cell = build_cells(arch, reduced=True)[shape]
+    if cell.skip:
+        pytest.skip(cell.note)
+    key = jax.random.PRNGKey(0)
+    if cell.kind == "train":
+        state_abs, batch_abs = cell.args
+        params = _materialize_params(state_abs["params"], key)
+        state = init_train_state(params)
+        batch = _materialize_batch(batch_abs, jax.random.PRNGKey(1))
+        new_state, metrics = cell.fn(state, batch)
+        assert np.isfinite(float(metrics["loss"])), metrics
+        assert _finite(new_state["params"])
+        # parameters actually moved
+        before = jax.tree_util.tree_leaves(params)[0]
+        after = jax.tree_util.tree_leaves(new_state["params"])[0]
+        assert not np.allclose(np.asarray(before), np.asarray(after))
+    else:
+        args = [_materialize_params(a, jax.random.fold_in(key, i))
+                if i == 0 else
+                _materialize_batch(a, jax.random.fold_in(key, 100 + i))
+                for i, a in enumerate(cell.args)]
+        out = cell.fn(*args)
+        assert _finite(out)
+        # shape contract: outputs match the abstract eval_shape
+        want = jax.eval_shape(cell.fn, *cell.args)
+        got_leaves = jax.tree_util.tree_leaves(out)
+        want_leaves = jax.tree_util.tree_leaves(want)
+        assert len(got_leaves) == len(want_leaves)
+        for g, w in zip(got_leaves, want_leaves):
+            assert tuple(g.shape) == tuple(w.shape), (g.shape, w.shape)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_param_counts(arch):
+    """Full configs match the public parameter-count claims (±25%)."""
+    mod = get_arch(arch)
+    if mod.FAMILY == "lm":
+        cfg = mod.full_config()
+        n = cfg.param_count()
+        expected = {
+            "olmoe-1b-7b": 6.9e9, "deepseek-v2-236b": 236e9,
+            "starcoder2-3b": 3.0e9, "stablelm-3b": 2.8e9,
+            "h2o-danube-1.8b": 1.8e9,
+        }[arch]
+        assert abs(n - expected) / expected < 0.25, (arch, n, expected)
+        if arch == "olmoe-1b-7b":
+            assert abs(cfg.active_param_count() - 1.3e9) / 1.3e9 < 0.25
+        if arch == "deepseek-v2-236b":
+            assert abs(cfg.active_param_count() - 21e9) / 21e9 < 0.3
+    elif mod.FAMILY == "gnn":
+        assert mod.full_config().param_count() > 1e7     # ~30M processor
+    else:
+        assert mod.full_config().param_count() > 1e6
+
+
+def test_anlessini_reduced_cells_lower_on_host_mesh():
+    """The paper's own arch cell lowers on a 1×1 mesh (full check is the
+    512-device dry-run)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    cells = build_cells("anlessini", reduced=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cell = cells["serve_q1"]
+    fn, args, specs = cell.build(mesh)
+    sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                is_leaf=lambda x: isinstance(x, P))
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn, in_shardings=sh).lower(*args).compile()
+    assert compiled is not None
