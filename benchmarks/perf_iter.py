@@ -120,7 +120,7 @@ def build_variant_cell(arch: str, shape: str, over: dict):
             for ax in axes:
                 n_parts *= mesh.shape[ax]
             cfg = dataclasses.replace(an.full_config(n_parts), **over)
-            fn = make_dist_search_fn(cfg, axes)
+            fn = make_dist_search_fn(cfg, axes, mesh=mesh)
             Q = an.SHAPES[shape]["Q"]
             args = (abstract_dist_state(cfg),
                     SDS((Q, cfg.max_terms), _jnp.int32),

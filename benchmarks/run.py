@@ -9,6 +9,7 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
   B4  cost fungibility: 10 QPS × 10,000 s == 100 QPS × 1,000 s    (§2)
   B5  index size: ~700 MB for 8.8 M passages (bytes/doc parity)   (§2)
   B6  document partitioning scale-out (§3) — latency vs partitions
+  B6b micro-batched (Q>1) handler invocations — per-query amortization
   B7  batch reindex + zero-downtime switch-over (§3)
   B8  roofline summary over the dry-run artifacts (if present)
 
@@ -130,36 +131,61 @@ def bench_index_size(n_docs: int) -> None:
 
 def bench_partitions(n_docs: int, n_queries: int) -> None:
     print("\nB6: document partitioning (paper §3 scale-out path)")
-    from repro.core.kvstore import KVStore
-    from repro.core.object_store import ObjectStore
-    from repro.core.partition import ScatterGather
-    from repro.core.runtime import FaaSRuntime, RuntimeConfig
+    from repro.core.runtime import RuntimeConfig
     from repro.data.corpus import synth_corpus, synth_queries
-    from repro.search.distributed import partition_corpus
-    from repro.search.searcher import SearchConfig, make_search_handler
-    from repro.search.service import index_corpus
+    from repro.search.service import build_partitioned_search_app
 
     docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
     queries = synth_queries(docs, n_queries, seed=3)
     for p in (1, 2, 4):
-        parts, _ = partition_corpus(docs, p)
-        store, doc_store = ObjectStore(), KVStore()
-        runtime = FaaSRuntime(RuntimeConfig())
-        fns = []
-        for i, pd in enumerate(parts):
-            cat = index_corpus(pd, store, doc_store, asset=f"idx{i}")
-            runtime.register(f"s{i}", make_search_handler(
-                cat, doc_store, f"idx{i}", SearchConfig()))
-            fns.append(f"s{i}")
-        sg = ScatterGather(runtime, fns)
+        app = build_partitioned_search_app(
+            docs, n_parts=p, runtime_config=RuntimeConfig())
         lats = []
         for q in queries:
-            _, lat, _ = sg.search({"q": q, "k": 10}, 10,
-                                  t_arrival=runtime.clock + 0.05)
-            lats.append(lat)
-        emit(f"partitions_{p}_p50_ms",
+            r = app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                          fetch_docs=False)
+            lats.append(r.latency_s)
+        # new key: measured at the gateway (incl. proxy overhead, excl. doc
+        # fetch) — NOT comparable to pre-refactor partitions_{p}_p50_ms,
+        # which was raw scatter latency including per-partition doc fetch
+        emit(f"partitions_{p}_gw_p50_ms",
              round(float(np.median(lats)) * 1e3, 1), "ms",
-             f"fleet={runtime.fleet_size}")
+             f"fleet={app.runtime.fleet_size}")
+
+
+def bench_batched(n_docs: int, n_queries: int) -> None:
+    """Micro-batching: Q queries per invocation vs Q invocations.
+
+    The vmapped scoring fn evaluates the whole batch in one device call,
+    so per-query cost amortizes invocation + gateway overhead — the knob
+    the gateway uses to absorb concurrent traffic."""
+    print("\nB6b: batched (Q>1) handler invocations vs one-at-a-time")
+    from repro.core.runtime import RuntimeConfig
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.service import build_partitioned_search_app
+
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=4)
+    app = build_partitioned_search_app(
+        docs, n_parts=2, runtime_config=RuntimeConfig())
+    for Q in (1, 8):
+        batches = [queries[i:i + Q] for i in range(0, len(queries), Q)]
+        batches = [b for b in batches if len(b) == Q]
+        if not batches:                   # fewer queries than one Q-batch
+            emit(f"batchQ{Q}_per_query_ms", float("nan"), "ms/q",
+                 f"needs >= {Q} queries")
+            continue
+        app.query(batches[0], k=10, fetch_docs=False)     # warm + compile
+        n_inv0 = len(app.runtime.records)
+        lats = []
+        for b in batches:
+            r = app.query(b, k=10, t_arrival=app.runtime.clock + 0.05,
+                          fetch_docs=False)
+            lats.append(r.latency_s)
+        n_inv = len(app.runtime.records) - n_inv0
+        per_q = float(np.median(lats)) / Q
+        emit(f"batchQ{Q}_per_query_ms", round(per_q * 1e3, 2), "ms/q",
+             f"{n_inv} invocations for {len(batches) * Q} queries")
 
 
 def bench_refresh() -> None:
@@ -228,6 +254,7 @@ def main() -> None:
     bench_cost()
     bench_index_size(n_docs)
     bench_partitions(min(n_docs, 8_000), min(n_q, 100))
+    bench_batched(min(n_docs, 8_000), min(n_q, 64))
     bench_refresh()
     bench_roofline_summary()
 

@@ -25,7 +25,8 @@ from typing import Any, Callable
 
 import jax
 import numpy as np
-import orjson
+
+from repro.core import jsonutil as orjson   # orjson when installed
 
 from repro.core.directory import RamDirectory
 from repro.core.object_store import ObjectStore

@@ -67,7 +67,7 @@ def _search_cell(sname: str, Q: int, axes, reduced: bool) -> CellSpec:
         for ax in axes:
             n_parts *= mesh.shape[ax]
         cfg = reduced_config(n_parts) if reduced else full_config(n_parts)
-        fn = make_dist_search_fn(cfg, axes)
+        fn = make_dist_search_fn(cfg, axes, mesh=mesh)
         state = abstract_dist_state(cfg)
         args = (state, SDS((Q, cfg.max_terms), jnp.int32),
                 SDS((Q, cfg.max_terms), jnp.float32))

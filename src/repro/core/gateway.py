@@ -12,7 +12,7 @@ what the paper measures "from the browser".
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 from repro.core.runtime import FaaSRuntime, InvocationRecord
 
@@ -36,12 +36,21 @@ class Response:
         return 200 <= self.status < 300
 
 
+# A coordinator route fans one request out to several functions (e.g.
+# scatter-gather over partitions) and owns its own latency accounting:
+# (body, t_arrival) -> (result, latency_s, representative record | None).
+Coordinator = Callable[[Any, "float | None"],
+                       "tuple[Any, float, InvocationRecord | None]"]
+
+
 class Gateway:
     def __init__(self, runtime: FaaSRuntime) -> None:
         self.runtime = runtime
-        self._routes: dict[tuple[str, str], str] = {}
+        self._routes: dict[tuple[str, str], "str | Coordinator"] = {}
 
-    def route(self, method: str, path: str, fn: str) -> None:
+    def route(self, method: str, path: str, fn: "str | Coordinator") -> None:
+        """Map method+path to a runtime function name, or to a coordinator
+        callable that orchestrates several invocations (scatter-gather)."""
         self._routes[(method.upper(), path)] = fn
 
     def request(self, method: str, path: str, body: Any = None,
@@ -50,10 +59,17 @@ class Gateway:
         if fn is None:
             return Response(404, {"error": f"no route {method} {path}"}, 0.0)
         try:
-            result, rec = self.runtime.invoke(fn, body, t_arrival=t_arrival)
+            if callable(fn):
+                result, lat, rec = fn(body, t_arrival)
+            else:
+                result, rec = self.runtime.invoke(fn, body,
+                                                  t_arrival=t_arrival)
+                lat = rec.latency_s
         except Exception as e:  # Lambda error → 502 from the gateway
             return Response(502, {"error": str(e)}, GATEWAY_OVERHEAD_S)
-        return Response(200, result, rec.latency_s + GATEWAY_OVERHEAD_S, rec)
+        return Response(200, result, lat + GATEWAY_OVERHEAD_S, rec)
 
     def routes(self) -> list[tuple[str, str, str]]:
-        return [(m, p, f) for (m, p), f in sorted(self._routes.items())]
+        return [(m, p, f if isinstance(f, str)
+                 else getattr(f, "__name__", "<coordinator>"))
+                for (m, p), f in sorted(self._routes.items())]

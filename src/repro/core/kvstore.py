@@ -13,7 +13,7 @@ import dataclasses
 import threading
 from typing import Iterable, Mapping
 
-import orjson
+from repro.core import jsonutil as orjson   # orjson when installed
 
 
 class KVError(Exception):
@@ -28,6 +28,13 @@ class KVModel:
     batch_get_s: float = 0.010    # BatchGetItem round trip
     batch_max_items: int = 100    # DynamoDB BatchGetItem limit
     put_s: float = 0.006
+
+    def batch_get_cost(self, n_keys: int) -> float:
+        """Simulated seconds for a batch_get of n_keys — one round trip per
+        batch_max_items chunk, matching KVStore.batch_get's own accounting.
+        Callers that bill KV time into their latency use THIS, never a
+        hand-rolled formula."""
+        return -(-n_keys // self.batch_max_items) * self.batch_get_s
 
 
 @dataclasses.dataclass
@@ -72,6 +79,18 @@ class KVStore:
         if data is None:
             raise KVError(f"no item {key!r}")
         return orjson.loads(data)
+
+    def batch_get_billed(self, keys: Iterable[str]) -> tuple[dict[str, dict], float]:
+        """batch_get + the simulated seconds a caller bills into ITS latency.
+
+        The single source of the 'one deduped fetch, charged per
+        BatchGetItem chunk' rule used by the search handler and the
+        partitioned-app coordinator. Cost is charged per key ATTEMPTED —
+        missing keys still cost the round trip."""
+        keys = list(keys)
+        if not keys:
+            return {}, 0.0
+        return self.batch_get(keys), self.model.batch_get_cost(len(keys))
 
     def batch_get(self, keys: Iterable[str]) -> dict[str, dict]:
         """BatchGetItem semantics: missing keys silently absent; batches of

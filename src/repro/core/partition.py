@@ -67,7 +67,7 @@ def partitioned_topk(
     partition; doc ids are reconstructed as partition-local offsets shifted
     by the partition index so returned ids are global.
     """
-    from jax.experimental.shard_map import shard_map
+    from repro.parallel import compat
 
     def per_shard(query, *state):
         scores = score_fn(query, *state)
@@ -79,11 +79,10 @@ def partitioned_topk(
         return shard_topk_merge(scores, ids, k, axis_name)
 
     qspec = query_spec if query_spec is not None else P()
-    return shard_map(
-        per_shard, mesh=mesh,
+    return compat.shard_map(
+        per_shard, mesh,
         in_specs=(qspec,) + tuple(in_specs),
         out_specs=(P(), P()),
-        check_rep=False,
     )
 
 
@@ -92,9 +91,24 @@ def partitioned_topk(
 
 @dataclasses.dataclass
 class PartitionHit:
-    doc_id: int
+    doc_id: int              # partition-LOCAL internal id
     score: float
     partition: int
+    ext_id: str | None = None
+
+
+def _merge_hits(per_part: list[dict], k: int) -> list[PartitionHit]:
+    """Merge one query's per-partition result dicts into global top-k.
+
+    Ties break by (partition, local id) — i.e. ascending global id under
+    contiguous partitioning, matching the oracle's ordering."""
+    hits: list[PartitionHit] = []
+    for p, result in enumerate(per_part):
+        ext = result.get("ext_ids") or [None] * len(result["ids"])
+        for doc_id, score, e in zip(result["ids"], result["scores"], ext):
+            hits.append(PartitionHit(int(doc_id), float(score), p, e))
+    hits.sort(key=lambda h: (-h.score, h.partition, h.doc_id))
+    return hits[:k]
 
 
 class ScatterGather:
@@ -104,17 +118,38 @@ class ScatterGather:
         self.runtime = runtime
         self.fn_names = list(fn_names)
 
-    def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
-        all_hits: list[PartitionHit] = []
-        lat = 0.0
-        records = []
-        for p, fn in enumerate(self.fn_names):
-            # partitions execute concurrently on separate instances; latency
-            # is the max, not the sum (scatter-gather semantics)
-            result, rec = self.runtime.invoke(fn, payload, t_arrival=t_arrival)
+    def scatter(self, payload: Any, *, t_arrival: float | None = None):
+        """Invoke every partition fn at the SAME arrival instant.
+
+        Partitions execute concurrently on separate instances, so every
+        fan-out leg sees the fleet as it was at t_arrival — the runtime's
+        shared virtual clock advances only after the whole scatter — and
+        end-to-end latency is the max over partitions, not the sum.
+        Returns (per-partition results, latency_s, records)."""
+        t0 = self.runtime.clock if t_arrival is None else t_arrival
+        results, records = [], []
+        for fn in self.fn_names:
+            result, rec = self.runtime.invoke(fn, payload, t_arrival=t0)
+            results.append(result)
             records.append(rec)
-            lat = max(lat, rec.latency_s)
-            for doc_id, score in zip(result["ids"], result["scores"]):
-                all_hits.append(PartitionHit(int(doc_id), float(score), p))
-        all_hits.sort(key=lambda h: -h.score)
-        return all_hits[:k], lat, records
+        lat = max((r.latency_s for r in records), default=0.0)
+        return results, lat, records
+
+    def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
+        """Single-query scatter-gather: merged top-k hits."""
+        results, lat, records = self.scatter(payload, t_arrival=t_arrival)
+        return _merge_hits(results, k), lat, records
+
+    def search_batch(self, payload: Any, k: int, *,
+                     t_arrival: float | None = None):
+        """Micro-batched scatter-gather: ``payload["queries"]`` is a list;
+        every partition evaluates the whole batch in one invocation and the
+        per-query candidate sets merge independently. Returns
+        (list of per-query top-k hit lists, latency_s, records)."""
+        results, lat, records = self.scatter(payload, t_arrival=t_arrival)
+        n_q = len(payload["queries"])
+        merged = [
+            _merge_hits([r["results"][qi] for r in results], k)
+            for qi in range(n_q)
+        ]
+        return merged, lat, records

@@ -20,7 +20,7 @@ refreshed" story, with zero downtime (old version stays readable throughout).
 
 from __future__ import annotations
 
-import orjson
+from repro.core import jsonutil as orjson   # orjson when installed
 
 from repro.core.directory import Directory, StoreDirectory, copy_directory
 from repro.core.object_store import NoSuchKey, ObjectStore, PreconditionFailed

@@ -72,8 +72,9 @@ class InvocationRecord:
 class Instance:
     _ids = itertools.count()
 
-    def __init__(self, memory_bytes: int, now: float) -> None:
+    def __init__(self, memory_bytes: int, now: float, fn: str = "") -> None:
         self.id = next(Instance._ids)
+        self.fn = fn                  # Lambda pins environments per function
         self.cache = HydrationCache(memory_bytes)
         self.busy_until = now
         self.last_used = now
@@ -111,21 +112,38 @@ class FaaSRuntime:
             if i.alive and (now - i.last_used) <= cfg.idle_timeout_s
         ]
 
-    def _acquire(self, now: float) -> tuple[Instance, bool]:
-        """Find an idle warm instance, else provision a cold one."""
+    def _acquire(self, now: float, fn: str = "") -> tuple[Instance, bool]:
+        """Find an idle warm instance FOR THIS FUNCTION, else provision.
+
+        Lambda execution environments are per-function: an instance that
+        booted for function A is never handed a request for function B (a
+        partitioned fleet would otherwise thrash each other's hydration
+        caches). Within a function's pool, prefer the most-recently-used
+        idle instance (AWS's observed bin-packing; maximizes warmth)."""
         self._reap_idle(now)
-        idle = [i for i in self._instances if i.busy_until <= now]
+        idle = [i for i in self._instances
+                if i.busy_until <= now and i.fn == fn]
         if idle:
-            # prefer the most-recently-used (keeps the warm set small — this
-            # is AWS's observed bin-packing behaviour, and maximizes warmth)
             inst = max(idle, key=lambda i: i.last_used)
             return inst, False
         if len(self._instances) >= self.config.max_instances:
-            # throttled: wait for the earliest-free instance (429 + retry
-            # in real Lambda; modeled as queueing delay)
-            inst = min(self._instances, key=lambda i: i.busy_until)
-            return inst, False
-        inst = Instance(self.config.memory_bytes, now)
+            # throttled: wait for the earliest-free same-function instance
+            # (429 + retry in real Lambda; modeled as queueing delay)
+            pool = [i for i in self._instances if i.fn == fn]
+            if pool:
+                inst = min(pool, key=lambda i: i.busy_until)
+                return inst, False
+            # fleet is full of OTHER functions' environments: reclaim the
+            # earliest-free one and boot a fresh environment for this fn in
+            # its place (never hand fn a foreign instance's cache) — the
+            # request queues until the victim frees, then pays a cold boot.
+            victim = min(self._instances, key=lambda i: i.busy_until)
+            self._instances.remove(victim)
+            inst = Instance(self.config.memory_bytes, now, fn)
+            inst.busy_until = max(now, victim.busy_until)
+            self._instances.append(inst)
+            return inst, True
+        inst = Instance(self.config.memory_bytes, now, fn)
         self._instances.append(inst)
         return inst, True
 
@@ -167,7 +185,7 @@ class FaaSRuntime:
 
     def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int):
         cfg = self.config
-        inst, fresh = self._acquire(now)
+        inst, fresh = self._acquire(now, fn)
         queue_wait = max(0.0, inst.busy_until - now)
         t_start = now + queue_wait
         cold_boot = cfg.provision_s if fresh else 0.0
@@ -184,33 +202,44 @@ class FaaSRuntime:
         cold = fresh or hydrate_s > 0
 
         duration = cold_boot + hydrate_s + exec_s
+        # the primary occupies its instance for its FULL execution, win or
+        # lose the hedge race — mark it busy now so a backup request can
+        # never be "concurrently" placed on this same instance.
+        inst.busy_until = t_start + duration
+        inst.last_used = inst.busy_until
+        inst.invocations += 1
 
         # Straggler hedging: if this execution ran past the hedge threshold,
         # fire a backup request on a second instance and take the faster.
         hedged = False
+        result_duration = duration         # what the CALLER waits for
         if cfg.hedge_after_s is not None and exec_s > cfg.hedge_after_s:
-            inst2, fresh2 = self._acquire(t_start + cfg.hedge_after_s)
-            hyd2_before = inst2.cache.stats.hydrate_seconds
-            result2, exec2_s = self._handlers[fn](inst2.cache, payload)
-            hyd2 = inst2.cache.stats.hydrate_seconds - hyd2_before
-            dur2 = cfg.hedge_after_s + (cfg.provision_s if fresh2 else 0.0) + hyd2 + exec2_s
-            if dur2 < duration:
-                result, duration = result2, dur2
-            inst2.busy_until = t_start + dur2
-            inst2.last_used = inst2.busy_until
-            inst2.invocations += 1
-            self.ledger.charge(Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2))
-            hedged = True
+            t_hedge = t_start + cfg.hedge_after_s
+            inst2, fresh2 = self._acquire(t_hedge, fn)
+            # a capped 1-instance fleet hands back the busy primary — there
+            # is no second instance to back up on, so don't pretend to hedge
+            if inst2 is not inst:
+                queue2 = max(0.0, inst2.busy_until - t_hedge)
+                hyd2_before = inst2.cache.stats.hydrate_seconds
+                result2, exec2_s = self._handlers[fn](inst2.cache, payload)
+                hyd2 = inst2.cache.stats.hydrate_seconds - hyd2_before
+                dur2 = (cfg.hedge_after_s + queue2
+                        + (cfg.provision_s if fresh2 else 0.0) + hyd2 + exec2_s)
+                if dur2 < result_duration:
+                    result, result_duration = result2, dur2
+                inst2.busy_until = t_start + dur2
+                inst2.last_used = inst2.busy_until
+                inst2.invocations += 1
+                self.ledger.charge(
+                    Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2))
+                hedged = True
 
-        inst.busy_until = t_start + duration
-        inst.last_used = inst.busy_until
-        inst.invocations += 1
         self.clock = max(self.clock, inst.busy_until)
 
         self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s, cold))
         rec = InvocationRecord(
-            fn=fn, t_arrival=now, t_done=t_start + duration,
-            latency_s=queue_wait + duration, exec_s=exec_s,
+            fn=fn, t_arrival=now, t_done=t_start + result_duration,
+            latency_s=queue_wait + result_duration, exec_s=exec_s,
             hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
             retries=attempt, hedged=hedged,
         )

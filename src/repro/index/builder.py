@@ -33,7 +33,8 @@ import math
 from typing import Iterable, Mapping, Sequence
 
 import numpy as np
-import orjson
+
+from repro.core import jsonutil as orjson   # orjson when installed
 
 from repro.core.directory import Directory, RamDirectory
 from repro.index.tokenizer import tokenize
@@ -107,20 +108,40 @@ def compute_global_stats(docs: Iterable[tuple[str, str]]) -> dict:
             "df": dict(df)}
 
 
+def global_vocab(stats: dict) -> dict[str, int]:
+    """Deterministic corpus-global term→id map from compute_global_stats.
+
+    This ordering IS the cross-path term-id contract: the mesh state's
+    shared ``term_offsets``/``idf`` indexing and the fleet handlers'
+    idf-ranked ``max_terms`` truncation both assume every partition was
+    packed against exactly this map."""
+    return {t: i for i, t in enumerate(sorted(stats["df"]))}
+
+
 class IndexWriter:
     """Accumulates documents, then packs. Offline batch side of paper §3.
 
     ``global_stats`` (from :func:`compute_global_stats`) overrides the
     local corpus statistics — required when this writer packs one
     partition of a document-partitioned deployment.
+
+    ``vocab`` fixes the term-id mapping (global term → id). Partitioned
+    deployments that evaluate queries against a SHARED id space (the
+    mesh-level path) pass the corpus-wide vocab so every partition's
+    ``term_offsets`` is indexed identically; terms absent from this
+    partition simply get zero blocks. With a fixed vocab an empty
+    partition packs to a valid zero-doc index (scatter-gather over a
+    corpus that does not divide evenly).
     """
 
     def __init__(self, *, k1: float = K1_DEFAULT, b: float = B_DEFAULT,
-                 block: int = BLOCK, global_stats: dict | None = None) -> None:
+                 block: int = BLOCK, global_stats: dict | None = None,
+                 vocab: dict[str, int] | None = None) -> None:
         self.k1 = k1
         self.b = b
         self.block = block
         self.global_stats = global_stats
+        self.vocab = vocab
         self._postings: dict[str, dict[int, int]] = {}   # term -> {doc: tf}
         self._doc_ids: list[str] = []
         self._doc_len: list[int] = []
@@ -143,10 +164,22 @@ class IndexWriter:
 
     def pack(self) -> PackedIndex:
         n_docs = len(self._doc_ids)
-        if n_docs == 0:
-            raise ValueError("empty index")
-        terms = sorted(self._postings)
-        vocab = {t: i for i, t in enumerate(terms)}
+        if self.vocab is not None:
+            vocab = dict(self.vocab)
+            uncovered = [t for t in self._postings if t not in vocab]
+            if uncovered:        # a stale vocab would silently lose postings
+                raise ValueError(
+                    f"{len(uncovered)} added term(s) missing from the fixed "
+                    f"vocab (e.g. {sorted(uncovered)[:5]}) — rebuild the "
+                    "global vocab before packing")
+            terms = [None] * len(vocab)
+            for t, i in vocab.items():
+                terms[i] = t
+        else:
+            if n_docs == 0:
+                raise ValueError("empty index")
+            terms = sorted(self._postings)
+            vocab = {t: i for i, t in enumerate(terms)}
         V = len(terms)
         avgdl = float(np.mean(self._doc_len)) if self._doc_len else 0.0
         gs = self.global_stats
@@ -164,8 +197,8 @@ class IndexWriter:
         B = self.block
         k1, b = self.k1, self.b
         for ti, term in enumerate(terms):
-            plist = self._postings[term]
-            local_df = len(plist)                    # postings in THIS shard
+            plist = self._postings.get(term) or {}   # {} when the term is
+            local_df = len(plist)                    # global-vocab-only here
             df = gs["df"].get(term, local_df) if gs else local_df  # global
             idf[ti] = math.log(1.0 + (stat_docs - df + 0.5) / (df + 0.5))
             docs = np.fromiter(plist.keys(), dtype=np.int32, count=local_df)

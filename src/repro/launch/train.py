@@ -24,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from repro.parallel import compat
 from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
 from repro.configs import get_arch
 from repro.core.object_store import FilesystemBackend, ObjectStore
@@ -113,7 +114,7 @@ def main() -> int:
     bspec = {"tokens": rules.batch_spec(None), "labels": rules.batch_spec(None)}
     bshard = tree_named(mesh, bspec)
 
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         jstep = jax.jit(step_fn, in_shardings=(shardings, bshard),
                         donate_argnums=(0,))
 

@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.parallel import compat
 
 
 def embedding_lookup(table: jax.Array, idx: jax.Array) -> jax.Array:
@@ -48,12 +49,11 @@ def sharded_lookup_shardmap(mesh, table, idx, *, axis_name: str = "model",
     """Explicit mod-sharded lookup: table rows on `axis_name`, batch on
     `batch_axis`; output batch-sharded, feature-replicated."""
     bspec = P(batch_axis) if batch_axis else P()
-    fn = shard_map(
+    fn = compat.shard_map(
         lambda t, i: sharded_lookup_local(t, i, axis_name),
-        mesh=mesh,
+        mesh,
         in_specs=(P(axis_name, None), bspec),
         out_specs=bspec,
-        check_rep=False,
     )
     return fn(table, idx)
 

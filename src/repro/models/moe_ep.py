@@ -98,12 +98,13 @@ def _ep_local(router, wg, wi, wo, shared, x, *, cfg: MoEConfig,
 
 
 def ep_moe_ffn(p, x, cfg: MoEConfig, *, ep_axis: str = "model",
-               batch_axes: tuple[str, ...] = ("data",)):
+               batch_axes: tuple[str, ...] = ("data",), mesh=None):
     """x (B, S, d) → (y, aux). Requires an ambient mesh (jax.set_mesh) whose
-    axes include `ep_axis` and `batch_axes`, and E % mesh[ep_axis] == 0."""
+    axes include `ep_axis` and `batch_axes`, and E % mesh[ep_axis] == 0 —
+    or pass ``mesh`` explicitly (required on JAX without ambient meshes)."""
     if x.ndim == 2:                                        # (T, d) → (T, 1, d)
         y, aux = ep_moe_ffn(p, x[:, None, :], cfg, ep_axis=ep_axis,
-                            batch_axes=batch_axes)
+                            batch_axes=batch_axes, mesh=mesh)
         return y[:, 0, :], aux
 
     bax = batch_axes[0] if len(batch_axes) == 1 else tuple(batch_axes)
@@ -115,12 +116,12 @@ def ep_moe_ffn(p, x, cfg: MoEConfig, *, ep_axis: str = "model",
         shared = (p["shared_wg"], p["shared_wi"], p["shared_wo"])
         shared_specs = (P(), P(), P())
 
-    fn = jax.shard_map(
+    from repro.parallel import compat
+    fn = compat.shard_map(
         functools.partial(_ep_local, cfg=cfg, ep_axis=ep_axis,
                           batch_axes=tuple(batch_axes)),
-        mesh=None,
+        mesh,
         in_specs=(P(), pspec_e, pspec_e, pspec_e, shared_specs, bspec),
         out_specs=(bspec, P()),
-        check_vma=False,
     )
     return fn(p["router"], p["wg"], p["wi"], p["wo"], shared, x)

@@ -318,9 +318,10 @@ def _sharded_vocab_topk(x, emb, bias, k: int, *, axis: str = "model"):
         mv, mi = jax.lax.top_k(gv, k)
         return mv, jnp.take_along_axis(gi, mi, axis=-1).astype(jnp.int32)
 
-    return jax.shard_map(local, mesh=None,
-                         in_specs=(P(), P(axis, None), P(axis)),
-                         out_specs=(P(), P()), check_vma=False)(x, emb, bias)
+    from repro.parallel import compat
+    return compat.shard_map(local, None,
+                            in_specs=(P(), P(axis, None), P(axis)),
+                            out_specs=(P(), P()))(x, emb, bias)
 
 
 def recsys_loss(params, batch, cfg: RecsysConfig):

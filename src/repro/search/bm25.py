@@ -108,6 +108,21 @@ def bm25_impacts(state: SearchState, term_ids: jax.Array, qtf: jax.Array,
     return jnp.where(valid & ~pad & (tf > 0), imp, 0.0)
 
 
+def score_dense(state: SearchState, term_ids: jax.Array, qtf: jax.Array,
+                *, max_blocks: int, use_kernel: bool = False) -> jax.Array:
+    """One query's dense (n_docs,) BM25 scores — THE scoring core.
+
+    gather → impacts → dense scatter-add, shared verbatim by the
+    single-node searcher (`make_search_fn`) and the per-partition body of
+    the mesh-level distributed path (`search.distributed._local_search`).
+    """
+    docs, tf, valid = gather_query_blocks(state, term_ids, max_blocks)
+    docs = docs.astype(jnp.int32)        # block_docs may be uint16 (compact)
+    imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid,
+                       use_kernel=use_kernel)
+    return accumulate_dense(docs, imp, state.n_docs)
+
+
 # -- accumulation strategies ----------------------------------------------------
 
 
@@ -162,18 +177,25 @@ def make_search_fn(n_docs: int, *, max_terms: int, max_blocks: int, k: int,
     """
 
     def one_query(state: SearchState, term_ids, qtf):
-        docs, tf, valid = gather_query_blocks(state, term_ids, max_blocks)
-        imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid,
-                           use_kernel=use_kernel)
         if accumulator == "dense":
-            acc = accumulate_dense(docs, imp, n_docs)
+            acc = score_dense(state, term_ids, qtf, max_blocks=max_blocks,
+                              use_kernel=use_kernel)
+            kk = min(k, n_docs)          # a tiny partition may hold < k docs
             if use_topk_kernel:
                 from repro.kernels import ops as kops
-                vals, ids = kops.topk(acc, k)
+                vals, ids = kops.topk(acc, kk)
             else:
-                vals, ids = jax.lax.top_k(acc, k)
+                vals, ids = jax.lax.top_k(acc, kk)
+            if kk < k:                   # pad to the (Q, k) contract
+                vals = jnp.concatenate([vals, jnp.zeros(k - kk, vals.dtype)])
+                ids = jnp.concatenate(
+                    [ids.astype(jnp.int32),
+                     jnp.full(k - kk, n_docs, jnp.int32)])
             return vals, ids.astype(jnp.int32)
         elif accumulator == "sorted":
+            docs, tf, valid = gather_query_blocks(state, term_ids, max_blocks)
+            imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid,
+                               use_kernel=use_kernel)
             return accumulate_sorted(docs, imp, n_docs, k)
         raise ValueError(f"unknown accumulator {accumulator!r}")
 
@@ -187,8 +209,14 @@ def make_search_fn(n_docs: int, *, max_terms: int, max_blocks: int, k: int,
 
 
 def encode_queries(vocab: dict[str, int], queries: list[str], *,
-                   max_terms: int) -> tuple[np.ndarray, np.ndarray]:
-    """Tokenize + map to term ids + qtf weights, padded to (Q, T)."""
+                   max_terms: int,
+                   idf: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Tokenize + map to term ids + qtf weights, padded to (Q, T).
+
+    When a query has more than ``max_terms`` distinct terms, pass ``idf`` to
+    keep the highest-idf (most selective) terms — long queries then degrade
+    by shedding stopword-ish terms instead of whatever dict order gives.
+    """
     from collections import Counter
 
     from repro.index.tokenizer import tokenize
@@ -199,6 +227,8 @@ def encode_queries(vocab: dict[str, int], queries: list[str], *,
     for qi, q in enumerate(queries):
         counts = Counter(tokenize(q))
         items = [(vocab[t], c) for t, c in counts.items() if t in vocab]
+        if idf is not None and len(items) > max_terms:
+            items.sort(key=lambda tc: -float(idf[tc[0]]))
         items = items[:max_terms]
         for j, (tid, c) in enumerate(items):
             tids[qi, j] = tid

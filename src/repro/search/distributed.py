@@ -5,9 +5,15 @@ the document collection. Given the prototype presented here, building out
 this design is mostly a matter of software engineering." — here it is, as a
 shard_map program: every device owns one document partition's packed index
 arrays (leading partition axis sharded over the whole mesh); a query fans
-out to all partitions, each evaluates BM25 locally (same stateless scoring
-fn as the single-partition searcher), and the k·P survivors are all-gathered
-and merged — the scatter-gather of repro.core.partition, on-device.
+out to all partitions, each evaluates BM25 locally (the SAME scoring core,
+``repro.search.bm25.score_dense``, as the single-partition searcher), and
+the k·P survivors are all-gathered and merged — the scatter-gather of
+repro.core.partition, on-device.
+
+This module contains no BM25 math and no packing code of its own: scoring
+lives in ``search/bm25.py``, impact-ordered block packing in
+``index/builder.py`` (one ``IndexWriter`` per partition with global stats),
+and this file only wires partitions to mesh axes.
 
 idf is GLOBAL (computed over the whole corpus before partitioning), matching
 a correctly-built distributed index; doc ids return globally offset.
@@ -25,6 +31,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import local_topk, merge_topk
+from repro.parallel import compat
+from repro.search.bm25 import SearchState, score_dense
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,39 +82,29 @@ def dist_state_specs(axes: tuple[str, ...]) -> dict:
 
 def _local_search(state: dict, term_ids, qtf, cfg: DistSearchConfig,
                   axes: tuple[str, ...]):
-    """Per-device body: local BM25 over this partition, merged top-k out."""
-    to = state["term_offsets"][0]                  # (V+1,)
-    docs_b = state["block_docs"][0]                # (NB, B)
-    tf_b = state["block_tf"][0]
-    dl = state["doc_len"][0]                       # (n_docs_local+1,)
-    idf = state["idf"]
-    k1, b, avgdl = state["params"][0], state["params"][1], state["params"][2]
-    n_loc = cfg.n_docs_local
-    M = cfg.max_blocks
+    """Per-device body: local BM25 over this partition, merged top-k out.
 
-    def one_query(tids, w):
-        tid = jnp.maximum(tids, 0)
-        off = to[tid]
-        n_blk = to[tid + 1] - off
-        m = jnp.arange(M, dtype=jnp.int32)
-        blk = off[:, None] + m[None, :]
-        valid = (m[None, :] < n_blk[:, None]) & (tids[:, None] >= 0)
-        blk = jnp.where(valid, blk, 0)
-        docs = docs_b[blk].astype(jnp.int32)       # (T, M, B)
-        tf = tf_b[blk]
-        dlv = dl[jnp.minimum(docs, n_loc)]
-        tff = tf.astype(jnp.float32)
-        denom = tff + k1 * (1.0 - b + b * dlv / avgdl)
-        imp = (idf[tid] * w)[:, None, None] * tff / denom
-        imp = jnp.where(valid[..., None] & (docs < n_loc) & (tf > 0), imp, 0.0)
-        acc = jnp.zeros(n_loc + 1, jnp.float32).at[
-            jnp.minimum(docs.reshape(-1), n_loc)].add(imp.reshape(-1))
-        return acc[:n_loc]
-
-    scores = jax.vmap(one_query)(term_ids, qtf)    # (Q, n_loc)
-    pid = jax.lax.axis_index(axes)                 # flattened partition id
-    base = (pid * n_loc).astype(jnp.int32)
-    ids = base + jnp.arange(n_loc, dtype=jnp.int32)
+    The scoring itself is the unified core (`bm25.score_dense`) applied to
+    this device's partition slice; only the global-id offset and the
+    survivor all-gather are mesh-specific.
+    """
+    local = SearchState(
+        term_offsets=state["term_offsets"][0],     # (V+1,)
+        block_docs=state["block_docs"][0],         # (NB, B)
+        block_tf=state["block_tf"][0],
+        doc_len=state["doc_len"][0],               # (n_docs_local+1,)
+        idf=state["idf"],
+        avgdl=state["params"][2],
+        k1=state["params"][0],
+        b=state["params"][1],
+        n_docs=cfg.n_docs_local,
+    )
+    scores = jax.vmap(
+        lambda t, w: score_dense(local, t, w, max_blocks=cfg.max_blocks)
+    )(term_ids, qtf)                               # (Q, n_docs_local)
+    pid = compat.flat_axis_index(axes)             # flattened partition id
+    base = (pid * cfg.n_docs_local).astype(jnp.int32)
+    ids = base + jnp.arange(cfg.n_docs_local, dtype=jnp.int32)
     ids = jnp.broadcast_to(ids[None], scores.shape)
     lv, li = local_topk(scores, ids, cfg.k)
     if cfg.fused_gather:                   # one collective over all axes
@@ -120,30 +118,42 @@ def _local_search(state: dict, term_ids, qtf, cfg: DistSearchConfig,
     return merge_topk(gv, gi, cfg.k)
 
 
-def make_dist_search_fn(cfg: DistSearchConfig, axes: tuple[str, ...] = ("data", "model")):
+def make_dist_search_fn(cfg: DistSearchConfig,
+                        axes: tuple[str, ...] = ("data", "model"),
+                        mesh: jax.sharding.Mesh | None = None):
     """Build the shard_map'd global search fn.
 
     fn(state, term_ids (Q,T) i32, qtf (Q,T) f32) -> (scores (Q,k), ids (Q,k)),
-    replicated. Requires an ambient mesh (jax.set_mesh) whose `axes` sizes
-    multiply to cfg.n_parts — one partition per device."""
+    replicated. Either pass ``mesh`` explicitly, or (on JAX versions with
+    ambient meshes) enter one via ``jax.set_mesh`` / ``compat.use_mesh``;
+    the mesh extent over `axes` must equal cfg.n_parts — one partition per
+    device."""
     sspecs = dist_state_specs(axes)
     body = functools.partial(_local_search, cfg=cfg, axes=axes)
-    inner = jax.shard_map(
-        body, mesh=None,
+    inner = compat.shard_map(
+        body, mesh,
         in_specs=(sspecs, P(None, None), P(None, None)),
         out_specs=(P(None, None), P(None, None)),
-        check_vma=False,
     )
 
-    def fn(state, term_ids, qtf):
-        mesh = jax.sharding.get_abstract_mesh()
+    def _check_extent(shape: dict) -> None:
         n_dev = 1
         for ax in axes:
-            n_dev *= mesh.shape[ax]
+            n_dev *= shape[ax]
         if cfg.n_parts != n_dev:
             raise ValueError(
                 f"DistSearchConfig.n_parts={cfg.n_parts} must equal the mesh "
                 f"extent over {axes} ({n_dev}) — one partition per device")
+
+    def fn(state, term_ids, qtf):
+        if mesh is not None:
+            _check_extent(dict(mesh.shape))
+        elif hasattr(jax.sharding, "get_abstract_mesh"):
+            _check_extent(dict(jax.sharding.get_abstract_mesh().shape))
+        else:
+            ambient = compat.ambient_mesh()
+            if ambient is not None:       # else compat.shard_map raises
+                _check_extent(dict(ambient.shape))
         return inner(state, term_ids, qtf)
 
     return fn
@@ -153,8 +163,8 @@ def make_dist_search_fn(cfg: DistSearchConfig, axes: tuple[str, ...] = ("data", 
 
 
 def partition_corpus(docs: list[tuple[str, str]], n_parts: int):
-    """Round-robin document partitioning; returns per-partition doc lists
-    with a global-id map (global id = part * n_local + local id)."""
+    """Contiguous-chunk document partitioning; returns per-partition doc
+    lists with a global-id map (global id = part * n_local + local id)."""
     per = -(-len(docs) // n_parts)
     parts = []
     for p in range(n_parts):
@@ -162,90 +172,89 @@ def partition_corpus(docs: list[tuple[str, str]], n_parts: int):
     return parts, per
 
 
+def stack_partitions(packs: list, n_docs_local: int,
+                     cfg_hint: dict | None = None) -> tuple[dict, "DistSearchConfig"]:
+    """PackedIndex-per-partition → stacked partitioned-state adapter.
+
+    Stacks per-partition :class:`repro.index.builder.PackedIndex` arrays
+    (all built against one global vocab + global stats) along a leading
+    partition axis, padding each partition's blocks/doc_len to the common
+    NB / n_docs_local extents. Padding entries carry tf=0 so the scoring
+    core masks them; the packing itself (impact ordering, block layout,
+    BM25 constants) has exactly one source of truth: ``IndexWriter.pack``.
+    """
+    hint = cfg_hint or {}
+    V = packs[0].term_offsets.shape[0] - 1
+    B = packs[0].meta.block
+    m0 = packs[0].meta
+    for p in packs[1:]:       # packs must share vocab + global BM25 stats,
+        m = p.meta            # or partition 0's idf/params silently win
+        if (p.term_offsets.shape[0] - 1 != V or m.block != B
+                or (m.k1, m.b, m.avgdl) != (m0.k1, m0.b, m0.avgdl)
+                or not np.array_equal(p.idf, packs[0].idf)):
+            raise ValueError(
+                "heterogeneous partition packs — build every partition with "
+                "the same IndexWriter(vocab=global_vocab(stats), "
+                "global_stats=stats)")
+    NB = max(max(p.meta.n_blocks for p in packs), 1)
+    compact = bool(hint.get("compact_ids")) and n_docs_local < 65535
+    did = np.uint16 if compact else np.int32
+
+    block_docs = np.stack([
+        np.concatenate([
+            p.block_docs,
+            np.full((NB - p.meta.n_blocks, B), p.meta.n_docs, np.int32)])
+        for p in packs]).astype(did)
+    block_tf = np.stack([
+        np.concatenate([
+            p.block_tf, np.zeros((NB - p.meta.n_blocks, B), np.uint8)])
+        for p in packs])
+    doc_len = np.ones((len(packs), n_docs_local + 1), np.float32)
+    for i, p in enumerate(packs):
+        doc_len[i, :p.meta.n_docs] = p.doc_len[:p.meta.n_docs]
+
+    meta = packs[0].meta
+    state = {
+        "term_offsets": np.stack([p.term_offsets for p in packs]),
+        "block_docs": block_docs,
+        "block_tf": block_tf,
+        "doc_len": doc_len,
+        "idf": packs[0].idf,               # global stats ⇒ identical per part
+        "params": np.asarray([meta.k1, meta.b, meta.avgdl], np.float32),
+    }
+    cfg = DistSearchConfig(
+        n_parts=len(packs), n_docs_local=n_docs_local, n_blocks_local=NB,
+        vocab=V, block=B, k=hint.get("k", 10),
+        max_terms=hint.get("max_terms", 16),
+        max_blocks=hint.get("max_blocks", 32),
+        compact_ids=compact,
+        fused_gather=bool(hint.get("fused_gather", False)))
+    return state, cfg
+
+
 def build_partitioned_state(docs: list[tuple[str, str]], n_parts: int,
                             cfg_hint: dict | None = None):
     """Build real partitioned arrays (small corpora — tests/examples).
 
-    Returns (state dict of np arrays, DistSearchConfig, vocab)."""
-    from collections import Counter
-    import math as _math
-
-    from repro.index.tokenizer import tokenize
-
-    parts, per = partition_corpus(docs, n_parts)
-    # global stats for idf/avgdl
-    all_toks = [tokenize(t) for _, t in docs]
-    n_docs = len(docs)
-    df: Counter = Counter()
-    for toks in all_toks:
-        df.update(set(toks))
-    vocab = {t: i for i, t in enumerate(sorted(df))}
-    V = len(vocab)
-    avgdl = float(np.mean([len(t) for t in all_toks])) if all_toks else 1.0
-    idf = np.zeros(V, np.float32)
-    for t, i in vocab.items():
-        idf[i] = _math.log(1.0 + (n_docs - df[t] + 0.5) / (df[t] + 0.5))
+    Per partition: one ``IndexWriter`` packing against the corpus-global
+    vocab and ``compute_global_stats`` (idf/avgdl), then
+    :func:`stack_partitions` adapts the PackedIndexes to the shard_map
+    state layout. Returns (state dict of np arrays, DistSearchConfig,
+    vocab)."""
+    from repro.index.builder import (IndexWriter, compute_global_stats,
+                                     global_vocab)
 
     hint = cfg_hint or {}
-    B = hint.get("block", 128)
-    k1, b = hint.get("k1", 0.9), hint.get("b", 0.4)
-
-    # per-partition packing (impact-ordered blocks, like IndexWriter.pack)
-    per_to, per_docs, per_tf, per_dl = [], [], [], []
-    max_nb = 0
+    parts, per = partition_corpus(docs, n_parts)
+    gstats = compute_global_stats(docs)
+    vocab = global_vocab(gstats)
+    packs = []
     for pdocs in parts:
-        postings: dict[int, dict[int, int]] = {}
-        dl = np.ones(per + 1, np.float32)
-        for li, (_, text) in enumerate(pdocs):
-            toks = tokenize(text)
-            dl[li] = max(len(toks), 1)
-            for t, tf in Counter(toks).items():
-                postings.setdefault(vocab[t], {})[li] = min(tf, 255)
-        to = np.zeros(V + 1, np.int32)
-        bd, bt = [], []
-        for ti in range(V):
-            plist = postings.get(ti)
-            if not plist:
-                to[ti + 1] = to[ti]
-                continue
-            ds = np.fromiter(plist.keys(), np.int32)
-            ts = np.fromiter(plist.values(), np.int64)
-            imp = idf[ti] * ts / (ts + k1 * (1 - b + b * dl[ds] / avgdl))
-            order = np.argsort(-imp, kind="stable")
-            ds, ts = ds[order], ts[order]
-            nb = -(-len(ds) // B)
-            pad = nb * B - len(ds)
-            ds = np.concatenate([ds, np.full(pad, per, np.int32)])
-            ts = np.concatenate([np.minimum(ts, 255).astype(np.uint8),
-                                 np.zeros(pad, np.uint8)])
-            for j in range(nb):
-                bd.append(ds[j * B:(j + 1) * B])
-                bt.append(ts[j * B:(j + 1) * B])
-            to[ti + 1] = to[ti] + nb
-        per_to.append(to)
-        per_docs.append(np.stack(bd) if bd else np.zeros((0, B), np.int32))
-        per_tf.append(np.stack(bt) if bt else np.zeros((0, B), np.uint8))
-        per_dl.append(dl)
-        max_nb = max(max_nb, len(bd))
-
-    NB = max(max_nb, 1)
-    did = np.uint16 if hint.get("compact_ids") and per < 65535 else np.int32
-    state = {
-        "term_offsets": np.stack(per_to),
-        "block_docs": np.stack([
-            np.concatenate([d, np.full((NB - len(d), B), per, np.int32)])
-            for d in per_docs]).astype(did),
-        "block_tf": np.stack([
-            np.concatenate([t, np.zeros((NB - len(t), B), np.uint8)])
-            for t in per_tf]),
-        "doc_len": np.stack(per_dl),
-        "idf": idf,
-        "params": np.asarray([k1, b, avgdl], np.float32),
-    }
-    cfg = DistSearchConfig(
-        n_parts=n_parts, n_docs_local=per, n_blocks_local=NB, vocab=V,
-        block=B, k=hint.get("k", 10), max_terms=hint.get("max_terms", 16),
-        max_blocks=hint.get("max_blocks", 32),
-        compact_ids=bool(did == np.uint16),
-        fused_gather=bool(hint.get("fused_gather", False)))
+        writer = IndexWriter(
+            k1=hint.get("k1", 0.9), b=hint.get("b", 0.4),
+            block=hint.get("block", 128),
+            global_stats=gstats, vocab=vocab)
+        writer.add_many(pdocs)
+        packs.append(writer.pack())
+    state, cfg = stack_partitions(packs, per, hint)
     return state, cfg, vocab

@@ -55,16 +55,32 @@ class Searcher:
         ))
 
     def search(self, queries: list[str]) -> tuple[np.ndarray, np.ndarray]:
-        tids, qtf = encode_queries(self.vocab, queries,
-                                   max_terms=self.config.max_terms)
+        # Pad the batch to the next power of two: the jitted fn specializes
+        # on Q, so micro-batched traffic compiles O(log max_batch) variants
+        # instead of one per distinct batch size.
+        Q = len(queries)
+        Qp = 1 << max(0, (Q - 1).bit_length())
+        tids, qtf = encode_queries(self.vocab, queries + [""] * (Qp - Q),
+                                   max_terms=self.config.max_terms,
+                                   idf=self.packed.idf)
         vals, ids = self._fn(self.state, tids, qtf)
-        return np.asarray(vals), np.asarray(ids)
+        return np.asarray(vals)[:Q], np.asarray(ids)[:Q]
+
+    def search_batch(self, queries: list[str],
+                     k: int | None = None) -> list[list[tuple[int, float]]]:
+        """Evaluate Q queries in ONE vmapped device call (the micro-batch
+        path); returns per-query [(internal_id, score), ...] hit lists."""
+        vals, ids = self.search(queries)
+        n = self.packed.meta.n_docs
+        out = []
+        for qi in range(len(queries)):
+            hits = [(int(i), float(v)) for v, i in zip(vals[qi], ids[qi])
+                    if i < n and v > 0]
+            out.append(hits[: (self.config.k if k is None else k)])
+        return out
 
     def search_one(self, query: str, k: int | None = None):
-        vals, ids = self.search([query])
-        hits = [(int(i), float(v)) for v, i in zip(vals[0], ids[0])
-                if i < self.packed.meta.n_docs and v > 0]
-        return hits[: (k or self.config.k)]
+        return self.search_batch([query], k)[0]
 
 
 def hydrate_searcher(catalog: AssetCatalog, asset: str,
@@ -87,6 +103,11 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
 
     The hydrated Searcher lives in the *instance's* HydrationCache — a warm
     instance skips straight to query evaluation (paper §2).
+
+    Payloads carry either ``q`` (one query → flat result) or ``queries``
+    (micro-batch → ``{"results": [...]}``, one vmapped device call for the
+    whole batch — how the gateway absorbs concurrent traffic without one
+    invocation per query).
     """
     cfg = config or SearchConfig()
 
@@ -99,22 +120,34 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
 
         searcher: Searcher = cache.get_or_hydrate(asset, version, _hydrate)
 
-        query = payload["q"]
+        batched = "queries" in payload
+        queries = list(payload["queries"]) if batched else [payload["q"]]
         k = int(payload.get("k", cfg.k))
         t0 = time.perf_counter()
-        hits = searcher.search_one(query, k)
+        batch_hits = searcher.search_batch(queries, k)
         exec_s = time.perf_counter() - t0
 
         ext = searcher.packed.meta.doc_ids
-        ids = [h[0] for h in hits]
-        raw = doc_store.batch_get([ext[i] for i in ids]) if payload.get(
-            "fetch_docs", True) else {}
-        exec_s += doc_store.model.batch_get_s if raw else 0.0
-        return {
-            "version": version,
-            "ids": ids,
-            "scores": [h[1] for h in hits],
-            "docs": [raw.get(ext[i]) for i in ids] if raw else [],
-        }, exec_s
+        fetch = payload.get("fetch_docs", True)
+        # ONE batched KV fetch for the whole micro-batch — the per-query
+        # round trip would otherwise eat the batching amortization
+        keys = dict.fromkeys(ext[h[0]] for hits in batch_hits for h in hits)
+        raw, fetch_s = doc_store.batch_get_billed(keys) if fetch else ({}, 0.0)
+        exec_s += fetch_s
+        results = []
+        for hits in batch_hits:
+            ids = [h[0] for h in hits]
+            ext_ids = [ext[i] for i in ids]
+            results.append({
+                "ids": ids,
+                "scores": [h[1] for h in hits],
+                "ext_ids": ext_ids,
+                "docs": [raw.get(e) for e in ext_ids] if raw else [],
+            })
+        if batched:
+            return {"version": version, "results": results}, exec_s
+        out = results[0]
+        out["version"] = version
+        return out, exec_s
 
     return handler

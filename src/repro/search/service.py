@@ -2,6 +2,13 @@
 
 ``build_search_app`` wires corpus → index → object store → FaaS runtime →
 gateway and returns the pieces; used by examples, benchmarks, and tests.
+
+``build_partitioned_search_app`` is the §3 scale-out assembly: the corpus
+splits into N partitions, each published as its own versioned segment
+(packed with GLOBAL idf/avgdl) and served by its own Lambda function;
+``/search`` fans out through ScatterGather and merges per-partition top-k
+into a globally-ranked result. Cold starts, hydration, refresh, and cost
+all account per partition in the shared runtime.
 """
 
 from __future__ import annotations
@@ -12,10 +19,22 @@ from typing import Iterable
 from repro.core.gateway import Gateway
 from repro.core.kvstore import KVStore
 from repro.core.object_store import Backend, ObjectStore
+from repro.core.partition import PartitionHit, ScatterGather
 from repro.core.refresh import AssetCatalog
-from repro.core.runtime import FaaSRuntime, RuntimeConfig
-from repro.index.builder import IndexWriter, write_segment
+from repro.core.runtime import FaaSRuntime, InvocationRecord, RuntimeConfig
+from repro.index.builder import (IndexWriter, compute_global_stats,
+                                 global_vocab, write_segment)
+from repro.search.distributed import partition_corpus
 from repro.search.searcher import SearchConfig, make_search_handler
+
+
+def _search_body(q: "str | list[str]", k: int, fetch_docs: bool) -> dict:
+    body = {"k": k, "fetch_docs": fetch_docs}
+    if isinstance(q, str):
+        body["q"] = q
+    else:
+        body["queries"] = list(q)         # micro-batch: one invocation
+    return body
 
 
 @dataclasses.dataclass
@@ -27,20 +46,26 @@ class SearchApp:
     gateway: Gateway
     asset: str
 
-    def query(self, q: str, k: int = 10, *, t_arrival: float | None = None):
+    def query(self, q: "str | list[str]", k: int = 10, *,
+              t_arrival: float | None = None, fetch_docs: bool = True):
         return self.gateway.request(
-            "GET", "/search", {"q": q, "k": k}, t_arrival=t_arrival)
+            "GET", "/search", _search_body(q, k, fetch_docs),
+            t_arrival=t_arrival)
 
 
 def index_corpus(docs: Iterable[tuple[str, str]], store: ObjectStore,
                  doc_store: KVStore, *, asset: str = "index",
                  version: str = "v1",
-                 global_stats: dict | None = None) -> AssetCatalog:
+                 global_stats: dict | None = None,
+                 vocab: dict[str, int] | None = None) -> AssetCatalog:
     """The offline batch side: build, pack, publish (paper §3).
 
     Pass ``global_stats`` (index.builder.compute_global_stats over the FULL
-    corpus) when these docs are one partition of a larger deployment."""
-    writer = IndexWriter(global_stats=global_stats)
+    corpus) — and the corpus-global ``vocab`` — when these docs are one
+    partition of a larger deployment: global idf/avgdl keep the merged
+    ranking build-invariant, and a shared vocab makes per-partition query
+    encoding (idf-ranked max_terms truncation) identical everywhere."""
+    writer = IndexWriter(global_stats=global_stats, vocab=vocab)
     for ext_id, text in docs:
         writer.add(ext_id, text)
         doc_store.put(ext_id, {"id": ext_id, "contents": text})
@@ -67,3 +92,142 @@ def build_search_app(
     gateway = Gateway(runtime)
     gateway.route("GET", "/search", "search")
     return SearchApp(store, catalog, doc_store, runtime, gateway, asset)
+
+
+# -- fleet-level partitioned app (paper §3's scale-out, assembled) -----------------
+
+
+@dataclasses.dataclass
+class PartitionedSearchApp:
+    """N document partitions behind one gateway route.
+
+    Global doc id = partition * n_docs_local + partition-local id (the
+    contiguous partitioning of ``partition_corpus``) — the same id space
+    the mesh-level path and the oracle rank in.
+    """
+
+    store: ObjectStore
+    catalog: AssetCatalog
+    doc_store: KVStore
+    runtime: FaaSRuntime
+    gateway: Gateway
+    scatter: ScatterGather
+    assets: list[str]
+    fn_names: list[str]
+    n_parts: int
+    n_docs_local: int
+    search_k: int = 10       # per-partition compiled top-k (SearchConfig.k)
+
+    def query(self, q: "str | list[str]", k: int = 10, *,
+              t_arrival: float | None = None, fetch_docs: bool = True):
+        """One query (str) or a micro-batch (list of str) through the
+        gateway; batches evaluate as ONE invocation per partition.
+
+        ``k`` is capped at the per-partition ``SearchConfig.k``: each
+        partition's jitted fn returns its top ``search_k`` candidates, so
+        merged ranks beyond that are not sound and are never returned."""
+        return self.gateway.request(
+            "GET", "/search", _search_body(q, k, fetch_docs),
+            t_arrival=t_arrival)
+
+    # -- the /search coordinator (Gateway → ScatterGather → merge) ---------------
+
+    def _global_id(self, hit: PartitionHit) -> int:
+        return hit.partition * self.n_docs_local + hit.doc_id
+
+    def _fetch_raw(self, merged: list[list[PartitionHit]],
+                   fetch_docs: bool) -> tuple[dict, float]:
+        """ONE batched KV fetch for the union of all merged hits — per-query
+        (or per-partition) round trips would defeat the batching. Charged
+        per BatchGetItem-sized chunk (the store's own accounting)."""
+        ext = dict.fromkeys(
+            h.ext_id for hits in merged for h in hits if h.ext_id is not None)
+        if not fetch_docs:
+            return {}, 0.0
+        return self.doc_store.batch_get_billed(ext)
+
+    def _materialize(self, hits: list[PartitionHit], raw: dict) -> dict:
+        ext_ids = [h.ext_id for h in hits]
+        return {
+            "ids": [self._global_id(h) for h in hits],
+            "scores": [h.score for h in hits],
+            "ext_ids": ext_ids,
+            "docs": [raw.get(e) for e in ext_ids] if raw else [],
+        }
+
+    def _search_route(self, body: dict, t_arrival: float | None
+                      ) -> tuple[dict, float, InvocationRecord | None]:
+        # a partition only surfaces its top search_k candidates — a merged
+        # rank past that could silently miss docs, so clamp rather than lie
+        k = min(int(body.get("k", self.search_k)), self.search_k)
+        fetch_docs = body.get("fetch_docs", True)
+        batched = "queries" in body
+        payload = {"k": k, "fetch_docs": False}
+        if batched:
+            payload["queries"] = list(body["queries"])
+            merged, lat, records = self.scatter.search_batch(
+                payload, k, t_arrival=t_arrival)
+            raw, fetch_s = self._fetch_raw(merged, fetch_docs)
+            result: dict = {"results": [self._materialize(hits, raw)
+                                        for hits in merged]}
+        else:
+            payload["q"] = body["q"]
+            hits, lat, records = self.scatter.search(
+                payload, k, t_arrival=t_arrival)
+            raw, fetch_s = self._fetch_raw([hits], fetch_docs)
+            result = self._materialize(hits, raw)
+        result["partitions"] = [
+            {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
+             "latency_s": r.latency_s} for r in records]
+        slowest = max(records, key=lambda r: r.latency_s, default=None) \
+            if records else None
+        return result, lat + fetch_s, slowest
+
+
+def build_partitioned_search_app(
+    docs: Iterable[tuple[str, str]],
+    n_parts: int = 4,
+    *,
+    runtime_config: RuntimeConfig | None = None,
+    search_config: SearchConfig | None = None,
+    backend: Backend | None = None,
+    asset_prefix: str = "index",
+) -> PartitionedSearchApp:
+    """Assemble the partitioned fleet: one segment + one Lambda function
+    per partition, global BM25 stats, scatter-gather behind ``/search``.
+
+    Every partition's segment is packed with ``compute_global_stats`` over
+    the FULL corpus — the distributed-IR invariant that makes the merged
+    ranking identical to a single-index build at any partition count.
+    """
+    docs = list(docs)
+    store = ObjectStore(backend)
+    doc_store = KVStore()
+    catalog = AssetCatalog(store)
+    runtime = FaaSRuntime(runtime_config)
+    gstats = compute_global_stats(docs)
+    # every partition packs against the corpus-global vocab: queries then
+    # encode (and idf-truncate, for > max_terms) identically per partition
+    gvocab = global_vocab(gstats)
+    parts, per = partition_corpus(docs, n_parts)
+    assets, fn_names = [], []
+    for p, pdocs in enumerate(parts):
+        if not pdocs:        # corpus didn't fill the last partition(s)
+            continue
+        asset = f"{asset_prefix}-p{p}"
+        index_corpus(pdocs, store, doc_store, asset=asset,
+                     global_stats=gstats, vocab=gvocab)
+        fn = f"search-p{p}"
+        runtime.register(fn, make_search_handler(
+            catalog, doc_store, asset, search_config))
+        assets.append(asset)
+        fn_names.append(fn)
+    scatter = ScatterGather(runtime, fn_names)
+    gateway = Gateway(runtime)
+    app = PartitionedSearchApp(
+        store=store, catalog=catalog, doc_store=doc_store, runtime=runtime,
+        gateway=gateway, scatter=scatter, assets=assets, fn_names=fn_names,
+        n_parts=n_parts, n_docs_local=per,
+        search_k=(search_config or SearchConfig()).k)
+    gateway.route("GET", "/search", app._search_route)
+    return app

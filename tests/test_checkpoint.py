@@ -121,16 +121,15 @@ def test_straggler_monitor_flags_tail():
 def test_checkpoint_restore_across_meshes():
     """Elastic rescale: save on one sharding, restore onto another."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh1 = jax.make_mesh((1,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.parallel import compat
+    mesh1 = compat.make_mesh((1,), ("data",))
     state = {"w": jax.device_put(
         np.arange(16, dtype=np.float32).reshape(4, 4),
         NamedSharding(mesh1, P("data", None)))}
     store = ObjectStore()
     mgr = CheckpointManager(store, "t", CheckpointConfig(async_save=False))
     mgr.save(1, state)
-    mesh2 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = compat.make_mesh((1, 1), ("data", "model"))
     sh2 = {"w": NamedSharding(mesh2, P(None, "model"))}
     back, _ = mgr.restore({"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
                           shardings=sh2)

@@ -28,14 +28,15 @@ def test_ep_moe_matches_oracle_on_4x2_mesh():
         from repro.models.moe import MoEConfig, moe_defs, moe_ffn_dense_oracle
         from repro.models.moe_ep import ep_moe_ffn
         from repro.models.common import init_params
+        from repro.parallel import compat
         cfg = MoEConfig(n_experts=8, top_k=2, d_model=16, d_ff=8, n_shared=1,
                         capacity_factor=8.0)
         params = init_params(moe_defs(cfg, jnp.float32), jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 16))
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
-            y, aux = jax.jit(lambda p, x: ep_moe_ffn(p, x, cfg))(params, x)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        with compat.use_mesh(mesh):
+            y, aux = jax.jit(
+                lambda p, x: ep_moe_ffn(p, x, cfg, mesh=mesh))(params, x)
         y_ref = moe_ffn_dense_oracle(params, x, cfg)
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=2e-5, atol=2e-5)
@@ -52,6 +53,7 @@ def test_sharded_train_step_matches_single_device():
         from repro.configs.cells import train_state_specs
         from repro.models.transformer import lm_loss, lm_param_defs
         from repro.models.common import init_params
+        from repro.parallel import compat
         from repro.parallel.sharding import lm_rules, tree_named
         from repro.train.optim import OptConfig
         from repro.train.steps import init_train_state, make_train_step
@@ -70,13 +72,12 @@ def test_sharded_train_step_matches_single_device():
         # single device
         s1, m1 = jax.jit(step)(state, batch)
         # sharded
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
         rules = lm_rules(fsdp=True)
         sh = tree_named(mesh, train_state_specs(defs, rules))
         bsh = tree_named(mesh, {"tokens": rules.batch_spec(None),
                                 "labels": rules.batch_spec(None)})
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             state2 = jax.device_put(init_train_state(
                 init_params(defs, jax.random.PRNGKey(0))), sh)
             batch2 = jax.device_put(batch, bsh)
@@ -94,6 +95,7 @@ def test_distributed_search_8_partitions_matches_oracle():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.data.corpus import synth_corpus, synth_queries
+        from repro.parallel import compat
         from repro.search.bm25 import encode_queries
         from repro.search.distributed import (build_partitioned_state,
                                               make_dist_search_fn)
@@ -102,12 +104,11 @@ def test_distributed_search_8_partitions_matches_oracle():
         oracle = OracleSearcher(docs)
         state, cfg, vocab = build_partitioned_state(docs, 8,
                                                     {"k": 10, "max_blocks": 64})
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        fn = make_dist_search_fn(cfg, ("data", "model"))
+        mesh = compat.make_mesh((4, 2), ("data", "model"))
+        fn = make_dist_search_fn(cfg, ("data", "model"), mesh=mesh)
         queries = synth_queries(docs, 10, seed=5)
         tids, qtf = encode_queries(vocab, queries, max_terms=cfg.max_terms)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             scores, ids = jax.jit(fn)(
                 jax.tree_util.tree_map(jnp.asarray, state), tids, qtf)
         for qi, q in enumerate(queries):
@@ -130,10 +131,9 @@ def test_elastic_reshard_across_mesh_shapes():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ft.faults import reshard_state
-        m1 = jax.make_mesh((8, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
-        m2 = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.parallel import compat
+        m1 = compat.make_mesh((8, 1), ("data", "model"))
+        m2 = compat.make_mesh((2, 4), ("data", "model"))
         x = np.arange(64, dtype=np.float32).reshape(8, 8)
         state = {"w": jax.device_put(x, NamedSharding(m1, P("data", None)))}
         new = reshard_state(state, {"w": NamedSharding(m2, P(None, "model"))})
@@ -150,17 +150,20 @@ def test_multipod_mesh_cell_lowering_smoke():
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import build_cells
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.parallel import compat
+        mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
         cells = build_cells("h2o-danube-1.8b", multi_pod=True, reduced=True)
         cell = cells["train_4k"]
         sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
                                     cell.in_specs,
                                     is_leaf=lambda x: isinstance(x, P))
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             compiled = jax.jit(cell.fn, in_shardings=sh,
                                donate_argnums=cell.donate
                                ).lower(*cell.args).compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):      # 0.4.x returns [dict], newer a dict
+            ca = ca[0]
+        assert ca["flops"] > 0
         print("ok")
     """)

@@ -160,11 +160,11 @@ def test_neighbor_sampler_subgraph_valid():
 
 def test_sharded_lookup_matches_take():
     from repro.models.embedding import sharded_lookup_shardmap
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     table = jax.random.normal(KEY, (64, 8))
     idx = jax.random.randint(jax.random.PRNGKey(5), (16,), 0, 64)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         got = sharded_lookup_shardmap(mesh, table, idx)
     np.testing.assert_allclose(np.asarray(got), np.asarray(table)[idx],
                                rtol=1e-6)

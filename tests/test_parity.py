@@ -1,0 +1,176 @@
+"""Parity suite: every BM25 evaluation path == the exact oracle.
+
+Four paths over ONE corpus and query set, all fed by the single scoring
+core in ``search/bm25.py`` and the single packer in ``index/builder.py``:
+
+    dense   Searcher, dense scatter-add accumulator
+    sorted  Searcher, sort/segment-sum accumulator
+    mesh    shard_map'd distributed path (1 partition on this host's mesh;
+            multi-device geometry is covered in test_distributed)
+    fleet   build_partitioned_search_app: N Lambda functions + ScatterGather
+            through the Gateway
+
+M·B (max_blocks × block) covers every posting of every query term, so each
+path must reproduce the oracle's scores to float tolerance — plus the
+distributed-IR invariant that the merged ranking is independent of the
+partition count (global idf/avgdl), and scatter-gather's latency model
+(max over partitions, not sum).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.oracle import OracleSearcher
+from repro.search.searcher import SearchConfig, Searcher
+from repro.search.service import build_partitioned_search_app
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # 300 docs / vocab 500: every term's postings fit 64 blocks × 128 lanes
+    return synth_corpus(300, vocab=500, seed=21)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return synth_queries(corpus, 12, seed=23)
+
+
+@pytest.fixture(scope="module")
+def oracle(corpus):
+    return OracleSearcher(corpus)
+
+
+def assert_matches_oracle(got, want, ctx=""):
+    """Scores rank-by-rank to float tolerance; ids equal unless score-tied."""
+    assert len(got) >= min(len(want), K), (ctx, len(got), len(want))
+    for r, ((wd, ws), (gd, gs)) in enumerate(zip(want, got)):
+        assert gs == pytest.approx(ws, rel=2e-4), (ctx, r, want[:5], got[:5])
+        tied = any(abs(ws - w2) < 1e-5 for d2, w2 in want if d2 != wd)
+        assert wd == gd or tied, (ctx, r, want[:8], got[:8])
+
+
+@pytest.fixture(scope="module")
+def packed(corpus):
+    from repro.index.builder import IndexWriter
+    w = IndexWriter()
+    w.add_many(corpus)
+    return w.pack()
+
+
+@pytest.mark.parametrize("accumulator", ["dense", "sorted"])
+def test_single_node_paths_match_oracle(packed, oracle, queries, accumulator):
+    s = Searcher(packed, SearchConfig(max_blocks=64, k=K,
+                                      accumulator=accumulator))
+    for q in queries:
+        assert_matches_oracle(s.search_one(q), oracle.search(q, k=K),
+                              ctx=(accumulator, q))
+
+
+def test_mesh_path_matches_oracle(corpus, oracle, queries):
+    from repro.parallel import compat
+    from repro.search.bm25 import encode_queries
+    from repro.search.distributed import (build_partitioned_state,
+                                          make_dist_search_fn)
+    n_parts = 1                      # host pytest process sees one device
+    state, cfg, vocab = build_partitioned_state(
+        corpus, n_parts, {"k": K, "max_blocks": 64})
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    fn = make_dist_search_fn(cfg, ("data", "model"), mesh=mesh)
+    tids, qtf = encode_queries(vocab, queries, max_terms=cfg.max_terms,
+                               idf=state["idf"])
+    with compat.use_mesh(mesh):
+        scores, ids = jax.jit(fn)(
+            jax.tree_util.tree_map(jax.numpy.asarray, state), tids, qtf)
+    for qi, q in enumerate(queries):
+        got = [(int(i), float(v)) for v, i in zip(scores[qi], ids[qi])
+               if v > 0]
+        assert_matches_oracle(got, oracle.search(q, k=K), ctx=("mesh", q))
+
+
+def test_fleet_path_matches_oracle_through_gateway(corpus, oracle, queries):
+    app = build_partitioned_search_app(corpus, n_parts=4)
+    for q in queries:
+        r = app.query(q, k=K)
+        assert r.ok, r.body
+        got = list(zip(r.body["ids"], r.body["scores"]))
+        assert_matches_oracle(got, oracle.search(q, k=K), ctx=("fleet", q))
+    # per-partition cold start + hydration recorded in the runtime ledger
+    cold = [rec for rec in app.runtime.records if rec.cold]
+    assert {rec.fn for rec in cold} == set(app.fn_names)
+    assert all(rec.hydrate_s > 0 for rec in cold)
+    assert app.runtime.ledger.invocations >= len(queries) * len(app.fn_names)
+
+
+def test_fleet_batched_queries_match_single(corpus, oracle, queries):
+    """A Q>1 micro-batch is ONE invocation per partition, same results."""
+    app = build_partitioned_search_app(corpus, n_parts=4)
+    n_before = len(app.runtime.records)
+    r = app.query(list(queries), k=K, fetch_docs=False)
+    assert r.ok, r.body
+    assert len(app.runtime.records) - n_before == len(app.fn_names)
+    assert len(r.body["results"]) == len(queries)
+    for q, res in zip(queries, r.body["results"]):
+        got = list(zip(res["ids"], res["scores"]))
+        assert_matches_oracle(got, oracle.search(q, k=K), ctx=("batch", q))
+
+
+def test_global_stats_invariant_across_partition_counts(corpus, queries):
+    """idf/avgdl AND the vocab are corpus-global: the merged ranking must
+    be bitwise stable under repartitioning (the §3 subtlety the one-core
+    build enforces by construction). Includes a query with far more than
+    max_terms distinct terms — idf truncation must select the SAME term
+    subset in every partition, which only holds with a shared vocab."""
+    long_q = " ".join(t for _, text in corpus[:8] for t in text.split()[:6])
+    qs = list(queries) + [long_q]
+    per_n = {}
+    for n in (1, 2, 4):
+        app = build_partitioned_search_app(corpus, n_parts=n)
+        r = app.query(qs, k=K, fetch_docs=False)
+        assert r.ok, r.body
+        per_n[n] = [
+            (tuple(res["ext_ids"]),
+             tuple(round(s, 6) for s in res["scores"]))
+            for res in r.body["results"]]
+    assert per_n[1] == per_n[2] == per_n[4]
+
+
+def test_scatter_gather_latency_is_max_not_sum(corpus, queries):
+    """All partitions fan out at the same arrival instant; end-to-end
+    latency is the slowest partition (+merge/fetch), never the sum."""
+    app = build_partitioned_search_app(corpus, n_parts=4)
+    r = app.query(queries[0], k=K)          # all-cold fan-out
+    lats = [p["latency_s"] for p in r.body["partitions"]]
+    assert len(lats) == 4 and min(lats) > 0
+    # every partition leg saw the same arrival time (un-mutated fleet)
+    assert len({rec.t_arrival for rec in app.runtime.records}) == 1
+    assert max(lats) <= r.latency_s < sum(lats)
+    # warm repeat, straight at the ScatterGather layer: latency == max leg
+    hits, lat, recs = app.scatter.search(
+        {"q": queries[0], "k": K, "fetch_docs": False}, K,
+        t_arrival=app.runtime.clock + 1.0)
+    assert hits and all(not rec.cold for rec in recs)
+    assert lat == max(rec.latency_s for rec in recs)
+    assert lat < sum(rec.latency_s for rec in recs)
+    assert len({rec.t_arrival for rec in recs}) == 1
+
+
+def test_long_query_truncation_keeps_high_idf_terms(corpus, packed):
+    """encode_queries sheds the LOWEST-idf terms when a query overflows
+    max_terms, so truncated evaluation tracks the full-query ranking."""
+    from repro.search.bm25 import encode_queries
+    # one long query from many docs' terms
+    long_q = " ".join(t for _, text in corpus[:6] for t in text.split()[:8])
+    tids, _ = encode_queries(packed.vocab, [long_q], max_terms=8,
+                             idf=packed.idf)
+    kept = [t for t in tids[0] if t >= 0]
+    assert len(kept) == 8
+    all_ids = [packed.vocab[t] for t in set(long_q.split())
+               if t in packed.vocab]
+    dropped = [t for t in all_ids if t not in kept]
+    assert dropped, "query should overflow max_terms"
+    assert min(packed.idf[kept]) >= max(packed.idf[dropped]) - 1e-6

@@ -107,13 +107,13 @@ def test_anlessini_reduced_cells_lower_on_host_mesh():
     """The paper's own arch cell lowers on a 1×1 mesh (full check is the
     512-device dry-run)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel import compat
     cells = build_cells("anlessini", reduced=True)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     cell = cells["serve_q1"]
     fn, args, specs = cell.build(mesh)
     sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
                                 is_leaf=lambda x: isinstance(x, P))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         compiled = jax.jit(fn, in_shardings=sh).lower(*args).compile()
     assert compiled is not None
