@@ -105,7 +105,6 @@ def build_variant_cell(arch: str, shape: str, over: dict):
     if fam == "search":
         # late-bound cell: wrap build() to apply config overrides
         cell = mod.cells(rules)[shape]
-        orig_build = cell.build
 
         def build(mesh):
             import repro.configs.anlessini as an

@@ -1,6 +1,7 @@
 """Benchmark harness — one benchmark per paper table/claim.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only b1,b7]
+                                            [--json BENCH_pr.json]
 
 Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
   B1  end-to-end warm latency < 300 ms; cold vs warm split        (§2)
@@ -10,15 +11,19 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
   B5  index size: ~700 MB for 8.8 M passages (bytes/doc parity)   (§2)
   B6  document partitioning scale-out (§3) — latency vs partitions
   B6b micro-batched (Q>1) handler invocations — per-query amortization
-  B7  batch reindex + zero-downtime switch-over (§3)
-  B8  roofline summary over the dry-run artifacts (if present)
+  B7  replicated partitions + hedged scatter legs — p50/p99 and
+      $/1k-queries, unhedged R=1 vs hedged R=2, under cold injection
+  B8  batch reindex + zero-downtime switch-over (§3)
+  B9  roofline summary over the dry-run artifacts (if present)
 
-Output: "name,value,unit,derived" CSV lines + a human summary.
+Output: "name,value,unit,derived" CSV lines + a human summary; ``--json``
+additionally writes the rows as a JSON list (the CI bench-smoke artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -188,8 +193,86 @@ def bench_batched(n_docs: int, n_queries: int) -> None:
              f"{n_inv} invocations for {len(batches) * Q} queries")
 
 
+def bench_hedged_tail(n_docs: int, n_queries: int) -> None:
+    """B7: replicated partitions + hedged scatter legs under cold injection.
+
+    One partition's primary pool is repeatedly killed mid-run; unhedged
+    (R=1) every such query eats a full cold start at the fan-out max, while
+    hedged (R=2) the projected cold start triggers a backup leg on the warm
+    replica pool and the tail stays flat. Both legs bill (no cancellation in
+    FaaS), so $/1k-queries shows the hedging tax next to the p99 it buys.
+
+    Reproduce the tail plot:
+        PYTHONPATH=src python -m benchmarks.run --fast --only b7
+    then plot the latency CDF from ``app.gateway.latencies[("GET",
+    "/search")]`` per config (p50/p99 rows below are its quantiles); bump
+    --docs/--queries for smoother tails.
+
+    Read the "hedge tax" column — not the raw $/1k difference — for the
+    cost of hedging: exec_s is measured wall time of the jitted eval, so at
+    small N run-to-run jit noise between the two configs can exceed the
+    (tiny, warm) backup legs' systematic cost.
+    """
+    print("\nB7: hedged scatter legs (R=2) vs unhedged (R=1), 1 cold partition")
+    from repro.core.partition import HedgePolicy
+    from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.oracle import OracleSearcher
+    from repro.search.service import build_partitioned_search_app
+
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=5)
+    n_warm = max(8, len(queries) // 5)
+    warmup, measured = queries[:n_warm], queries[n_warm:]
+    kill_every = 8
+    p99s, results = {}, {}
+    for replicas, hedge in ((1, None), (2, HedgePolicy())):
+        app = build_partitioned_search_app(
+            docs, n_parts=4, replicas=replicas, hedge=hedge,
+            runtime_config=RuntimeConfig())
+        app.warm()
+        for q in warmup:                   # unmeasured: hydrate + history
+            app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+        # cost and latency over the SAME measured window — warm-up spend
+        # scales with R and would otherwise pollute the $/1k comparison
+        led = app.runtime.ledger
+        n0 = len(app.gateway.latencies[("GET", "/search")])
+        dollars0, hedge0 = led.total_dollars, led.hedge_dollars
+        out = []
+        for i, q in enumerate(measured):
+            if i % kill_every == 0:        # partition 0 goes cold, replicas warm
+                app.runtime.kill_instance(fn=app.fn_names[0])
+            r = app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                          fetch_docs=False)
+            out.append((tuple(r.body["ids"]),
+                        tuple(round(s, 6) for s in r.body["scores"])))
+        results[replicas] = out
+        p = nearest_rank_percentiles(
+            app.gateway.latencies[("GET", "/search")][n0:], qs=(0.5, 0.99))
+        p99s[replicas] = p[0.99]
+        dollars = led.total_dollars - dollars0
+        tag = f"hedged_R{replicas}" if hedge else f"unhedged_R{replicas}"
+        emit(f"{tag}_gw_p50_ms", round(p[0.5] * 1e3, 1), "ms")
+        emit(f"{tag}_gw_p99_ms", round(p[0.99] * 1e3, 1), "ms",
+             f"{sum(rec.hedged for rec in app.runtime.records)} backup legs")
+        emit(f"{tag}_dollars_per_1k_q",
+             round(dollars / len(measured) * 1000.0, 6), "$",
+             f"hedge tax ${led.hedge_dollars - hedge0:.6f}")
+    emit("hedged_p99_improvement",
+         round(100 * (1 - p99s[2] / p99s[1])), "%", "target: >= 30")
+    # hedging must not change results: bit-identical to the unhedged run...
+    emit("hedged_results_bitwise_equal", int(results[1] == results[2]),
+         "bool", "same PackedIndex behind every replica")
+    # ...and both equal to the exact-BM25 oracle's ranking
+    oracle = OracleSearcher(docs)
+    ok = all(list(ids) == [d for d, _ in oracle.search(q, k=10)]
+             for q, (ids, _) in zip(measured, results[2]))
+    emit("hedged_topk_equals_oracle", int(ok), "bool")
+
+
 def bench_refresh() -> None:
-    print("\nB7: batch reindex + atomic switch-over (paper §3)")
+    print("\nB8: batch reindex + atomic switch-over (paper §3)")
     from repro.core.directory import RamDirectory
     from repro.core.object_store import ObjectStore
     from repro.core.refresh import AssetCatalog, refresh_fleet
@@ -219,7 +302,7 @@ def bench_refresh() -> None:
 
 
 def bench_roofline_summary() -> None:
-    print("\nB8: roofline summary (from dry-run artifacts, if present)")
+    print("\nB9: roofline summary (from dry-run artifacts, if present)")
     from benchmarks.roofline import analyze
     for mesh in ("pod1_16x16", "pod2_2x16x16"):
         rows = [r for r in analyze(mesh) if "t_compute_s" in r]
@@ -244,24 +327,47 @@ def main() -> None:
                     help="smaller corpora (CI-speed)")
     ap.add_argument("--docs", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated benchmark keys, e.g. b1,b6,b7")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write rows as JSON (CI bench-smoke artifact)")
     args = ap.parse_args()
     n_docs = args.docs or (2_000 if args.fast else 20_000)
     n_q = args.queries or (100 if args.fast else 400)
 
+    benches = {
+        "b1": lambda: bench_latency(n_docs, n_q),
+        "b2": lambda: bench_baseline(n_docs, min(n_q, 200)),
+        "b3": bench_cost,                  # b3 covers B3+B4 (one cost table)
+        "b5": lambda: bench_index_size(n_docs),
+        "b6": lambda: bench_partitions(min(n_docs, 8_000), min(n_q, 100)),
+        "b6b": lambda: bench_batched(min(n_docs, 8_000), min(n_q, 64)),
+        "b7": lambda: bench_hedged_tail(min(n_docs, 8_000), min(n_q, 100)),
+        "b8": bench_refresh,
+        "b9": bench_roofline_summary,
+    }
+    only = None
+    if args.only:
+        only = {k.strip().lower() for k in args.only.split(",") if k.strip()}
+        unknown = only - set(benches)
+        if unknown:
+            ap.error(f"unknown benchmark keys {sorted(unknown)}; "
+                     f"choose from {sorted(benches)}")
+
     t0 = time.time()
-    bench_latency(n_docs, n_q)
-    bench_baseline(n_docs, min(n_q, 200))
-    bench_cost()
-    bench_index_size(n_docs)
-    bench_partitions(min(n_docs, 8_000), min(n_q, 100))
-    bench_batched(min(n_docs, 8_000), min(n_q, 64))
-    bench_refresh()
-    bench_roofline_summary()
+    for key, fn in benches.items():
+        if only is None or key in only:
+            fn()
 
     print(f"\n# total bench wall time: {time.time() - t0:.1f}s")
     print("\nname,value,unit,derived")
     for r in ROWS:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "value": v, "unit": u, "derived": d}
+                       for n, v, u, d in ROWS], f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

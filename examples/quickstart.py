@@ -33,4 +33,4 @@ led = app.runtime.ledger
 print(f"\ninvocations: {led.invocations}, "
       f"compute cost: ${led.compute_dollars:.6f}, "
       f"queries/$: {led.queries_per_dollar():,.0f} "
-      f"(paper headline: 100,000)")
+      "(paper headline: 100,000)")

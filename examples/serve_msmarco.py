@@ -37,7 +37,7 @@ app = build_search_app(
 )
 
 print(f"replaying {len(queries)} queries at {args.qps} QPS "
-      f"(Poisson arrivals)...")
+      "(Poisson arrivals)...")
 rng = np.random.default_rng(7)
 t = 0.0
 wall0 = time.perf_counter()
@@ -52,12 +52,12 @@ warm = sorted(r.latency_s for r in recs if not r.cold)
 cold = sorted(r.latency_s for r in recs if r.cold)
 led = app.runtime.ledger
 
-print(f"\n=== paper §2 scorecard (simulated end-to-end latencies) ===")
+print("\n=== paper §2 scorecard (simulated end-to-end latencies) ===")
 print(f"warm queries: {len(warm)}  p50 {np.median(warm)*1e3:7.1f} ms  "
       f"p99 {np.quantile(warm, .99)*1e3:7.1f} ms   (paper budget < 300 ms)")
 if cold:
     print(f"cold queries: {len(cold)}  p50 {np.median(cold)*1e3:7.1f} ms  "
-          f"(container boot + index hydration)")
+          "(container boot + index hydration)")
 print(f"under 300 ms (warm): {100 * np.mean(np.asarray(warm) < .3):.0f}%")
 print(f"fleet peak size: {app.runtime.fleet_size} instances; "
       f"hedged: {sum(r.hedged for r in recs)}")
@@ -67,7 +67,7 @@ print(f"cost: ${led.total_dollars:.6f} for {led.invocations} queries → "
 a, b = fungibility_check(10, 10_000, 100, 1_000)
 print(f"fungibility: 10 QPS×10,000 s = ${a:.2f} ≡ 100 QPS×1,000 s = ${b:.2f}")
 
-print(f"\n=== paper §3 operations drill ===")
+print("\n=== paper §3 operations drill ===")
 # batch reindex: add docs, publish v2 alongside v1, atomic switch + refresh
 extra = synth_corpus(1000, vocab=max(4000, args.docs // 2), seed=99)
 w = IndexWriter()

@@ -75,7 +75,7 @@ def load_pytree(directory, like: Any, *, shardings: Any = None) -> Any:
             raise ValueError(
                 f"checkpoint leaf {ent['key']!r} has shape "
                 f"{tuple(ent['shape'])}, expected {tuple(leaf.shape)} — "
-                f"stale checkpoint for a different config?")
+                "stale checkpoint for a different config?")
     arrs = []
     for ent in manifest:
         data = directory.open_input(ent["file"]).read_all()

@@ -19,7 +19,6 @@ from collections import OrderedDict
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 
 def pytree_nbytes(tree: Any) -> int:

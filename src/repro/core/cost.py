@@ -27,16 +27,25 @@ class Invocation:
     memory_bytes: int
     duration_s: float
     cold_start: bool = False
+    hedge: bool = False       # a backup leg fired for tail mitigation
 
 
 @dataclasses.dataclass
 class CostLedger:
-    """Accumulates per-invocation GB·s charges."""
+    """Accumulates per-invocation GB·s charges.
+
+    Hedged backup legs are charged like any other invocation — FaaS offers
+    no cancellation, so a losing leg runs (and bills) to completion — but
+    they are additionally tracked in ``hedge_gb_seconds``/``hedge_invocations``
+    so the tail-mitigation tax is visible next to the latency it buys.
+    """
 
     gb_seconds: float = 0.0
     invocations: int = 0
     cold_starts: int = 0
     duration_s: float = 0.0
+    hedge_gb_seconds: float = 0.0
+    hedge_invocations: int = 0
 
     def charge(self, inv: Invocation) -> float:
         quantum = LAMBDA_BILLING_QUANTUM_S
@@ -47,6 +56,9 @@ class CostLedger:
         self.invocations += 1
         self.cold_starts += int(inv.cold_start)
         self.duration_s += inv.duration_s
+        if inv.hedge:
+            self.hedge_gb_seconds += gbs
+            self.hedge_invocations += 1
         return gbs * PRICE_PER_GB_S
 
     @property
@@ -61,10 +73,23 @@ class CostLedger:
     def total_dollars(self) -> float:
         return self.compute_dollars + self.request_dollars
 
+    @property
+    def hedge_dollars(self) -> float:
+        """The tail-mitigation tax: compute dollars spent on backup legs."""
+        return self.hedge_gb_seconds * PRICE_PER_GB_S
+
     def queries_per_dollar(self) -> float:
         if self.total_dollars == 0:
             return float("inf")
         return self.invocations / self.total_dollars
+
+    def dollars_per_1k(self, n_queries: int) -> float:
+        """$ per 1000 LOGICAL queries — the caller supplies the query count
+        because hedging makes invocations ≠ queries (backup legs bill but
+        answer no extra query)."""
+        if n_queries <= 0:
+            return float("nan")
+        return self.total_dollars / n_queries * 1000.0
 
 
 def paper_headline_cost(memory_gb: float = 2.0, duration_s: float = 0.3) -> float:

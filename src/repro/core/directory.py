@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import struct
 import threading
-from typing import Iterable
 
 from repro.core.object_store import NoSuchKey, ObjectStore
 

@@ -14,7 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-from repro.core.runtime import FaaSRuntime, InvocationRecord
+from repro.core.runtime import (FaaSRuntime, InvocationRecord,
+                                nearest_rank_percentiles)
 
 
 GATEWAY_OVERHEAD_S = 0.010   # API-Gateway proxy+auth overhead (~10 ms)
@@ -47,6 +48,10 @@ class Gateway:
     def __init__(self, runtime: FaaSRuntime) -> None:
         self.runtime = runtime
         self._routes: dict[tuple[str, str], "str | Coordinator"] = {}
+        # end-to-end latency log per route (what "the browser" saw) — the
+        # runtime's records are per-invocation, so a hedged or fanned-out
+        # request has no single record to read percentiles from
+        self.latencies: dict[tuple[str, str], list[float]] = {}
 
     def route(self, method: str, path: str, fn: "str | Coordinator") -> None:
         """Map method+path to a runtime function name, or to a coordinator
@@ -55,7 +60,8 @@ class Gateway:
 
     def request(self, method: str, path: str, body: Any = None,
                 *, t_arrival: float | None = None) -> Response:
-        fn = self._routes.get((method.upper(), path))
+        key = (method.upper(), path)
+        fn = self._routes.get(key)
         if fn is None:
             return Response(404, {"error": f"no route {method} {path}"}, 0.0)
         try:
@@ -67,7 +73,15 @@ class Gateway:
                 lat = rec.latency_s
         except Exception as e:  # Lambda error → 502 from the gateway
             return Response(502, {"error": str(e)}, GATEWAY_OVERHEAD_S)
+        self.latencies.setdefault(key, []).append(lat + GATEWAY_OVERHEAD_S)
         return Response(200, result, lat + GATEWAY_OVERHEAD_S, rec)
+
+    def latency_percentiles(self, method: str, path: str,
+                            qs=(0.5, 0.9, 0.99)) -> dict[float, float]:
+        """End-to-end latency quantiles for one route, over successful
+        requests (the numbers the paper reports "from the browser")."""
+        return nearest_rank_percentiles(
+            self.latencies.get((method.upper(), path), []), qs)
 
     def routes(self) -> list[tuple[str, str, str]]:
         return [(m, p, f if isinstance(f, str)

@@ -23,7 +23,6 @@ import io
 import os
 import threading
 import time
-from typing import Callable, Iterator, Mapping
 
 
 class ObjectStoreError(Exception):

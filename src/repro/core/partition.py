@@ -15,7 +15,12 @@ Two realizations, same math:
 * **Fleet-level** (`ScatterGather`): one FaaS function per partition; the
   coordinator fans out a query to every partition's function and merges the
   per-partition hits. Latency = max over partitions (+merge), i.e. the
-  straggler profile the runtime's hedging targets.
+  straggler profile the runtime's hedging targets. Partitions may be
+  REPLICATED: a replica group serves one segment from R independent instance
+  pools, and a `HedgePolicy` fires a backup leg on a replica whenever the
+  primary's projected completion (queue + cold boot) exceeds a quantile of
+  recent warm latencies — a cold or throttled pool then stops setting the
+  fan-out max.
 """
 
 from __future__ import annotations
@@ -25,8 +30,9 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
+
+from repro.core.runtime import nearest_rank_percentiles
 
 
 def local_topk(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
@@ -89,6 +95,64 @@ def partitioned_topk(
 # -- fleet-level scatter/gather ------------------------------------------------
 
 
+# Gather-side work per scatter: collecting R×k candidate lists, the sort/merge
+# in _merge_hits, and re-serialization at the coordinator. Constant and small,
+# but charging it keeps end-to-end latency honest (B6/B7 were systematically
+# optimistic without it).
+MERGE_COST_S = 0.001
+
+
+@dataclasses.dataclass
+class HedgePolicy:
+    """When does a scatter leg deserve a backup on a replica?
+
+    The decision is made AT DISPATCH from ``FaaSRuntime.probe``'s projection
+    (queue wait + cold boot under the virtual clock) — not after waiting for
+    the primary to run long, which would put the projected cold start itself
+    on the critical path. A leg hedges when its projected overhead exceeds
+
+    * ``after_s``, a fixed threshold, if set; otherwise
+    * ``scale`` × the ``percentile`` quantile of the replica group's recent
+      WARM latencies (``FaaSRuntime.latency_percentiles(group,
+      warm_only=True)``), once at least ``min_history`` warm records exist.
+      The default is 2× the MEDIAN, not a raw p95: with a handful of
+      records one jit-compile or hydration spike IS the p95 and would quietly
+      disarm hedging, while the median shrugs it off (the same robustness
+      argument as tail-at-scale's "hedge after ~2× expected latency").
+
+    With no fixed threshold and too little history the leg never hedges —
+    the initial all-cold fan-out would otherwise double-bill every partition
+    for backups that are just as cold as their primaries.
+    """
+
+    after_s: float | None = None
+    percentile: float = 0.5
+    scale: float = 2.0
+    min_history: int = 4
+    window: int = 256        # most-recent warm records considered
+
+    def threshold_s(self, runtime, group: Sequence[str]) -> float | None:
+        """The projected-overhead threshold for this group, or None if the
+        policy has no basis to hedge yet.
+
+        One newest-first scan of the record log, stopping at ``window``
+        matches — "recent" by construction, and per-query work stays bounded
+        instead of growing with the run length."""
+        if self.after_s is not None:
+            return self.after_s
+        names = set(group)
+        warm: list[float] = []
+        for r in reversed(runtime.records):
+            if r.fn in names and not r.cold:
+                warm.append(r.latency_s)
+                if len(warm) >= self.window:
+                    break
+        if len(warm) < self.min_history:
+            return None
+        q = nearest_rank_percentiles(warm, qs=(self.percentile,))
+        return self.scale * q[self.percentile]
+
+
 @dataclasses.dataclass
 class PartitionHit:
     doc_id: int              # partition-LOCAL internal id
@@ -112,28 +176,62 @@ def _merge_hits(per_part: list[dict], k: int) -> list[PartitionHit]:
 
 
 class ScatterGather:
-    """Fan a query out to one FaaS function per partition and merge hits."""
+    """Fan a query out to one FaaS function per partition and merge hits.
 
-    def __init__(self, runtime, fn_names: Sequence[str]) -> None:
+    Each entry of ``fn_names`` is either one function name (unreplicated
+    partition) or a replica GROUP ``[primary, backup, ...]`` — every member
+    serves the same published segment from its own instance pool. With a
+    :class:`HedgePolicy`, a leg whose primary projects a completion past the
+    policy threshold fires a backup on the group's best-projected replica at
+    the same arrival instant; the first completion wins (bit-identical
+    results either way) and both legs bill.
+    """
+
+    def __init__(self, runtime, fn_names: Sequence, *,
+                 hedge: "HedgePolicy | None" = None,
+                 merge_cost_s: float = MERGE_COST_S) -> None:
         self.runtime = runtime
-        self.fn_names = list(fn_names)
+        self.groups: list[list[str]] = [
+            [g] if isinstance(g, str) else list(g) for g in fn_names]
+        self.fn_names = [g[0] for g in self.groups]   # primaries
+        self.hedge = hedge
+        self.merge_cost_s = merge_cost_s
+
+    def _invoke_leg(self, group: list[str], payload: Any, t0: float):
+        """One partition leg: primary, plus a projection-triggered backup."""
+        primary = group[0]
+        if self.hedge is not None and len(group) > 1:
+            thresh = self.hedge.threshold_s(self.runtime, group)
+            if thresh is not None:
+                projected = sum(self.runtime.probe(primary, t0))
+                if projected > thresh:
+                    backup = min(group[1:],
+                                 key=lambda f: sum(self.runtime.probe(f, t0)))
+                    # a replica projecting no better than the primary (both
+                    # cold, or its queue just as deep) cannot win the race —
+                    # firing it would double-bill for zero latency gain
+                    if sum(self.runtime.probe(backup, t0)) < projected:
+                        return self.runtime.invoke_hedged(
+                            primary, backup, payload, t_arrival=t0)
+        return self.runtime.invoke(primary, payload, t_arrival=t0)
 
     def scatter(self, payload: Any, *, t_arrival: float | None = None):
-        """Invoke every partition fn at the SAME arrival instant.
+        """Invoke every partition leg at the SAME arrival instant.
 
         Partitions execute concurrently on separate instances, so every
         fan-out leg sees the fleet as it was at t_arrival — the runtime's
         shared virtual clock advances only after the whole scatter — and
-        end-to-end latency is the max over partitions, not the sum.
-        Returns (per-partition results, latency_s, records)."""
+        end-to-end latency is the max over partitions plus the gather/merge
+        term ``merge_cost_s`` (charged identically on the single-query and
+        batched paths). Returns (per-partition results, latency_s, records)."""
         t0 = self.runtime.clock if t_arrival is None else t_arrival
         results, records = [], []
-        for fn in self.fn_names:
-            result, rec = self.runtime.invoke(fn, payload, t_arrival=t0)
+        for group in self.groups:
+            result, rec = self._invoke_leg(group, payload, t0)
             results.append(result)
             records.append(rec)
         lat = max((r.latency_s for r in records), default=0.0)
-        return results, lat, records
+        return results, lat + self.merge_cost_s, records
 
     def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
         """Single-query scatter-gather: merged top-k hits."""

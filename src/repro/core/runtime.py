@@ -20,7 +20,6 @@ Dean's tail-at-scale trick) and the earlier completion wins.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import itertools
 import random
 from typing import Any, Callable
@@ -37,6 +36,16 @@ class RuntimeError_(Exception):
 # (result, exec_seconds). exec_seconds is the simulated compute time for the
 # request *excluding* hydration (the cache accounts hydration separately).
 Handler = Callable[[HydrationCache, Any], tuple[Any, float]]
+
+
+def nearest_rank_percentiles(lats, qs=(0.5, 0.9, 0.99)) -> dict[float, float]:
+    """Nearest-rank quantiles over an (unsorted) latency list; NaN when
+    empty. The ONE quantile convention for the runtime, the gateway, and
+    the benchmarks — so their p99s agree on the same run."""
+    lats = sorted(lats)
+    if not lats:
+        return {q: float("nan") for q in qs}
+    return {q: lats[min(len(lats) - 1, int(q * len(lats)))] for q in qs}
 
 
 @dataclasses.dataclass
@@ -63,6 +72,10 @@ class InvocationRecord:
     instance_id: int
     retries: int = 0
     hedged: bool = False
+    # cross-replica hedging (invoke_hedged): the losing leg's function and
+    # the latency the caller would have eaten without the backup
+    backup_fn: str | None = None
+    loser_latency_s: float = 0.0
 
     @property
     def overhead_s(self) -> float:
@@ -147,9 +160,15 @@ class FaaSRuntime:
         self._instances.append(inst)
         return inst, True
 
-    def kill_instance(self, instance_id: int | None = None) -> bool:
-        """Failure injection: kill one instance (random if unspecified)."""
-        live = [i for i in self._instances if i.alive]
+    def kill_instance(self, instance_id: int | None = None, *,
+                      fn: str | None = None) -> bool:
+        """Failure injection: kill one instance (random if unspecified).
+
+        ``fn`` restricts the pick to one function's pool — this is how a
+        benchmark makes one partition's fleet deliberately cold while its
+        replicas stay warm."""
+        live = [i for i in self._instances
+                if i.alive and (fn is None or i.fn == fn)]
         if not live:
             return False
         victim = None
@@ -167,23 +186,82 @@ class FaaSRuntime:
 
     # -- invocation -------------------------------------------------------------
 
+    def probe(self, fn: str, t_arrival: float | None = None) -> tuple[float, float]:
+        """Projected (queue_wait_s, cold_boot_s) for the NEXT invocation of
+        ``fn``, without mutating the fleet.
+
+        Mirrors ``_acquire``'s placement decision at ``t_arrival`` under the
+        virtual clock: an idle warm instance → (0, 0); a throttled fleet →
+        queueing delay; otherwise a fresh provision. Hydration is not
+        projected (the runtime doesn't know the handler's assets), so this is
+        a lower bound — which is all a hedging policy needs, since a cold
+        boot alone already dwarfs any warm-latency quantile."""
+        now = self.clock if t_arrival is None else max(t_arrival, 0.0)
+        cfg = self.config
+        live = [i for i in self._instances
+                if i.alive and (now - i.last_used) <= cfg.idle_timeout_s]
+        if any(i.busy_until <= now and i.fn == fn for i in live):
+            return 0.0, 0.0
+        if len(live) >= cfg.max_instances:
+            pool = [i for i in live if i.fn == fn]
+            if pool:
+                inst = min(pool, key=lambda i: i.busy_until)
+                return max(0.0, inst.busy_until - now), 0.0
+            victim = min(live, key=lambda i: i.busy_until)
+            return max(0.0, victim.busy_until - now), cfg.provision_s
+        return 0.0, cfg.provision_s
+
     def invoke(self, fn: str, payload: Any, *, t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
         if fn not in self._handlers:
             raise RuntimeError_(f"no function {fn!r} registered")
         now = self.clock if t_arrival is None else max(t_arrival, 0.0)
         self.clock = max(self.clock, now)
+        return self._invoke_retrying(fn, payload, now)
 
+    def invoke_hedged(self, fn: str, backup_fn: str, payload: Any, *,
+                      t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
+        """Fire ``fn`` AND ``backup_fn`` (a replica serving the same asset)
+        at the same arrival instant; the first completion wins.
+
+        This is the cross-replica half of tail hedging: the per-instance
+        ``hedge_after_s`` backup fires mid-execution on the SAME pool, while
+        this one is decided at dispatch (from ``probe``'s projection) and
+        lands on a DIFFERENT pool, so it sidesteps a cold/throttled fleet
+        entirely. FaaS offers no cancellation, so the losing leg runs to
+        completion, keeps its instance busy, and is billed in full (the
+        hedging tax, visible in ``CostLedger.hedge_gb_seconds``) — but only
+        the winner's latency is what the caller waits for, and only one
+        logical record is appended (latency = winner's)."""
+        for name in (fn, backup_fn):
+            if name not in self._handlers:
+                raise RuntimeError_(f"no function {name!r} registered")
+        now = self.clock if t_arrival is None else max(t_arrival, 0.0)
+        self.clock = max(self.clock, now)
+        res_a, rec_a = self._invoke_retrying(fn, payload, now, record=False)
+        res_b, rec_b = self._invoke_retrying(backup_fn, payload, now,
+                                             record=False, hedge=True)
+        (res, win), (_, lose) = sorted(
+            [(res_a, rec_a), (res_b, rec_b)], key=lambda p: p[1].latency_s)
+        rec = dataclasses.replace(
+            win, hedged=True, backup_fn=lose.fn, loser_latency_s=lose.latency_s)
+        self.records.append(rec)
+        return res, rec
+
+    def _invoke_retrying(self, fn: str, payload: Any, now: float, *,
+                         record: bool = True, hedge: bool = False):
         attempt = 0
         while True:
             try:
-                return self._invoke_once(fn, payload, now, attempt)
+                return self._invoke_once(fn, payload, now, attempt,
+                                         record=record, hedge=hedge)
             except _InstanceDied:
                 attempt += 1
                 if attempt > self.config.max_retries:
                     raise RuntimeError_(f"{fn}: instance died {attempt} times") from None
                 # retry immediately on another instance (client-side retry)
 
-    def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int):
+    def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int, *,
+                     record: bool = True, hedge: bool = False):
         cfg = self.config
         inst, fresh = self._acquire(now, fn)
         queue_wait = max(0.0, inst.busy_until - now)
@@ -231,19 +309,22 @@ class FaaSRuntime:
                 inst2.last_used = inst2.busy_until
                 inst2.invocations += 1
                 self.ledger.charge(
-                    Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2))
+                    Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2,
+                               hedge=True))
                 hedged = True
 
         self.clock = max(self.clock, inst.busy_until)
 
-        self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s, cold))
+        self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s,
+                                      cold, hedge=hedge))
         rec = InvocationRecord(
             fn=fn, t_arrival=now, t_done=t_start + result_duration,
             latency_s=queue_wait + result_duration, exec_s=exec_s,
             hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
             retries=attempt, hedged=hedged,
         )
-        self.records.append(rec)
+        if record:
+            self.records.append(rec)
         return result, rec
 
     # -- introspection ------------------------------------------------------------
@@ -252,15 +333,22 @@ class FaaSRuntime:
     def fleet_size(self) -> int:
         return len(self._instances)
 
-    def latency_percentiles(self, fn: str | None = None, qs=(0.5, 0.9, 0.99)) -> dict[float, float]:
-        lats = sorted(r.latency_s for r in self.records if fn is None or r.fn == fn)
-        if not lats:
-            return {q: float("nan") for q in qs}
-        out = {}
-        for q in qs:
-            idx = min(len(lats) - 1, int(q * len(lats)))
-            out[q] = lats[idx]
-        return out
+    def latency_percentiles(self, fn=None, qs=(0.5, 0.9, 0.99), *,
+                            warm_only: bool = False) -> dict[float, float]:
+        """Latency quantiles over the record log. ``fn`` may be a single
+        function name or a collection of names (e.g. one partition's replica
+        group); ``warm_only`` drops cold-start records — the baseline a
+        hedging policy compares projected completions against."""
+        if fn is None:
+            match = lambda r: True
+        elif isinstance(fn, str):
+            match = lambda r: r.fn == fn
+        else:
+            names = set(fn)
+            match = lambda r: r.fn in names
+        return nearest_rank_percentiles(
+            (r.latency_s for r in self.records
+             if match(r) and not (warm_only and r.cold)), qs)
 
     def warm_fraction(self, fn: str | None = None) -> float:
         recs = [r for r in self.records if fn is None or r.fn == fn]

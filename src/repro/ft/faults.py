@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import random
-import time
 from typing import Any, Callable
 
 import jax
@@ -70,15 +69,13 @@ def run_with_restarts(step_fn: Callable[[Any, int], Any], init_state: Any,
     stats = RestartStats()
     state = init_state
     step = 0
-    last_saved = -1
     while step < n_steps:
         try:
             if injector is not None:
                 injector.check(step)
             state = step_fn(state, step)
             stats.steps_run += 1
-            if ckpt.maybe_save(step, state):
-                last_saved = step
+            ckpt.maybe_save(step, state)
             step += 1
         except InjectedFailure:
             stats.restarts += 1

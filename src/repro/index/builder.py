@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import io
 import math
-from typing import Iterable, Mapping, Sequence
+from typing import Iterable
 
 import numpy as np
 

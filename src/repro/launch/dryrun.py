@@ -27,10 +27,9 @@ import time
 import traceback
 
 import jax
-import numpy as np
 
 from repro.parallel import compat
-from repro.configs import ARCH_MODULES, all_cells, build_cells
+from repro.configs import all_cells, build_cells
 from repro.launch.mesh import make_production_mesh
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 
 import jax
@@ -32,7 +31,7 @@ from repro.data.lm import LMDataConfig, LMTokenStream
 from repro.ft.faults import FailureInjector, StragglerMonitor, run_with_restarts
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.common import init_params
-from repro.parallel.sharding import param_shardings, tree_named
+from repro.parallel.sharding import tree_named
 from repro.train.optim import OptConfig
 from repro.train.steps import init_train_state, make_train_step
 

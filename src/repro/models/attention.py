@@ -14,7 +14,6 @@ partially-filled cache.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ is the standard retrieval-tower deployment (documented simplification).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

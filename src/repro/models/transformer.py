@@ -24,7 +24,6 @@ Sliding-window models may use a ring-buffer cache of `window` slots
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -454,7 +453,6 @@ def lm_decode(params, cache, token, pos, cfg: LMConfig):
     Returns (logits (B,V), updated cache). Ring-buffer caches (SWA) wrap
     writes mod window; attention masks to min(pos+1, slots) valid entries.
     """
-    B = token.shape[0]
     x = params["embed"][token]                            # (B,1,d)
     positions = pos[None].astype(jnp.int32)
     if cfg.mla is not None:

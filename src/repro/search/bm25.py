@@ -20,8 +20,6 @@ M·B covers every posting of every query term (tests enforce this).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +74,6 @@ def gather_query_blocks(state: SearchState, term_ids: jax.Array, max_blocks: int
     term_ids: (T,) int32, -1 = pad. Returns docs (T,M,B) i32, tf (T,M,B) u8,
     valid (T,M,1) bool.
     """
-    T = term_ids.shape[0]
     tid = jnp.maximum(term_ids, 0)
     off = state.term_offsets[tid]                        # (T,)
     n_blk = state.term_offsets[tid + 1] - off            # (T,)

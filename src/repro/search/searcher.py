@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
 
 import jax
 import numpy as np

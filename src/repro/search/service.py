@@ -8,7 +8,11 @@ splits into N partitions, each published as its own versioned segment
 (packed with GLOBAL idf/avgdl) and served by its own Lambda function;
 ``/search`` fans out through ScatterGather and merges per-partition top-k
 into a globally-ranked result. Cold starts, hydration, refresh, and cost
-all account per partition in the shared runtime.
+all account per partition in the shared runtime. With ``replicas=R`` each
+segment is served by R independent instance pools and a ``HedgePolicy``
+fires backup legs on replicas when a primary projects cold/queued — the
+tail-latency path (flat p99 under cold injection, hedging tax on the
+ledger).
 """
 
 from __future__ import annotations
@@ -19,7 +23,7 @@ from typing import Iterable
 from repro.core.gateway import Gateway
 from repro.core.kvstore import KVStore
 from repro.core.object_store import Backend, ObjectStore
-from repro.core.partition import PartitionHit, ScatterGather
+from repro.core.partition import HedgePolicy, PartitionHit, ScatterGather
 from repro.core.refresh import AssetCatalog
 from repro.core.runtime import FaaSRuntime, InvocationRecord, RuntimeConfig
 from repro.index.builder import (IndexWriter, compute_global_stats,
@@ -113,10 +117,12 @@ class PartitionedSearchApp:
     gateway: Gateway
     scatter: ScatterGather
     assets: list[str]
-    fn_names: list[str]
+    fn_names: list[str]      # primaries, one per partition
     n_parts: int
     n_docs_local: int
     search_k: int = 10       # per-partition compiled top-k (SearchConfig.k)
+    fn_groups: list[list[str]] = dataclasses.field(default_factory=list)
+    replicas: int = 1
 
     def query(self, q: "str | list[str]", k: int = 10, *,
               t_arrival: float | None = None, fetch_docs: bool = True):
@@ -129,6 +135,20 @@ class PartitionedSearchApp:
         return self.gateway.request(
             "GET", "/search", _search_body(q, k, fetch_docs),
             t_arrival=t_arrival)
+
+    def warm(self, *, t_arrival: float | None = None) -> list[InvocationRecord]:
+        """Touch EVERY function — primaries and replicas — once, hydrating
+        each pool (replicas otherwise only see traffic when a hedge fires,
+        so a backup leg would land as cold as the straggler it covers).
+        The paper's "keep the fleet warm" pinger, fleet-wide."""
+        t0 = self.runtime.clock if t_arrival is None else t_arrival
+        recs = []
+        for group in self.fn_groups:
+            for fn in group:
+                _, rec = self.runtime.invoke(
+                    fn, {"q": "", "k": 1, "fetch_docs": False}, t_arrival=t0)
+                recs.append(rec)
+        return recs
 
     # -- the /search coordinator (Gateway → ScatterGather → merge) ---------------
 
@@ -178,7 +198,7 @@ class PartitionedSearchApp:
             result = self._materialize(hits, raw)
         result["partitions"] = [
             {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
-             "latency_s": r.latency_s} for r in records]
+             "latency_s": r.latency_s, "hedged": r.hedged} for r in records]
         slowest = max(records, key=lambda r: r.latency_s, default=None) \
             if records else None
         return result, lat + fetch_s, slowest
@@ -188,18 +208,32 @@ def build_partitioned_search_app(
     docs: Iterable[tuple[str, str]],
     n_parts: int = 4,
     *,
+    replicas: int = 1,
+    hedge: "HedgePolicy | float | None" = None,
     runtime_config: RuntimeConfig | None = None,
     search_config: SearchConfig | None = None,
     backend: Backend | None = None,
     asset_prefix: str = "index",
 ) -> PartitionedSearchApp:
-    """Assemble the partitioned fleet: one segment + one Lambda function
-    per partition, global BM25 stats, scatter-gather behind ``/search``.
+    """Assemble the partitioned fleet: one segment per partition, ``replicas``
+    Lambda functions serving it, global BM25 stats, scatter-gather behind
+    ``/search``.
 
     Every partition's segment is packed with ``compute_global_stats`` over
     the FULL corpus — the distributed-IR invariant that makes the merged
     ranking identical to a single-index build at any partition count.
+
+    ``replicas=R`` publishes each segment ONCE (shared ``AssetCatalog``
+    entry) but registers R functions per partition — separate instance
+    pools over identical ``PackedIndex``es, so a backup leg returns
+    bit-identical hits. ``hedge`` is a :class:`HedgePolicy` (or a float
+    shorthand for a fixed ``after_s`` threshold) enabling projection-based
+    backup legs; replicas without a policy are standby-only.
     """
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if isinstance(hedge, (int, float)):
+        hedge = HedgePolicy(after_s=float(hedge))
     docs = list(docs)
     store = ObjectStore(backend)
     doc_store = KVStore()
@@ -210,24 +244,28 @@ def build_partitioned_search_app(
     # encode (and idf-truncate, for > max_terms) identically per partition
     gvocab = global_vocab(gstats)
     parts, per = partition_corpus(docs, n_parts)
-    assets, fn_names = [], []
+    assets, fn_groups = [], []
     for p, pdocs in enumerate(parts):
         if not pdocs:        # corpus didn't fill the last partition(s)
             continue
         asset = f"{asset_prefix}-p{p}"
         index_corpus(pdocs, store, doc_store, asset=asset,
                      global_stats=gstats, vocab=gvocab)
-        fn = f"search-p{p}"
-        runtime.register(fn, make_search_handler(
-            catalog, doc_store, asset, search_config))
+        group = []
+        for r in range(replicas):
+            fn = f"search-p{p}" if r == 0 else f"search-p{p}r{r}"
+            runtime.register(fn, make_search_handler(
+                catalog, doc_store, asset, search_config))
+            group.append(fn)
         assets.append(asset)
-        fn_names.append(fn)
-    scatter = ScatterGather(runtime, fn_names)
+        fn_groups.append(group)
+    scatter = ScatterGather(runtime, fn_groups, hedge=hedge)
     gateway = Gateway(runtime)
     app = PartitionedSearchApp(
         store=store, catalog=catalog, doc_store=doc_store, runtime=runtime,
-        gateway=gateway, scatter=scatter, assets=assets, fn_names=fn_names,
-        n_parts=n_parts, n_docs_local=per,
-        search_k=(search_config or SearchConfig()).k)
+        gateway=gateway, scatter=scatter, assets=assets,
+        fn_names=scatter.fn_names, n_parts=n_parts, n_docs_local=per,
+        search_k=(search_config or SearchConfig()).k,
+        fn_groups=scatter.groups, replicas=replicas)
     gateway.route("GET", "/search", app._search_route)
     return app

@@ -9,7 +9,7 @@ import pytest
 from repro.checkpoint.manager import (CheckpointConfig, CheckpointManager,
                                       load_pytree, save_pytree)
 from repro.core.object_store import ObjectStore
-from repro.ft.faults import (FailureInjector, InjectedFailure, RestartStats,
+from repro.ft.faults import (FailureInjector, InjectedFailure,
                              StragglerMonitor, run_with_restarts)
 
 

@@ -1,18 +1,17 @@
 """Serverless core: object store, directory cache, hydration, runtime,
 gateway, cost model, refresh — the paper's architecture invariants."""
 
-import threading
 
 import pytest
 
 from repro.core.cache import HydrationCache
-from repro.core.cost import (CostLedger, Invocation, PRICE_PER_GB_S,
+from repro.core.cost import (CostLedger, Invocation,
                              fungibility_check, paper_headline_cost)
 from repro.core.directory import RamDirectory, StoreDirectory
 from repro.core.gateway import Gateway
-from repro.core.object_store import (MemoryBackend, NoSuchKey, ObjectStore,
+from repro.core.object_store import (NoSuchKey, ObjectStore,
                                      PreconditionFailed)
-from repro.core.refresh import AssetCatalog, PublishConflict, refresh_fleet
+from repro.core.refresh import AssetCatalog, refresh_fleet
 from repro.core.runtime import FaaSRuntime, RuntimeConfig
 
 
@@ -141,8 +140,7 @@ def test_ledger_billing_quantum():
 
 
 def _echo_handler(cache, payload):
-    state = cache.get_or_hydrate("state", "v1",
-                                 lambda: ({"ready": True}, 0.2))
+    cache.get_or_hydrate("state", "v1", lambda: ({"ready": True}, 0.2))
     return {"echo": payload}, 0.01
 
 

@@ -1,0 +1,207 @@
+"""Replicated partitions + hedged scatter legs: the tail-latency path.
+
+The contract under test, layer by layer:
+
+* runtime — ``probe`` projects the next invocation's overhead without
+  mutating the fleet; ``invoke_hedged`` fires two legs at one arrival
+  instant, appends ONE record (the winner's latency), and bills BOTH legs
+  (no cancellation in FaaS), tagging the backup in the ledger.
+* scatter — a replica group serves one published segment from R independent
+  instance pools; a ``HedgePolicy`` triggers the backup only when the
+  primary's projection exceeds a quantile of recent warm latencies; the
+  gather/merge term ``merge_cost_s`` is charged identically on the
+  single-query and batched paths.
+* app — with one partition's pool deliberately killed mid-run, hedging
+  flattens p99 while the merged top-k stays bit-identical to the unhedged
+  run and equal to the exact-BM25 oracle; total cost strictly rises with R.
+"""
+
+import pytest
+
+from repro.core.partition import MERGE_COST_S, HedgePolicy, ScatterGather
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.oracle import OracleSearcher
+from repro.search.service import build_partitioned_search_app
+
+K = 10
+N_PARTS = 3
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(240, vocab=400, seed=31)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return synth_queries(corpus, 32, seed=33)
+
+
+@pytest.fixture(scope="module")
+def oracle(corpus):
+    return OracleSearcher(corpus)
+
+
+# -- runtime layer -----------------------------------------------------------
+
+
+def _sleepy_handler(cache, payload):
+    cache.get_or_hydrate("state", "v1", lambda: (object(), 0.2))
+    return payload, 0.01
+
+
+def test_probe_projects_without_mutating():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _sleepy_handler)
+    # empty pool: a fresh provision is projected, and projecting it twice
+    # must not boot anything
+    assert rt.probe("f") == (0.0, rt.config.provision_s)
+    assert rt.fleet_size == 0
+    rt.invoke("f", 0)
+    assert rt.probe("f", rt.clock + 0.1) == (0.0, 0.0)      # idle warm
+    assert rt.kill_instance(fn="f")
+    assert rt.probe("f", rt.clock + 0.1) == (0.0, rt.config.provision_s)
+
+
+def test_invoke_hedged_one_record_both_legs_billed():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("a", _sleepy_handler)
+    rt.register("b", _sleepy_handler)
+    rt.invoke("b", 0)                       # warm the replica pool only
+    n_recs = len(rt.records)
+    n_inv = rt.ledger.invocations
+    out, rec = rt.invoke_hedged("a", "b", 7, t_arrival=rt.clock + 1)
+    assert out == 7
+    assert len(rt.records) - n_recs == 1    # one LOGICAL record
+    assert rt.ledger.invocations - n_inv == 2   # both legs billed
+    assert rt.ledger.hedge_invocations == 1 and rt.ledger.hedge_gb_seconds > 0
+    # cold primary loses to the warm replica; the record carries the winner
+    assert rec.hedged and rec.fn == "b" and rec.backup_fn == "a"
+    assert not rec.cold
+    assert rec.loser_latency_s > rec.latency_s
+
+
+# -- scatter layer -----------------------------------------------------------
+
+
+def test_merge_cost_charged_consistently_single_and_batch(corpus, queries):
+    app = build_partitioned_search_app(corpus, n_parts=N_PARTS)
+    sc = app.scatter
+    assert sc.merge_cost_s == MERGE_COST_S > 0
+    payload = {"q": queries[0], "k": K, "fetch_docs": False}
+    _, lat, recs = sc.search(payload, K, t_arrival=app.runtime.clock + 1)
+    assert lat == pytest.approx(
+        max(r.latency_s for r in recs) + sc.merge_cost_s)
+    bpayload = {"queries": list(queries[:4]), "k": K, "fetch_docs": False}
+    _, blat, brecs = sc.search_batch(bpayload, K,
+                                     t_arrival=app.runtime.clock + 1)
+    assert blat == pytest.approx(
+        max(r.latency_s for r in brecs) + sc.merge_cost_s)
+
+
+def test_policy_needs_history_before_quantile_hedging():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("p", _sleepy_handler)
+    rt.register("r", _sleepy_handler)
+    pol = HedgePolicy(percentile=0.95, min_history=4)
+    assert pol.threshold_s(rt, ["p", "r"]) is None     # no basis yet
+    rt.invoke("p", 0)                                  # cold — still no basis
+    assert pol.threshold_s(rt, ["p", "r"]) is None
+    for i in range(4):
+        rt.invoke("p", i, t_arrival=rt.clock + 1)      # warm history
+    thresh = pol.threshold_s(rt, ["p", "r"])
+    assert thresh is not None and 0 < thresh < rt.config.provision_s
+    # fixed-threshold policies need no history at all
+    assert HedgePolicy(after_s=0.05).threshold_s(rt, ["p", "r"]) == 0.05
+    # scatter over a cold fleet with a fresh quantile policy fires NO backups
+    rt2 = FaaSRuntime(RuntimeConfig())
+    rt2.register("p", _sleepy_handler)
+    rt2.register("r", _sleepy_handler)
+    sc2 = ScatterGather(rt2, [["p", "r"]], hedge=HedgePolicy())
+    _, _, recs = sc2.scatter({"x": 1})
+    assert not any(r.hedged for r in recs)
+    assert rt2.ledger.hedge_invocations == 0
+
+
+# -- app layer ---------------------------------------------------------------
+
+
+def test_replicas_share_segment_but_not_pools(corpus):
+    app = build_partitioned_search_app(corpus, n_parts=N_PARTS, replicas=2)
+    assert app.replicas == 2
+    assert len(app.assets) == N_PARTS          # each segment published ONCE
+    assert [len(g) for g in app.fn_groups] == [2] * N_PARTS
+    assert app.fn_names == [g[0] for g in app.fn_groups]
+    recs = app.warm()
+    assert len(recs) == 2 * N_PARTS
+    assert all(r.cold and r.hydrate_s > 0 for r in recs)   # per-pool hydration
+    # every function got its own instance (separate pools, shared asset)
+    assert app.runtime.fleet_size == 2 * N_PARTS
+
+
+def _drive(app, queries, kill_fn=None, kill_every=6):
+    """Warm phase (unmeasured) then a measured phase with cold injection."""
+    app.warm()
+    for q in queries[:8]:
+        app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    app.runtime.records.clear()               # steady state starts here
+    out = []
+    for i, q in enumerate(queries[8:]):
+        # first kill lands only after the cleared record log regrows the
+        # policy's min_history of warm latencies
+        if kill_fn is not None and i % kill_every == kill_every - 1:
+            assert app.runtime.kill_instance(fn=kill_fn)
+        r = app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+        assert r.ok, r.body
+        out.append((tuple(r.body["ext_ids"]),
+                    tuple(round(s, 6) for s in r.body["scores"])))
+    return out
+
+
+def test_hedging_flattens_p99_and_keeps_topk_exact(corpus, queries, oracle):
+    plain = build_partitioned_search_app(corpus, n_parts=N_PARTS)
+    hedged = build_partitioned_search_app(
+        corpus, n_parts=N_PARTS, replicas=2, hedge=HedgePolicy())
+    res_plain = _drive(plain, queries, kill_fn=plain.fn_names[0])
+    res_hedged = _drive(hedged, queries, kill_fn=hedged.fn_names[0])
+
+    # identical PackedIndex behind every replica ⇒ bit-identical merged top-k
+    assert res_hedged == res_plain
+    for q, (ext_ids, scores) in zip(queries[8:], res_hedged):
+        want = oracle.search(q, k=K)
+        assert len(ext_ids) >= min(len(want), K)
+        for (wd, ws), gs in zip(want, scores):
+            assert gs == pytest.approx(ws, rel=2e-4), q
+
+    # backups actually fired, and only on the cold-injected partition's group
+    hedge_recs = [r for r in hedged.runtime.records if r.hedged]
+    assert hedge_recs
+    assert {r.fn for r in hedge_recs} <= set(hedged.fn_groups[0])
+    assert all(r.loser_latency_s > r.latency_s for r in hedge_recs)
+
+    # the tail: every injected cold start sets p99 unhedged; hedged, the
+    # warm replica wins and p99 stays in the warm band (>> the 30% target)
+    p_plain = plain.runtime.latency_percentiles(qs=(0.99,))[0.99]
+    p_hedged = hedged.runtime.latency_percentiles(qs=(0.99,))[0.99]
+    assert p_hedged < 0.5 * p_plain
+    # same story end-to-end at the gateway (proxy + merge + fetch included)
+    gw_plain = plain.gateway.latency_percentiles("GET", "/search")[0.99]
+    gw_hedged = hedged.gateway.latency_percentiles("GET", "/search")[0.99]
+    assert gw_hedged < gw_plain
+
+
+def test_total_cost_strictly_increases_with_replication(corpus, queries):
+    dollars = []
+    for R in (1, 2, 3):
+        app = build_partitioned_search_app(
+            corpus, n_parts=N_PARTS, replicas=R,
+            hedge=HedgePolicy() if R > 1 else None)
+        _drive(app, queries, kill_fn=app.fn_names[0])
+        led = app.runtime.ledger
+        assert (led.hedge_invocations > 0) == (R > 1)
+        assert led.hedge_gb_seconds <= led.gb_seconds
+        dollars.append(led.total_dollars)
+    assert dollars[0] < dollars[1] < dollars[2]

@@ -8,7 +8,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cost import (CostLedger, Invocation, PRICE_PER_GB_S,
+from repro.core.cost import (CostLedger, Invocation,
                              fungibility_check)
 
 

@@ -8,7 +8,7 @@ import pytest
 from repro.baselines.kvstore_search import KVPostingsIndex
 from repro.data.corpus import synth_corpus, synth_queries
 from repro.index.builder import IndexWriter, read_segment, write_segment
-from repro.search.bm25 import SearchState, encode_queries, make_search_fn
+from repro.search.bm25 import encode_queries
 from repro.search.oracle import OracleSearcher
 from repro.search.searcher import SearchConfig, Searcher
 from repro.search.service import build_search_app
