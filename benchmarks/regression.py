@@ -1,0 +1,119 @@
+"""Bench-regression gate: diff BENCH_pr.json against the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.regression BENCH_baseline.json \
+        BENCH_pr.json [--summary $GITHUB_STEP_SUMMARY]
+
+Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
+exec clock makes the gated metrics machine-independent, so the committed
+baseline is comparable across CI runners and laptops alike (regenerate it
+with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b10 --json
+BENCH_baseline.json`` whenever a deliberate perf change moves a metric).
+
+Gated metrics (lower is better for all of them):
+
+* B6/B7 gateway latencies — fail on a regression > 25%
+* B7 $/1k-queries        — fail on a regression > 15%
+
+A tiny absolute floor per metric class absorbs float jitter without hiding
+real regressions (a forgotten merge-cost term or a doubled invocation count
+clears the floor by orders of magnitude). Improvements never fail the gate.
+The per-metric table goes to stdout and, with ``--summary``, to the GitHub
+job summary as markdown.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (metric name, limit as max allowed +delta fraction, absolute floor)
+LATENCY_LIMIT, COST_LIMIT = 0.25, 0.15
+LATENCY_FLOOR_MS, COST_FLOOR = 0.2, 1e-6
+
+GATES: list[tuple[str, float, float]] = [
+    ("partitions_1_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("partitions_2_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("partitions_4_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("unhedged_R1_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("hedged_R2_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("hedged_R2_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("unhedged_R1_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("hedged_R2_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+]
+
+
+def _load(path: str) -> dict[str, float]:
+    with open(path) as f:
+        return {r["name"]: r["value"] for r in json.load(f)}
+
+
+def compare(baseline: dict[str, float], pr: dict[str, float]
+            ) -> tuple[list[dict], bool]:
+    rows, failed = [], False
+    for name, limit, floor in GATES:
+        if name not in baseline or name not in pr:
+            rows.append({"name": name, "status": "MISSING",
+                         "base": baseline.get(name), "pr": pr.get(name),
+                         "delta_pct": None, "limit_pct": limit * 100})
+            failed = True       # a silently vanished metric is a regression
+            continue
+        base, cur = float(baseline[name]), float(pr[name])
+        delta = cur - base
+        delta_pct = (delta / base * 100.0) if base else float("inf")
+        bad = delta > floor and delta > limit * base
+        failed = failed or bad
+        rows.append({"name": name, "base": base, "pr": cur,
+                     "delta_pct": delta_pct, "limit_pct": limit * 100,
+                     "status": "FAIL" if bad else "ok"})
+    return rows, failed
+
+
+def render(rows: list[dict], markdown: bool) -> str:
+    head = ["metric", "baseline", "PR", "Δ%", "limit", "status"]
+    body = []
+    for r in rows:
+        dp = "—" if r["delta_pct"] is None else f"{r['delta_pct']:+.1f}%"
+        body.append([r["name"],
+                     "—" if r["base"] is None else f"{r['base']:g}",
+                     "—" if r["pr"] is None else f"{r['pr']:g}",
+                     dp, f"+{r['limit_pct']:.0f}%", r["status"]])
+    if markdown:
+        lines = ["| " + " | ".join(head) + " |",
+                 "|" + "---|" * len(head)]
+        lines += ["| " + " | ".join(row) + " |" for row in body]
+        return "\n".join(lines)
+    widths = [max(len(h), *(len(row[i]) for row in body))
+              for i, h in enumerate(head)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(head, widths))]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+              for row in body]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("pr")
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="append the markdown table here "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+    rows, failed = compare(_load(args.baseline), _load(args.pr))
+    print(render(rows, markdown=False))
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write("## Bench regression vs committed baseline\n\n")
+            f.write(render(rows, markdown=True) + "\n\n")
+            f.write(("**FAIL** — regression past the limit\n" if failed
+                     else "all gated metrics within limits\n"))
+    if failed:
+        print("\nFAIL: regression past the limit "
+              f"(latency > {LATENCY_LIMIT:.0%}, cost > {COST_LIMIT:.0%})")
+        return 1
+    print("\nok: all gated metrics within limits")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
 """Benchmark harness — one benchmark per paper table/claim.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only b1,b7]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--det] [--seed 0]
+                                            [--only b1,b7]
                                             [--json BENCH_pr.json]
 
 Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
@@ -15,6 +16,17 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
       $/1k-queries, unhedged R=1 vs hedged R=2, under cold injection
   B8  batch reindex + zero-downtime switch-over (§3)
   B9  roofline summary over the dry-run artifacts (if present)
+  B10 cost-ledger fleet autoscaler on a bursty diurnal arrival
+      pattern — $/1k and p99 at fixed-R=1, fixed-R=2, autoscaled
+
+Determinism: every RNG is seeded per-benchmark from ``--seed`` (so the
+bench-smoke gate and the CI regression diff don't depend on which
+benchmarks ran before, or on ``--only`` selection), and ``--det`` swaps
+measured jitted-eval wall time for the modeled exec clock
+(``SearchConfig.sim_exec_s``) in the fleet benchmarks (B6/B6b/B7/B10) —
+latencies and ledger charges then reproduce bit-for-bit across machines,
+which is what lets CI diff BENCH_pr.json against a committed baseline
+with tight thresholds.
 
 Output: "name,value,unit,derived" CSV lines + a human summary; ``--json``
 additionally writes the rows as a JSON list (the CI bench-smoke artifact).
@@ -24,11 +36,31 @@ from __future__ import annotations
 
 import argparse
 import json
+import random
 import time
 
 import numpy as np
 
 ROWS: list[tuple] = []
+
+# set from --det in main(): fleet benchmarks use the modeled exec clock
+DET = False
+SEED = 0
+
+
+def _seed_all(seed: int) -> None:
+    """Reset the global RNGs. Called before EVERY benchmark so each is
+    deterministic in isolation — a run with ``--only b7`` sees exactly the
+    RNG streams a full run does."""
+    random.seed(seed)
+    np.random.seed(seed)
+
+
+def _fleet_search_cfg():
+    """SearchConfig for the fleet benchmarks: modeled exec clock under
+    --det (machine-independent latencies/costs), measured otherwise."""
+    from repro.search.searcher import SearchConfig
+    return SearchConfig(sim_exec_s=0.002) if DET else None
 
 
 def emit(name: str, value, unit: str, derived: str = "") -> None:
@@ -144,7 +176,8 @@ def bench_partitions(n_docs: int, n_queries: int) -> None:
     queries = synth_queries(docs, n_queries, seed=3)
     for p in (1, 2, 4):
         app = build_partitioned_search_app(
-            docs, n_parts=p, runtime_config=RuntimeConfig())
+            docs, n_parts=p, runtime_config=RuntimeConfig(),
+            search_config=_fleet_search_cfg())
         lats = []
         for q in queries:
             r = app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
@@ -172,7 +205,8 @@ def bench_batched(n_docs: int, n_queries: int) -> None:
     docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
     queries = synth_queries(docs, n_queries, seed=4)
     app = build_partitioned_search_app(
-        docs, n_parts=2, runtime_config=RuntimeConfig())
+        docs, n_parts=2, runtime_config=RuntimeConfig(),
+        search_config=_fleet_search_cfg())
     for Q in (1, 8):
         batches = [queries[i:i + Q] for i in range(0, len(queries), Q)]
         batches = [b for b in batches if len(b) == Q]
@@ -229,7 +263,8 @@ def bench_hedged_tail(n_docs: int, n_queries: int) -> None:
     for replicas, hedge in ((1, None), (2, HedgePolicy())):
         app = build_partitioned_search_app(
             docs, n_parts=4, replicas=replicas, hedge=hedge,
-            runtime_config=RuntimeConfig())
+            runtime_config=RuntimeConfig(),
+            search_config=_fleet_search_cfg())
         app.warm()
         for q in warmup:                   # unmeasured: hydrate + history
             app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
@@ -269,6 +304,160 @@ def bench_hedged_tail(n_docs: int, n_queries: int) -> None:
     ok = all(list(ids) == [d for d, _ in oracle.search(q, k=10)]
              for q, (ids, _) in zip(measured, results[2]))
     emit("hedged_topk_equals_oracle", int(ok), "bool")
+
+
+def bench_autoscale(n_docs: int, n_queries: int) -> None:
+    """B10: the $/1k-queries vs. p99 operating point as a control loop.
+
+    A bursty diurnal arrival pattern — long quiet stretches (one query
+    every ~10 min, an order of magnitude past the 60 s instance idle
+    timeout, with a 15 s virtual timer ticking the controller so
+    keep-alive pings land every ~30-45 s) punctuated by 25 QPS bursts
+    with cold injection (a primary pool killed every 8th burst query) —
+    drives three fleets over the SAME schedule:
+
+      fixed R=1   no replicas: cheap, but every kill lands a cold start
+                  at the fan-out max (the p99 blowup B7 documents)
+      fixed R=2   PR 2's hedged fleet + keep-warm pings: flat p99, but the
+                  standby pools bill keep-alive spend through every quiet
+                  stretch whether or not a hedge ever fires
+      autoscaled  FleetController: scales each partition 1↔2 against the
+                  ledger — replicas exist (and get keep-warm pings) only
+                  around the bursts that need them; hedge-aware routing
+                  sends primaries around killed pools
+
+    All three run the same keep-alive policy (ping a pool the provider
+    would reap), so the comparison isolates SCALING, not warmth. Targets:
+    autoscaled p99 within 2× of fixed-R=2 while cutting $/1k by ≥20%, and
+    merged top-k bit-identical across fleets and equal to the exact-BM25
+    oracle throughout scale events.
+    """
+    print("\nB10: autoscaled fleet vs fixed R=1 / R=2, bursty diurnal load")
+    from repro.core.autoscale import AutoscalePolicy
+    from repro.core.partition import HedgePolicy
+    from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.oracle import OracleSearcher
+    from repro.search.service import build_partitioned_search_app
+
+    n_parts = 4
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=6)
+    n_warm = 8
+    warmup, measured = queries[:n_warm], queries[n_warm:]
+
+    # the diurnal schedule: (gap_s, kill_partition | None) per measured
+    # query — quiet/burst/quiet/burst quarters. Quiet stretches are LONG in
+    # virtual time (one query per ~10 min, hours per phase): standby upkeep
+    # accrues with wall time while a scale-up's one-off rehydration does
+    # not, and that asymmetry is the whole operating-point argument. Kills
+    # land only inside bursts, and only after the burst is old enough for a
+    # controller to have reacted (j >= 16 at 25 QPS ≈ 600 ms in).
+    rng = np.random.default_rng(SEED + 10)
+    quarter = len(measured) // 4
+    schedule: list[tuple[float, "int | None"]] = []
+    kill_idx = 0
+    for phase in range(4):
+        burst = phase % 2 == 1
+        n_phase = quarter if phase < 3 else len(measured) - 3 * quarter
+        for j in range(n_phase):
+            gap = (0.04 if burst else 600.0) * rng.uniform(0.9, 1.1)
+            kill = None
+            if burst and j >= 16 and (j - 16) % 8 == 0:
+                kill = kill_idx % n_parts
+                kill_idx += 1
+            schedule.append((gap, kill))
+
+    # the controller also ticks on a virtual timer between arrivals (the
+    # scheduled-pinger analog of CloudWatch rules) — a keep-warm policy
+    # that only ran when traffic arrived couldn't keep anything warm
+    # through a quiet stretch longer than the idle timeout
+    timer_s = 15.0
+
+    def run_fleet(replicas: int, hedge, policy):
+        app = build_partitioned_search_app(
+            docs, n_parts=n_parts, replicas=replicas, hedge=hedge,
+            autoscale=policy,
+            runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+            search_config=_fleet_search_cfg())
+        app.warm()
+        # warm-latency history for the policies; 2 q/s stays under the
+        # demand trigger so the warmup itself doesn't read as a burst
+        for q in warmup:
+            app.query(q, k=10, t_arrival=app.runtime.clock + 0.5,
+                      fetch_docs=False)
+        led = app.runtime.ledger
+        n0 = len(app.gateway.latencies[("GET", "/search")])
+        dollars0 = led.total_dollars
+        idle0, hedge0 = led.idle_dollars, led.hedge_dollars
+        out = []
+        tick = app.runtime.clock
+        for q, (gap, kill) in zip(measured, schedule):
+            t_arr = app.runtime.clock + gap
+            while tick + timer_s < t_arr:
+                tick += timer_s
+                app.controller.maybe_tick(tick)
+            tick = max(tick, t_arr)
+            if kill is not None:
+                app.runtime.kill_instance(fn=app.fn_names[kill])
+            r = app.query(q, k=10, t_arrival=t_arr, fetch_docs=False)
+            out.append((tuple(r.body["ids"]),
+                        tuple(round(s, 6) for s in r.body["scores"])))
+        p = nearest_rank_percentiles(
+            app.gateway.latencies[("GET", "/search")][n0:], qs=(0.5, 0.99))
+        return app, out, p, (led.total_dollars - dollars0,
+                             led.idle_dollars - idle0,
+                             led.hedge_dollars - hedge0)
+
+    configs = {
+        # min == max pins the fleet: the controller only keeps pools warm,
+        # so fixed and autoscaled fleets pay the identical keep-alive
+        # policy and the comparison isolates scaling
+        "fixed_R1": (1, None,
+                     AutoscalePolicy(min_replicas=1, max_replicas=1,
+                                     tick_s=0.25)),
+        "fixed_R2": (2, HedgePolicy(),
+                     AutoscalePolicy(min_replicas=2, max_replicas=2,
+                                     tick_s=0.25)),
+        "auto": (1, HedgePolicy(),
+                 AutoscalePolicy(min_replicas=1, max_replicas=2, tick_s=0.25,
+                                 rate_window_s=1.0, up_qps_per_replica=5.0,
+                                 down_qps_per_replica=1.0,
+                                 idle_ticks_to_retire=2)),
+    }
+    p99s, dollars_1k, results = {}, {}, {}
+    for tag, (replicas, hedge, policy) in configs.items():
+        app, out, p, (dollars, idle_d, hedge_d) = run_fleet(
+            replicas, hedge, policy)
+        results[tag] = out
+        p99s[tag] = p[0.99]
+        dollars_1k[tag] = dollars / len(measured) * 1000.0
+        emit(f"b10_{tag}_gw_p50_ms", round(p[0.5] * 1e3, 1), "ms")
+        emit(f"b10_{tag}_gw_p99_ms", round(p[0.99] * 1e3, 1), "ms")
+        emit(f"b10_{tag}_dollars_per_1k_q", round(dollars_1k[tag], 6), "$",
+             f"idle ${idle_d:.6f} hedge ${hedge_d:.6f}")
+        if tag == "auto":
+            st = app.controller.stats()
+            emit("b10_auto_scale_events",
+                 st["scale_ups"] + st["retires"], "events",
+                 f"{st['scale_ups']} up / {st['retires']} down, "
+                 f"{st['pings']} pings, final R={st['replica_counts']}")
+
+    emit("b10_auto_vs_R2_p99_ratio",
+         round(p99s["auto"] / p99s["fixed_R2"], 2), "x", "target: <= 2")
+    emit("b10_auto_cost_saving_vs_R2_pct",
+         round(100 * (1 - dollars_1k["auto"] / dollars_1k["fixed_R2"])),
+         "%", "target: >= 20")
+    # scaling must never change results: bit-identical across all three
+    # fleets (same PackedIndex behind every pool) and equal to the oracle
+    emit("b10_results_bitwise_equal",
+         int(results["auto"] == results["fixed_R1"] == results["fixed_R2"]),
+         "bool")
+    oracle = OracleSearcher(docs)
+    ok = all(list(ids) == [d for d, _ in oracle.search(q, k=10)]
+             for q, (ids, _) in zip(measured, results["auto"]))
+    emit("b10_auto_topk_equals_oracle", int(ok), "bool",
+         "throughout scale events")
 
 
 def bench_refresh() -> None:
@@ -322,9 +511,16 @@ def bench_roofline_summary() -> None:
 
 
 def main() -> None:
+    global DET, SEED
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI-speed)")
+    ap.add_argument("--det", action="store_true",
+                    help="modeled exec clock in fleet benchmarks — "
+                         "machine-independent latencies/costs for the CI "
+                         "regression diff")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed for every benchmark RNG")
     ap.add_argument("--docs", type=int, default=None)
     ap.add_argument("--queries", type=int, default=None)
     ap.add_argument("--only", type=str, default=None,
@@ -332,6 +528,7 @@ def main() -> None:
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write rows as JSON (CI bench-smoke artifact)")
     args = ap.parse_args()
+    DET, SEED = args.det, args.seed
     n_docs = args.docs or (2_000 if args.fast else 20_000)
     n_q = args.queries or (100 if args.fast else 400)
 
@@ -345,6 +542,7 @@ def main() -> None:
         "b7": lambda: bench_hedged_tail(min(n_docs, 8_000), min(n_q, 100)),
         "b8": bench_refresh,
         "b9": bench_roofline_summary,
+        "b10": lambda: bench_autoscale(min(n_docs, 8_000), min(n_q, 108)),
     }
     only = None
     if args.only:
@@ -357,6 +555,7 @@ def main() -> None:
     t0 = time.time()
     for key, fn in benches.items():
         if only is None or key in only:
+            _seed_all(args.seed)    # per-bench: immune to --only selection
             fn()
 
     print(f"\n# total bench wall time: {time.time() - t0:.1f}s")

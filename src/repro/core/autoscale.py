@@ -1,0 +1,287 @@
+"""Cost-ledger-driven fleet autoscaling — replicas as a runtime control loop.
+
+The paper's economics ("pay only for queries actually served") and its tail
+story (replicated partitions + hedged scatter legs) pull in opposite
+directions when the replica count is a BUILD-TIME constant: an
+over-provisioned fleet pays a keep-warm/hedge tax through every quiet hour,
+a cold-heavy one re-buys the p99 blowups hedging exists to fix. The
+:class:`FleetController` turns that $/1k-queries vs. p99 operating point
+into feedback: on a virtual-clock tick it reads, per replica group,
+
+* recent WARM latency quantiles (``FaaSRuntime.latency_percentiles`` over
+  the group — the same baseline the :class:`~repro.core.partition.HedgePolicy`
+  hedges against),
+* queue-wait/cold-boot projections (``FaaSRuntime.probe``, no fleet
+  mutation), and
+* the :class:`~repro.core.cost.CostLedger`'s hedge/idle attribution — what
+  tail mitigation and standby capacity actually cost since the last tick,
+
+then scales the group: **up** by registering a fresh ``search-p{p}rN``
+function over the partition's already-published segment (one
+``AssetCatalog`` entry, N pools — the PR 2 invariant; nothing is
+re-published) and prewarming its pool; **down** by draining the newest
+replica through ``FaaSRuntime.retire`` so in-flight work finishes and the
+keep-alive pings that made it cost money stop.
+
+Keep-alive is the controller's second job: a pool the provider would reap
+before its next use gets a ping, billed to the ledger's IDLE line — which
+is exactly the spend a scale-down decision needs to see. Ticks piggyback
+on request arrivals — the gateway coordinator calls :meth:`maybe_tick`
+AFTER dispatch, never before: a pre-dispatch ping races the request it
+rides in on for the pool's single idle instance and causes the very cold
+start it exists to prevent — and additionally fire when the kill log grows
+(the analogue of a spot/instance-termination notice, so routing and
+capacity react to a killed pool before the next full period). Long quiet
+stretches need an out-of-band timer driving :meth:`maybe_tick` as well
+(B10 does this), or pools expire between sparse arrivals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+from repro.core.runtime import FaaSRuntime, Handler
+from repro.core.partition import ScatterGather
+
+
+@dataclasses.dataclass
+class AutoscalePolicy:
+    """Knobs for one controller. Defaults are deliberately conservative:
+    scale up eagerly on tail pressure (a cold start costs ~10× a warm
+    query), scale down only after ``idle_ticks_to_retire`` consecutive
+    quiet ticks (hysteresis — a diurnal lull should retire standby pools,
+    a two-query gap should not)."""
+
+    min_replicas: int = 1
+    max_replicas: int = 3
+    tick_s: float = 1.0                 # control period (virtual seconds)
+    rate_window_s: float = 2.0          # trailing window for arrival rate
+    # demand thresholds are INVOCATIONS/s per replica (a micro-batch
+    # occupies an instance once, so it counts once): scale up above
+    # up_qps_per_replica, count an idle tick below down_qps_per_replica
+    up_qps_per_replica: float = 10.0
+    down_qps_per_replica: float = 1.0
+    idle_ticks_to_retire: int = 2       # ...for this many consecutive ticks
+    up_overhead_s: float | None = None  # queue/cold projection trigger;
+    #                                     None → max(provision/2, 2× warm p50)
+    keepalive: bool = True              # ping pools the provider would reap
+    keepalive_margin_s: float | None = None  # ping when expiry < margin;
+    #                                     None → idle_timeout / 2
+    prewarm: bool = True                # ping a just-registered replica
+
+
+@dataclasses.dataclass
+class _GroupState:
+    base: str                 # the partition's base function name (group[0])
+    next_replica: int         # suffix for the next registered replica
+    idle_ticks: int = 0
+
+
+class FleetController:
+    """The feedback loop between one runtime's ledger and one scatter's
+    replica groups.
+
+    ``handler_factories[p]()`` must build a fresh handler serving partition
+    ``p``'s published segment — the controller never touches the object
+    store, so a scale-up is registration + prewarm, never a re-publish.
+    ``ping_payload`` is the no-op request keep-alive and prewarm pings
+    carry (e.g. ``{"q": "", "k": 1, "fetch_docs": False}``).
+    """
+
+    def __init__(self, runtime: FaaSRuntime, scatter: ScatterGather,
+                 handler_factories: Sequence[Callable[[], Handler]],
+                 policy: AutoscalePolicy | None = None, *,
+                 ping_payload: Any = None) -> None:
+        if len(handler_factories) != len(scatter.groups):
+            raise ValueError(
+                f"{len(handler_factories)} handler factories for "
+                f"{len(scatter.groups)} replica groups")
+        self.runtime = runtime
+        self.scatter = scatter
+        self.factories = list(handler_factories)
+        self.policy = policy if policy is not None else AutoscalePolicy()
+        self.ping_payload = ping_payload if ping_payload is not None else {}
+        self.groups = [_GroupState(base=g[0], next_replica=len(g))
+                       for g in scatter.groups]
+        self.events: list[dict] = []     # scale_up / retire, with reasons
+        self.pings = 0
+        self._last_tick = -math.inf
+        self._rec_ptr = 0                # window start into runtime.records
+        self._kill_ptr = 0               # interrupt: unseen kill_log entries
+        self._last_spend = dict(self.runtime.ledger.attribution())
+
+    # -- the loop entry points -------------------------------------------------
+
+    def maybe_tick(self, now: float | None = None) -> bool:
+        """Tick if a full period elapsed OR the kill log grew (termination
+        notices shouldn't wait out the period). Called by the gateway
+        coordinator at every request arrival AFTER dispatch (pre-dispatch
+        keep-alive pings would race the request for the pool's idle
+        instance), and by any out-of-band timer the deployment runs."""
+        t = self.runtime.clock if now is None else now
+        if (t - self._last_tick >= self.policy.tick_s
+                or len(self.runtime.kill_log) > self._kill_ptr):
+            self.tick(t)
+            return True
+        return False
+
+    def tick(self, now: float | None = None) -> None:
+        t = self.runtime.clock if now is None else now
+        pol = self.policy
+        window = [r for r in self.runtime.records[self._rec_ptr:]
+                  if not r.keepalive]
+        self._rec_ptr = len(self.runtime.records)
+        self._kill_ptr = len(self.runtime.kill_log)
+        self._last_tick = t
+        # what the fleet spent since the last look: hedge tax (tail
+        # mitigation that fired) and idle tax (standby pools kept warm)
+        spend = self.runtime.ledger.attribution()
+        spend_delta = {k: spend[k] - self._last_spend.get(k, 0.0)
+                       for k in spend}
+        self._last_spend = spend
+
+        for p, group in enumerate(self.scatter.groups):
+            self._control_group(p, group, window, spend_delta, t)
+        if pol.keepalive:
+            self._keepalive(t)
+
+    # -- per-group control ----------------------------------------------------
+
+    def _group_rate(self, group: list[str], now: float) -> float:
+        """Arrival rate (INVOCATIONS/s) over the trailing rate window. An
+        invocation is the capacity-consuming unit — a micro-batch occupies
+        an instance once however many queries it carries — so the policy's
+        qps thresholds are per-invocation, and batched traffic reads as its
+        invocation rate, not its (higher) logical-query rate."""
+        names = set(group)
+        cutoff = now - self.policy.rate_window_s
+        n = 0
+        for r in reversed(self.runtime.records):
+            if r.t_arrival < cutoff:
+                break
+            if r.fn in names and not r.keepalive:
+                n += 1
+        return n / self.policy.rate_window_s
+
+    def _overhead_threshold(self, group: list[str]) -> float:
+        if self.policy.up_overhead_s is not None:
+            return self.policy.up_overhead_s
+        wp50 = self.runtime.latency_percentiles(
+            group, qs=(0.5,), warm_only=True)[0.5]
+        floor = self.runtime.config.provision_s / 2
+        return floor if math.isnan(wp50) else max(floor, 2.0 * wp50)
+
+    def _control_group(self, p: int, group: list[str], window: list,
+                       spend_delta: dict, now: float) -> None:
+        pol, st = self.policy, self.groups[p]
+        names = set(group)
+        grp = [r for r in window if r.fn in names]
+        colds = sum(r.cold for r in grp)
+        hedges = sum(r.hedged for r in grp)
+        rate = self._group_rate(group, now)
+        # project one tick AHEAD: at the tick instant itself the request
+        # just dispatched still occupies its instance, and a pool serving
+        # exactly one in-flight query would look like a cold start to a
+        # same-instant probe. Queue pressure that persists a tick out is
+        # the real signal.
+        horizon = now + self.policy.tick_s
+        best_overhead = min(
+            (sum(self.runtime.probe(f, horizon)) for f in group), default=0.0)
+
+        # tail pressure only justifies capacity when there is actually
+        # traffic: a once-an-hour query on a fleet whose pools expire
+        # between arrivals is cold BECAUSE it's idle — adding a second
+        # cold pool would burn a rehydration per burst-that-never-comes
+        # and the cold-in-window signal would block every retire
+        active = rate >= pol.down_qps_per_replica
+        up_reason = None
+        if rate / len(group) > pol.up_qps_per_replica:
+            up_reason = f"demand: {rate:.1f} q/s over {len(group)} pool(s)"
+        elif active and hedges:
+            up_reason = (f"hedge tax: {hedges} backup leg(s), "
+                         f"${spend_delta.get('hedge', 0.0):.6f} since last tick")
+        elif active and colds:
+            up_reason = f"tail: {colds} cold start(s) in window"
+        elif active and best_overhead > self._overhead_threshold(group):
+            up_reason = f"projection: {best_overhead * 1e3:.0f} ms queued/cold"
+
+        if up_reason is not None:
+            st.idle_ticks = 0
+            if len(group) < pol.max_replicas:
+                self._scale_up(p, st, now, up_reason)
+            return
+
+        if (len(group) > pol.min_replicas
+                and rate / len(group) < pol.down_qps_per_replica):
+            st.idle_ticks += 1
+            if st.idle_ticks >= pol.idle_ticks_to_retire:
+                self._retire(p, group, st, now,
+                             f"idle: {rate:.2f} q/s, no hedges, idle tax "
+                             f"${spend_delta.get('idle', 0.0):.6f} since last tick")
+                st.idle_ticks = 0
+        else:
+            st.idle_ticks = 0
+
+    def _scale_up(self, p: int, st: _GroupState, now: float,
+                  reason: str) -> None:
+        fn = f"{st.base}r{st.next_replica}"
+        st.next_replica += 1
+        self.runtime.register(fn, self.factories[p]())
+        self.scatter.add_replica(p, fn)
+        if self.policy.prewarm:
+            self.runtime.invoke(fn, self.ping_payload, t_arrival=now,
+                                keepalive=True)
+            self.pings += 1
+        self.events.append({"t": now, "partition": p, "action": "scale_up",
+                            "fn": fn, "reason": reason,
+                            "replicas": len(self.scatter.groups[p])})
+
+    def _retire(self, p: int, group: list[str], st: _GroupState,
+                now: float, reason: str) -> None:
+        fn = group[-1]                  # newest replica; base never leaves
+        self.scatter.remove_replica(p, fn)
+        self.runtime.retire(fn, t=now)
+        self.events.append({"t": now, "partition": p, "action": "retire",
+                            "fn": fn, "reason": reason,
+                            "replicas": len(self.scatter.groups[p])})
+
+    # -- keep-warm ------------------------------------------------------------
+
+    def _keepalive(self, now: float) -> None:
+        """Ping every pool the provider would reap before we'd plausibly
+        touch it again. Pools fed by live traffic never need it; standby
+        replicas are pinged roughly every margin-worth of quiet — the idle
+        spend this books is precisely the standing cost a retire decision
+        weighs against the hedge tax the replica saves."""
+        margin = self.policy.keepalive_margin_s
+        if margin is None:
+            margin = self.runtime.config.idle_timeout_s / 2
+        for group in self.scatter.groups:
+            for fn in group:
+                # a pool with in-flight work is being kept warm by its own
+                # traffic — pinging it would race the live request for the
+                # idle instance and force a cold start (see pool_busy)
+                if self.runtime.pool_busy(fn, now):
+                    continue
+                expiry = self.runtime.pool_expiry_s(fn, now)
+                if expiry is None or expiry < margin:
+                    self.runtime.invoke(fn, self.ping_payload,
+                                        t_arrival=now, keepalive=True)
+                    self.pings += 1
+
+    # -- introspection --------------------------------------------------------
+
+    def replica_counts(self) -> list[int]:
+        return [len(g) for g in self.scatter.groups]
+
+    def stats(self) -> dict:
+        led = self.runtime.ledger
+        return {
+            "replica_counts": self.replica_counts(),
+            "scale_ups": sum(e["action"] == "scale_up" for e in self.events),
+            "retires": sum(e["action"] == "retire" for e in self.events),
+            "pings": self.pings,
+            "spend": led.attribution(),
+        }

@@ -28,6 +28,7 @@ class Invocation:
     duration_s: float
     cold_start: bool = False
     hedge: bool = False       # a backup leg fired for tail mitigation
+    idle: bool = False        # keep-alive ping: standby capacity, not a query
 
 
 @dataclasses.dataclass
@@ -38,6 +39,13 @@ class CostLedger:
     no cancellation, so a losing leg runs (and bills) to completion — but
     they are additionally tracked in ``hedge_gb_seconds``/``hedge_invocations``
     so the tail-mitigation tax is visible next to the latency it buys.
+
+    Keep-alive pings (``idle=True``) are the other standing tax: a standby
+    replica pool answers no query but must be touched before the provider
+    reaps it, and every touch bills. Attributing that spend separately
+    (``idle_gb_seconds``/``idle_invocations``) is what lets a scale-down
+    decision see what a pool costs just to exist — retire it and the idle
+    line strictly stops growing.
     """
 
     gb_seconds: float = 0.0
@@ -46,6 +54,8 @@ class CostLedger:
     duration_s: float = 0.0
     hedge_gb_seconds: float = 0.0
     hedge_invocations: int = 0
+    idle_gb_seconds: float = 0.0
+    idle_invocations: int = 0
 
     def charge(self, inv: Invocation) -> float:
         quantum = LAMBDA_BILLING_QUANTUM_S
@@ -59,6 +69,9 @@ class CostLedger:
         if inv.hedge:
             self.hedge_gb_seconds += gbs
             self.hedge_invocations += 1
+        if inv.idle:
+            self.idle_gb_seconds += gbs
+            self.idle_invocations += 1
         return gbs * PRICE_PER_GB_S
 
     @property
@@ -77,6 +90,22 @@ class CostLedger:
     def hedge_dollars(self) -> float:
         """The tail-mitigation tax: compute dollars spent on backup legs."""
         return self.hedge_gb_seconds * PRICE_PER_GB_S
+
+    @property
+    def idle_dollars(self) -> float:
+        """The standby tax: compute dollars spent keeping pools warm."""
+        return self.idle_gb_seconds * PRICE_PER_GB_S
+
+    def attribution(self) -> dict[str, float]:
+        """Compute-dollar breakdown: serving / hedge / idle sum to
+        ``compute_dollars`` (hedge and idle are disjoint: a backup leg
+        answers a query, a keep-alive answers none)."""
+        hedge, idle = self.hedge_dollars, self.idle_dollars
+        return {
+            "serving": self.compute_dollars - hedge - idle,
+            "hedge": hedge,
+            "idle": idle,
+        }
 
     def queries_per_dollar(self) -> float:
         if self.total_dollars == 0:

@@ -143,7 +143,7 @@ class HedgePolicy:
         names = set(group)
         warm: list[float] = []
         for r in reversed(runtime.records):
-            if r.fn in names and not r.cold:
+            if r.fn in names and not r.cold and not r.keepalive:
                 warm.append(r.latency_s)
                 if len(warm) >= self.window:
                     break
@@ -185,32 +185,99 @@ class ScatterGather:
     policy threshold fires a backup on the group's best-projected replica at
     the same arrival instant; the first completion wins (bit-identical
     results either way) and both legs bill.
+
+    ``routing`` picks the primary per dispatch:
+
+    * ``"static"`` (default, PR 2 behaviour): the group's first member is
+      always primary; replicas only ever see hedge traffic.
+    * ``"aware"``: the primary ROTATES to the member with the best projected
+      overhead (``FaaSRuntime.probe``) plus a penalty per recent
+      ``kill_instance`` event in its pool — so after a pool loses an
+      instance, the next queries route around it instead of hedging against
+      it, and a backup leg never lands on the same struggling pool the
+      policy is trying to escape. Ties break by group order, keeping
+      dispatch deterministic (results are bit-identical either way: every
+      member serves the same ``PackedIndex``).
+
+    Groups are MUTABLE: a fleet controller may :meth:`add_replica` /
+    :meth:`remove_replica` between dispatches to scale a partition's
+    capacity against the cost ledger — the published segment never moves.
     """
 
     def __init__(self, runtime, fn_names: Sequence, *,
                  hedge: "HedgePolicy | None" = None,
-                 merge_cost_s: float = MERGE_COST_S) -> None:
+                 merge_cost_s: float = MERGE_COST_S,
+                 routing: str = "static",
+                 kill_window_s: float = 30.0) -> None:
+        if routing not in ("static", "aware"):
+            raise ValueError(f"routing must be 'static' or 'aware', got {routing!r}")
         self.runtime = runtime
         self.groups: list[list[str]] = [
             [g] if isinstance(g, str) else list(g) for g in fn_names]
-        self.fn_names = [g[0] for g in self.groups]   # primaries
+        self.fn_names = [g[0] for g in self.groups]   # base primaries
         self.hedge = hedge
         self.merge_cost_s = merge_cost_s
+        self.routing = routing
+        self.kill_window_s = kill_window_s
+
+    # -- mutable replica groups (the autoscaler's levers) ---------------------
+
+    def add_replica(self, partition: int, fn: str) -> None:
+        """Grow ``partition``'s group with an already-registered function
+        serving the same segment (scale-up: new pool, same asset)."""
+        group = self.groups[partition]
+        if fn in group:
+            raise ValueError(f"{fn!r} already in partition {partition}'s group")
+        group.append(fn)
+
+    def remove_replica(self, partition: int, fn: str) -> None:
+        """Shrink ``partition``'s group (scale-down). The last member can
+        never be removed — a partition must keep one serving pool, or the
+        fan-out would silently drop its documents from every result."""
+        group = self.groups[partition]
+        if fn not in group:
+            raise ValueError(f"{fn!r} not in partition {partition}'s group")
+        if len(group) == 1:
+            raise ValueError(
+                f"cannot remove {fn!r}: partition {partition}'s last replica")
+        group.remove(fn)
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _projected_overhead(self, fn: str, t0: float) -> float:
+        return sum(self.runtime.probe(fn, t0))
+
+    def _choose_primary(self, group: list[str], t0: float) -> str:
+        """Pick this dispatch's primary. Aware routing scores each member by
+        projected overhead plus one cold boot per recent kill in its pool
+        (a kill the probe can't see yet — e.g. a pool with surviving idle
+        instances — still deserves suspicion), lowest score wins."""
+        if self.routing != "aware" or len(group) == 1:
+            return group[0]
+        provision = self.runtime.config.provision_s
+
+        def score(fn: str) -> float:
+            kills = self.runtime.recent_kills(
+                fn, now=t0, window_s=self.kill_window_s)
+            return self._projected_overhead(fn, t0) + provision * kills
+
+        return min(enumerate(group), key=lambda p: (score(p[1]), p[0]))[1]
 
     def _invoke_leg(self, group: list[str], payload: Any, t0: float):
         """One partition leg: primary, plus a projection-triggered backup."""
-        primary = group[0]
-        if self.hedge is not None and len(group) > 1:
+        primary = self._choose_primary(group, t0)
+        rest = [f for f in group if f != primary]
+        if self.hedge is not None and rest:
             thresh = self.hedge.threshold_s(self.runtime, group)
             if thresh is not None:
-                projected = sum(self.runtime.probe(primary, t0))
+                projected = self._projected_overhead(primary, t0)
                 if projected > thresh:
-                    backup = min(group[1:],
-                                 key=lambda f: sum(self.runtime.probe(f, t0)))
+                    backup = min(rest,
+                                 key=lambda f: self._projected_overhead(f, t0))
                     # a replica projecting no better than the primary (both
                     # cold, or its queue just as deep) cannot win the race —
                     # firing it would double-bill for zero latency gain
-                    if sum(self.runtime.probe(backup, t0)) < projected:
+                    if self._projected_overhead(backup, t0) < projected:
                         return self.runtime.invoke_hedged(
                             primary, backup, payload, t_arrival=t0)
         return self.runtime.invoke(primary, payload, t_arrival=t0)

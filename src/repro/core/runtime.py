@@ -76,6 +76,9 @@ class InvocationRecord:
     # the latency the caller would have eaten without the backup
     backup_fn: str | None = None
     loser_latency_s: float = 0.0
+    # keep-alive ping (standby-capacity maintenance, not a query): excluded
+    # from latency percentiles and hedge-policy history, billed as idle
+    keepalive: bool = False
 
     @property
     def overhead_s(self) -> float:
@@ -110,11 +113,35 @@ class FaaSRuntime:
         self.ledger = CostLedger()
         self.records: list[InvocationRecord] = []
         self.clock = 0.0
+        self._retired: dict[str, float] = {}        # fn -> retirement time
+        self.kill_log: list[tuple[float, str]] = []  # (time, fn) per kill
 
     # -- registration ---------------------------------------------------------
 
     def register(self, fn_name: str, handler: Handler) -> None:
         self._handlers[fn_name] = handler
+        self._retired.pop(fn_name, None)   # re-registering reinstates
+
+    def registered(self, fn_name: str) -> bool:
+        return fn_name in self._handlers and fn_name not in self._retired
+
+    def retire(self, fn_name: str, *, t: float | None = None) -> None:
+        """Stop routing to ``fn_name`` and drain its pool.
+
+        Retirement is the scale-down half of fleet control: no NEW
+        invocation may land on a retired function (``invoke`` raises), its
+        idle instances are reclaimed immediately, and busy ones finish
+        their in-flight request — win or lose a hedge race, FaaS can't
+        cancel — then evaporate on the next fleet sweep. The published
+        segment is untouched: retiring ``search-p0r2`` removes one instance
+        pool over the asset, never the asset itself."""
+        if fn_name not in self._handlers:
+            raise RuntimeError_(f"no function {fn_name!r} registered")
+        now = self.clock if t is None else max(t, 0.0)
+        self._retired[fn_name] = now
+        self._instances = [
+            i for i in self._instances
+            if not (i.fn == fn_name and i.busy_until <= now)]
 
     # -- fleet management (what AWS does behind the scenes) --------------------
 
@@ -123,6 +150,7 @@ class FaaSRuntime:
         self._instances = [
             i for i in self._instances
             if i.alive and (now - i.last_used) <= cfg.idle_timeout_s
+            and not (i.fn in self._retired and i.busy_until <= now)
         ]
 
     def _acquire(self, now: float, fn: str = "") -> tuple[Instance, bool]:
@@ -182,7 +210,38 @@ class FaaSRuntime:
             return False
         victim.alive = False
         self._instances.remove(victim)
+        # the kill log is what hedge-aware routing rotates primaries on:
+        # a pool that just lost an instance is the one most likely to greet
+        # the next request with a cold start
+        self.kill_log.append((self.clock, victim.fn))
         return True
+
+    def recent_kills(self, fn: str, *, now: float | None = None,
+                     window_s: float = 30.0) -> int:
+        """Kill events in ``fn``'s pool within the trailing window — the
+        'recently struggling' signal for routing and scale-up decisions."""
+        t = self.clock if now is None else now
+        return sum(1 for (tk, f) in self.kill_log
+                   if f == fn and 0.0 <= t - tk <= window_s)
+
+    def pool_busy(self, fn: str, now: float | None = None) -> bool:
+        """True if any of ``fn``'s instances has in-flight work at ``now``.
+        A busy pool needs no keep-alive: serving traffic IS its keep-alive,
+        and a ping racing a live request would steal the idle instance the
+        request was about to reuse — forcing a pointless cold start."""
+        t = self.clock if now is None else now
+        return any(i.fn == fn and i.alive and i.busy_until > t
+                   for i in self._instances)
+
+    def pool_expiry_s(self, fn: str, now: float | None = None) -> float | None:
+        """Seconds until the LAST of ``fn``'s instances would be reaped for
+        idleness (None if the pool has no instances). A keep-alive manager
+        pings a pool when this drops under its margin; a warm pool serving
+        steady traffic never needs the ping."""
+        t = self.clock if now is None else now
+        expiries = [i.last_used + self.config.idle_timeout_s - t
+                    for i in self._instances if i.fn == fn and i.alive]
+        return max(expiries) if expiries else None
 
     # -- invocation -------------------------------------------------------------
 
@@ -211,12 +270,15 @@ class FaaSRuntime:
             return max(0.0, victim.busy_until - now), cfg.provision_s
         return 0.0, cfg.provision_s
 
-    def invoke(self, fn: str, payload: Any, *, t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
+    def invoke(self, fn: str, payload: Any, *, t_arrival: float | None = None,
+               keepalive: bool = False) -> tuple[Any, InvocationRecord]:
         if fn not in self._handlers:
             raise RuntimeError_(f"no function {fn!r} registered")
+        if fn in self._retired:
+            raise RuntimeError_(f"function {fn!r} is retired (draining)")
         now = self.clock if t_arrival is None else max(t_arrival, 0.0)
         self.clock = max(self.clock, now)
-        return self._invoke_retrying(fn, payload, now)
+        return self._invoke_retrying(fn, payload, now, keepalive=keepalive)
 
     def invoke_hedged(self, fn: str, backup_fn: str, payload: Any, *,
                       t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
@@ -235,6 +297,8 @@ class FaaSRuntime:
         for name in (fn, backup_fn):
             if name not in self._handlers:
                 raise RuntimeError_(f"no function {name!r} registered")
+            if name in self._retired:
+                raise RuntimeError_(f"function {name!r} is retired (draining)")
         now = self.clock if t_arrival is None else max(t_arrival, 0.0)
         self.clock = max(self.clock, now)
         res_a, rec_a = self._invoke_retrying(fn, payload, now, record=False)
@@ -248,12 +312,14 @@ class FaaSRuntime:
         return res, rec
 
     def _invoke_retrying(self, fn: str, payload: Any, now: float, *,
-                         record: bool = True, hedge: bool = False):
+                         record: bool = True, hedge: bool = False,
+                         keepalive: bool = False):
         attempt = 0
         while True:
             try:
                 return self._invoke_once(fn, payload, now, attempt,
-                                         record=record, hedge=hedge)
+                                         record=record, hedge=hedge,
+                                         keepalive=keepalive)
             except _InstanceDied:
                 attempt += 1
                 if attempt > self.config.max_retries:
@@ -261,7 +327,8 @@ class FaaSRuntime:
                 # retry immediately on another instance (client-side retry)
 
     def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int, *,
-                     record: bool = True, hedge: bool = False):
+                     record: bool = True, hedge: bool = False,
+                     keepalive: bool = False):
         cfg = self.config
         inst, fresh = self._acquire(now, fn)
         queue_wait = max(0.0, inst.busy_until - now)
@@ -316,12 +383,12 @@ class FaaSRuntime:
         self.clock = max(self.clock, inst.busy_until)
 
         self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s,
-                                      cold, hedge=hedge))
+                                      cold, hedge=hedge, idle=keepalive))
         rec = InvocationRecord(
             fn=fn, t_arrival=now, t_done=t_start + result_duration,
             latency_s=queue_wait + result_duration, exec_s=exec_s,
             hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
-            retries=attempt, hedged=hedged,
+            retries=attempt, hedged=hedged, keepalive=keepalive,
         )
         if record:
             self.records.append(rec)
@@ -338,7 +405,9 @@ class FaaSRuntime:
         """Latency quantiles over the record log. ``fn`` may be a single
         function name or a collection of names (e.g. one partition's replica
         group); ``warm_only`` drops cold-start records — the baseline a
-        hedging policy compares projected completions against."""
+        hedging policy compares projected completions against. Keep-alive
+        pings are never counted: they are capacity maintenance, not queries,
+        and their near-zero exec would drag every quantile down."""
         if fn is None:
             match = lambda r: True
         elif isinstance(fn, str):
@@ -348,7 +417,8 @@ class FaaSRuntime:
             match = lambda r: r.fn in names
         return nearest_rank_percentiles(
             (r.latency_s for r in self.records
-             if match(r) and not (warm_only and r.cold)), qs)
+             if match(r) and not r.keepalive and not (warm_only and r.cold)),
+            qs)
 
     def warm_fraction(self, fn: str | None = None) -> float:
         recs = [r for r in self.records if fn is None or r.fn == fn]

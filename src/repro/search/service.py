@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
+from repro.core.autoscale import AutoscalePolicy, FleetController
 from repro.core.gateway import Gateway
 from repro.core.kvstore import KVStore
 from repro.core.object_store import Backend, ObjectStore
@@ -123,6 +124,7 @@ class PartitionedSearchApp:
     search_k: int = 10       # per-partition compiled top-k (SearchConfig.k)
     fn_groups: list[list[str]] = dataclasses.field(default_factory=list)
     replicas: int = 1
+    controller: FleetController | None = None
 
     def query(self, q: "str | list[str]", k: int = 10, *,
               t_arrival: float | None = None, fetch_docs: bool = True):
@@ -140,13 +142,16 @@ class PartitionedSearchApp:
         """Touch EVERY function — primaries and replicas — once, hydrating
         each pool (replicas otherwise only see traffic when a hedge fires,
         so a backup leg would land as cold as the straggler it covers).
-        The paper's "keep the fleet warm" pinger, fleet-wide."""
+        The paper's "keep the fleet warm" pinger, fleet-wide. Pings are
+        capacity maintenance, not queries: they bill to the ledger's idle
+        line and stay out of latency percentiles and controller signals."""
         t0 = self.runtime.clock if t_arrival is None else t_arrival
         recs = []
         for group in self.fn_groups:
             for fn in group:
                 _, rec = self.runtime.invoke(
-                    fn, {"q": "", "k": 1, "fetch_docs": False}, t_arrival=t0)
+                    fn, {"q": "", "k": 1, "fetch_docs": False}, t_arrival=t0,
+                    keepalive=True)
                 recs.append(rec)
         return recs
 
@@ -201,6 +206,15 @@ class PartitionedSearchApp:
              "latency_s": r.latency_s, "hedged": r.hedged} for r in records]
         slowest = max(records, key=lambda r: r.latency_s, default=None) \
             if records else None
+        # the control loop rides the request path: the controller ticks at
+        # the arrival instant AFTER dispatch — scale decisions see this
+        # arrival in their window, and keep-alive pings can never race the
+        # request itself for a pool's idle instance (the legs just
+        # dispatched hold their instances busy at t0, so their pools are
+        # skipped as traffic-warmed)
+        if self.controller is not None:
+            self.controller.maybe_tick(
+                self.runtime.clock if t_arrival is None else t_arrival)
         return result, lat + fetch_s, slowest
 
 
@@ -210,6 +224,8 @@ def build_partitioned_search_app(
     *,
     replicas: int = 1,
     hedge: "HedgePolicy | float | None" = None,
+    autoscale: "AutoscalePolicy | bool | None" = None,
+    routing: str | None = None,
     runtime_config: RuntimeConfig | None = None,
     search_config: SearchConfig | None = None,
     backend: Backend | None = None,
@@ -229,11 +245,25 @@ def build_partitioned_search_app(
     bit-identical hits. ``hedge`` is a :class:`HedgePolicy` (or a float
     shorthand for a fixed ``after_s`` threshold) enabling projection-based
     backup legs; replicas without a policy are standby-only.
+
+    ``autoscale`` (an :class:`AutoscalePolicy`, or ``True`` for defaults)
+    attaches a :class:`FleetController`: ``replicas`` then only sets the
+    STARTING group size, and the controller grows/shrinks each partition's
+    pool count between ``min_replicas`` and ``max_replicas`` against the
+    cost ledger, ticking on the request path. ``routing`` selects the
+    scatter's primary-choice rule (``"static"`` or ``"aware"``); it
+    defaults to ``"aware"`` whenever a controller is attached — a fleet
+    whose pools come and go should not pin primaries to pool zero — and to
+    the PR 2 ``"static"`` behaviour otherwise.
     """
     if replicas < 1:
         raise ValueError(f"replicas must be >= 1, got {replicas}")
     if isinstance(hedge, (int, float)):
         hedge = HedgePolicy(after_s=float(hedge))
+    if autoscale is True:
+        autoscale = AutoscalePolicy()
+    if routing is None:
+        routing = "aware" if autoscale else "static"
     docs = list(docs)
     store = ObjectStore(backend)
     doc_store = KVStore()
@@ -259,13 +289,24 @@ def build_partitioned_search_app(
             group.append(fn)
         assets.append(asset)
         fn_groups.append(group)
-    scatter = ScatterGather(runtime, fn_groups, hedge=hedge)
+    scatter = ScatterGather(runtime, fn_groups, hedge=hedge, routing=routing)
     gateway = Gateway(runtime)
+    controller = None
+    if autoscale:
+        # one factory per partition: a scale-up registers a fresh handler
+        # over the SAME published asset — no re-publish, no new segment
+        factories = [
+            (lambda a=asset_name: make_search_handler(
+                catalog, doc_store, a, search_config))
+            for asset_name in assets]
+        controller = FleetController(
+            runtime, scatter, factories, autoscale,
+            ping_payload={"q": "", "k": 1, "fetch_docs": False})
     app = PartitionedSearchApp(
         store=store, catalog=catalog, doc_store=doc_store, runtime=runtime,
         gateway=gateway, scatter=scatter, assets=assets,
         fn_names=scatter.fn_names, n_parts=n_parts, n_docs_local=per,
         search_k=(search_config or SearchConfig()).k,
-        fn_groups=scatter.groups, replicas=replicas)
+        fn_groups=scatter.groups, replicas=replicas, controller=controller)
     gateway.route("GET", "/search", app._search_route)
     return app

@@ -1,0 +1,315 @@
+"""Fleet autoscaling: the cost-ledger control loop, layer by layer.
+
+* ledger — ``dollars_per_1k`` bills per LOGICAL query while hedge and idle
+  (keep-alive) spend are attributed separately; the three attribution lines
+  always sum to the compute bill.
+* runtime — ``retire`` blocks new invocations and drains in-flight work;
+  keep-alive invocations bill as idle capacity and stay out of latency
+  percentiles and hedge-policy history.
+* scatter — replica groups are mutable (with a last-replica guard), and
+  aware routing rotates primaries away from pools with recent kills or the
+  worst projected overhead.
+* controller — bursts grow a partition's group (new ``search-p{p}rN`` over
+  the SAME published segment), sustained idleness shrinks it, retiring an
+  idle replica strictly reduces what the same traffic costs, and results
+  stay bit-identical to an unscaled fleet and the oracle throughout.
+"""
+
+import pytest
+
+from repro.core.autoscale import AutoscalePolicy
+from repro.core.cost import CostLedger, Invocation
+from repro.core.partition import HedgePolicy, ScatterGather
+from repro.core.runtime import FaaSRuntime, RuntimeConfig, RuntimeError_
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.oracle import OracleSearcher
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_partitioned_search_app
+
+K = 10
+N_PARTS = 2
+GB2 = 2 << 30
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(240, vocab=400, seed=41)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return synth_queries(corpus, 40, seed=43)
+
+
+def _det_cfg():
+    # modeled exec clock: latencies and charges in these tests are exact
+    return SearchConfig(sim_exec_s=0.002)
+
+
+def _build(corpus, **kw):
+    kw.setdefault("search_config", _det_cfg())
+    return build_partitioned_search_app(corpus, n_parts=N_PARTS, **kw)
+
+
+# -- ledger layer -------------------------------------------------------------
+
+
+def test_dollars_per_1k_counts_logical_queries_under_hedging():
+    led = CostLedger()
+    for _ in range(10):
+        led.charge(Invocation(GB2, 0.1))
+    for _ in range(3):                      # backup legs: bill, answer nothing
+        led.charge(Invocation(GB2, 0.1, hedge=True))
+    assert led.invocations == 13
+    # 10 logical queries paid for 13 invocations — the denominator is the
+    # caller's query count, so hedging shows up as a higher $/1k, never as
+    # phantom extra queries
+    assert led.dollars_per_1k(10) == pytest.approx(
+        led.total_dollars / 10 * 1000.0)
+    assert led.hedge_dollars > 0
+    assert led.dollars_per_1k(0) != led.dollars_per_1k(0)  # NaN guard
+
+
+def test_attribution_partitions_the_compute_bill():
+    led = CostLedger()
+    led.charge(Invocation(GB2, 0.2))
+    led.charge(Invocation(GB2, 0.2, hedge=True))
+    led.charge(Invocation(GB2, 0.05, idle=True))
+    att = led.attribution()
+    assert att["hedge"] > 0 and att["idle"] > 0 and att["serving"] > 0
+    assert sum(att.values()) == pytest.approx(led.compute_dollars)
+    assert led.idle_invocations == 1 and led.hedge_invocations == 1
+
+
+# -- runtime layer ------------------------------------------------------------
+
+
+def _sleepy_handler(cache, payload):
+    cache.get_or_hydrate("state", "v1", lambda: (object(), 0.2))
+    return payload, 0.01
+
+
+def test_keepalive_bills_idle_and_stays_out_of_percentiles():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _sleepy_handler)
+    _, rec = rt.invoke("f", 0, keepalive=True)
+    assert rec.keepalive
+    assert rt.ledger.idle_invocations == 1 and rt.ledger.idle_gb_seconds > 0
+    # pings are not queries: the percentile log must be empty without them
+    p = rt.latency_percentiles("f", qs=(0.5,))
+    assert p[0.5] != p[0.5]                 # NaN
+    _, rec2 = rt.invoke("f", 1, t_arrival=rt.clock + 1)
+    assert not rec2.keepalive
+    assert rt.ledger.idle_invocations == 1  # unchanged by a real query
+    assert rt.latency_percentiles("f", qs=(0.5,))[0.5] == pytest.approx(
+        rec2.latency_s)
+
+
+def test_hedge_policy_ignores_keepalive_history():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("p", _sleepy_handler)
+    rt.register("r", _sleepy_handler)
+    pol = HedgePolicy(min_history=2)
+    for i in range(4):                      # warm pings only
+        rt.invoke("p", i, t_arrival=rt.clock + 1, keepalive=True)
+    assert pol.threshold_s(rt, ["p", "r"]) is None
+    for i in range(2):                      # real warm traffic
+        rt.invoke("p", i, t_arrival=rt.clock + 1)
+    assert pol.threshold_s(rt, ["p", "r"]) is not None
+
+
+def test_retire_blocks_new_invocations_and_drains():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", _sleepy_handler)
+    rt.register("g", _sleepy_handler)
+    _, rec = rt.invoke("f", 0)              # busy until ~0.36 (cold+hydrate)
+    busy_until = rec.t_done
+    rt.retire("f", t=busy_until - 0.05)     # mid-flight: must drain, not kill
+    assert not rt.registered("f")
+    assert rt.fleet_size == 1               # in-flight instance still there
+    with pytest.raises(RuntimeError_, match="retired"):
+        rt.invoke("f", 1, t_arrival=busy_until + 1)
+    # any later fleet sweep (here: an unrelated invocation) reaps the
+    # drained instance
+    rt.invoke("g", 0, t_arrival=busy_until + 1)
+    assert all(i.fn != "f" for i in rt._instances)
+    # an idle pool retires immediately
+    rt.retire("g", t=rt.clock + 1)
+    assert rt.fleet_size == 0
+    # re-registering reinstates
+    rt.register("g", _sleepy_handler)
+    rt.invoke("g", 0, t_arrival=rt.clock + 2)
+
+
+def test_pool_introspection():
+    rt = FaaSRuntime(RuntimeConfig(idle_timeout_s=100.0))
+    rt.register("f", _sleepy_handler)
+    assert rt.pool_expiry_s("f") is None
+    _, rec = rt.invoke("f", 0)
+    assert rt.pool_busy("f", rec.t_done - 0.01)
+    assert not rt.pool_busy("f", rec.t_done + 0.01)
+    exp = rt.pool_expiry_s("f", rec.t_done + 10.0)
+    assert exp == pytest.approx(90.0)
+    assert rt.kill_instance(fn="f")
+    assert rt.recent_kills("f", now=rt.clock, window_s=30.0) == 1
+    assert rt.recent_kills("f", now=rt.clock + 60.0, window_s=30.0) == 0
+
+
+# -- scatter layer ------------------------------------------------------------
+
+
+def test_replica_groups_are_mutable_with_last_replica_guard():
+    rt = FaaSRuntime(RuntimeConfig())
+    for fn in ("a", "a1", "b"):
+        rt.register(fn, _sleepy_handler)
+    sc = ScatterGather(rt, [["a"], ["b"]])
+    sc.add_replica(0, "a1")
+    assert sc.groups[0] == ["a", "a1"]
+    with pytest.raises(ValueError):
+        sc.add_replica(0, "a1")             # duplicate
+    sc.remove_replica(0, "a1")
+    with pytest.raises(ValueError):
+        sc.remove_replica(0, "a")           # last member
+    with pytest.raises(ValueError):
+        sc.remove_replica(1, "a")           # not a member
+
+
+def test_aware_routing_rotates_primary_off_killed_pool(corpus, queries):
+    apps = {r: _build(corpus, replicas=2, routing=r)
+            for r in ("static", "aware")}
+    outs = {}
+    for routing, app in apps.items():
+        app.warm()
+        app.query(queries[0], k=K, t_arrival=app.runtime.clock + 0.5,
+                  fetch_docs=False)
+        assert app.runtime.kill_instance(fn=app.fn_names[0])
+        n0 = len(app.runtime.records)
+        r = app.query(queries[1], k=K, t_arrival=app.runtime.clock + 0.5,
+                      fetch_docs=False)
+        outs[routing] = (tuple(r.body["ids"]),
+                         tuple(round(s, 6) for s in r.body["scores"]))
+        rec0 = next(rec for rec in app.runtime.records[n0:]
+                    if rec.fn in app.fn_groups[0])
+        if routing == "aware":
+            # primary rotated to the warm replica: no cold start at all
+            assert rec0.fn == app.fn_groups[0][1]
+            assert not rec0.cold
+        else:
+            # static keeps the killed pool as primary (and, with no hedge
+            # policy here, eats the cold start the kill caused)
+            assert rec0.fn == app.fn_groups[0][0]
+            assert rec0.cold
+    assert outs["aware"] == outs["static"]  # same PackedIndex either way
+
+
+# -- controller layer ---------------------------------------------------------
+
+
+def _policy(**kw):
+    kw.setdefault("min_replicas", 1)
+    kw.setdefault("max_replicas", 2)
+    kw.setdefault("tick_s", 0.25)
+    kw.setdefault("rate_window_s", 1.0)
+    kw.setdefault("up_qps_per_replica", 5.0)
+    kw.setdefault("down_qps_per_replica", 1.0)
+    kw.setdefault("idle_ticks_to_retire", 2)
+    return AutoscalePolicy(**kw)
+
+
+def _drive(app, qs, gap):
+    for q in qs:
+        r = app.query(q, k=K, t_arrival=app.runtime.clock + gap,
+                      fetch_docs=False)
+        assert r.ok, r.body
+        yield r
+
+
+def test_controller_scales_up_on_burst_and_down_when_idle(corpus, queries):
+    app = _build(corpus, replicas=1, hedge=HedgePolicy(),
+                 autoscale=_policy())
+    assert app.controller is not None
+    assert app.scatter.routing == "aware"   # autoscale default
+    app.warm()
+    list(_drive(app, queries[:12], gap=0.04))      # 25 q/s burst
+    assert app.controller.replica_counts() == [2] * N_PARTS
+    # scale-up registered a FRESH function over the same asset and
+    # prewarmed its pool — no re-publish, segments untouched
+    assert app.fn_groups[0][1] == "search-p0r1"
+    assert app.runtime.registered("search-p0r1")
+    assert app.runtime.pool_expiry_s("search-p0r1") is not None
+    assert len(app.assets) == N_PARTS
+    ups = [e for e in app.controller.events if e["action"] == "scale_up"]
+    assert len(ups) == N_PARTS and all("demand" in e["reason"] for e in ups)
+
+    list(_drive(app, queries[12:18], gap=60.0))    # sustained idleness
+    assert app.controller.replica_counts() == [1] * N_PARTS
+    downs = [e for e in app.controller.events if e["action"] == "retire"]
+    assert {e["fn"] for e in downs} == {"search-p0r1", "search-p1r1"}
+    assert not app.runtime.registered("search-p0r1")
+    # a retired replica's pool is gone after the drain sweep
+    assert all(i.fn not in {"search-p0r1", "search-p1r1"}
+               for i in app.runtime._instances)
+
+
+def test_retiring_idle_replica_strictly_cuts_cost(corpus, queries):
+    """The scale-down economics: over an identical quiet stretch, the fleet
+    that retired its standby replicas must spend strictly less — retirement
+    stops the keep-alive pings that make standby capacity cost money."""
+    def run(policy):
+        app = _build(corpus, replicas=2, hedge=HedgePolicy(),
+                     autoscale=policy,
+                     runtime_config=RuntimeConfig(idle_timeout_s=60.0))
+        app.warm()
+        list(_drive(app, queries[:4], gap=0.5))
+        led = app.runtime.ledger
+        d0 = led.total_dollars
+        idle0 = led.idle_dollars
+        # a long quiet stretch, timer-ticked like a scheduled pinger
+        tick = app.runtime.clock
+        for q in queries[4:8]:
+            t_arr = app.runtime.clock + 600.0
+            while tick + 15.0 < t_arr:
+                tick += 15.0
+                app.controller.maybe_tick(tick)
+            tick = max(tick, t_arr)
+            app.query(q, k=K, t_arrival=t_arr, fetch_docs=False)
+        return app, led.total_dollars - d0, led.idle_dollars - idle0
+
+    fixed_app, fixed_cost, fixed_idle = run(
+        _policy(min_replicas=2, max_replicas=2))
+    auto_app, auto_cost, auto_idle = run(_policy())
+    assert fixed_app.controller.replica_counts() == [2] * N_PARTS
+    assert auto_app.controller.replica_counts() == [1] * N_PARTS
+    assert any(e["action"] == "retire" for e in auto_app.controller.events)
+    assert auto_idle < fixed_idle           # the pings stopped...
+    assert auto_cost < fixed_cost           # ...and the bill strictly shrank
+
+
+def test_results_bit_identical_through_scale_events(corpus, queries, oracle=None):
+    plain = _build(corpus, replicas=1)
+    auto = _build(corpus, replicas=1, hedge=HedgePolicy(),
+                  autoscale=_policy())
+    outs = {}
+    for name, app in (("plain", plain), ("auto", auto)):
+        app.warm()
+        out = []
+        # burst (scales auto up) with a kill, then quiet (scales it down)
+        for i, q in enumerate(queries[:16]):
+            if i == 12:
+                app.runtime.kill_instance(fn=app.fn_names[0])
+            r = app.query(q, k=K, t_arrival=app.runtime.clock + 0.04,
+                          fetch_docs=False)
+            out.append((tuple(r.body["ids"]),
+                        tuple(round(s, 6) for s in r.body["scores"])))
+        for q in queries[16:22]:
+            r = app.query(q, k=K, t_arrival=app.runtime.clock + 60.0,
+                          fetch_docs=False)
+            out.append((tuple(r.body["ids"]),
+                        tuple(round(s, 6) for s in r.body["scores"])))
+        outs[name] = out
+    assert auto.controller.events          # scaling actually happened
+    assert outs["auto"] == outs["plain"]
+    oracle = OracleSearcher(corpus)
+    for q, (ids, _) in zip(queries[:22], outs["auto"]):
+        want = [d for d, _ in oracle.search(q, k=K)]
+        assert list(ids) == want, q
