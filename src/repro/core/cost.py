@@ -29,6 +29,7 @@ class Invocation:
     cold_start: bool = False
     hedge: bool = False       # a backup leg fired for tail mitigation
     idle: bool = False        # keep-alive ping: standby capacity, not a query
+    write: bool = False       # indexing work: delta pack / merge, not a query
 
 
 @dataclasses.dataclass
@@ -46,6 +47,12 @@ class CostLedger:
     (``idle_gb_seconds``/``idle_invocations``) is what lets a scale-down
     decision see what a pool costs just to exist — retire it and the idle
     line strictly stops growing.
+
+    Writer invocations (``write=True``) are the NRT ingestion tax: delta
+    packing and merge compaction run as Lambda work and bill like any
+    invocation, but answer no query — a $/1k-queries number that silently
+    folded indexing into serving would make update-heavy workloads look
+    like expensive queries instead of cheap queries plus an indexing bill.
     """
 
     gb_seconds: float = 0.0
@@ -56,6 +63,8 @@ class CostLedger:
     hedge_invocations: int = 0
     idle_gb_seconds: float = 0.0
     idle_invocations: int = 0
+    write_gb_seconds: float = 0.0
+    write_invocations: int = 0
 
     def charge(self, inv: Invocation) -> float:
         quantum = LAMBDA_BILLING_QUANTUM_S
@@ -72,6 +81,9 @@ class CostLedger:
         if inv.idle:
             self.idle_gb_seconds += gbs
             self.idle_invocations += 1
+        if inv.write:
+            self.write_gb_seconds += gbs
+            self.write_invocations += 1
         return gbs * PRICE_PER_GB_S
 
     @property
@@ -96,15 +108,22 @@ class CostLedger:
         """The standby tax: compute dollars spent keeping pools warm."""
         return self.idle_gb_seconds * PRICE_PER_GB_S
 
+    @property
+    def write_dollars(self) -> float:
+        """The ingestion tax: compute dollars spent packing deltas/merges."""
+        return self.write_gb_seconds * PRICE_PER_GB_S
+
     def attribution(self) -> dict[str, float]:
-        """Compute-dollar breakdown: serving / hedge / idle sum to
-        ``compute_dollars`` (hedge and idle are disjoint: a backup leg
-        answers a query, a keep-alive answers none)."""
+        """Compute-dollar breakdown: serving / hedge / idle / write sum to
+        ``compute_dollars`` (the classes are disjoint: a backup leg answers
+        a query, a keep-alive answers none, a writer indexes)."""
         hedge, idle = self.hedge_dollars, self.idle_dollars
+        write = self.write_dollars
         return {
-            "serving": self.compute_dollars - hedge - idle,
+            "serving": self.compute_dollars - hedge - idle - write,
             "hedge": hedge,
             "idle": idle,
+            "write": write,
         }
 
     def queries_per_dollar(self) -> float:

@@ -41,6 +41,7 @@ class KVModel:
 class KVStats:
     gets: int = 0
     puts: int = 0
+    deletes: int = 0
     round_trips: int = 0
     sim_seconds: float = 0.0
 
@@ -69,6 +70,17 @@ class KVStore:
         self.stats.puts += len(items)
         self.stats.round_trips += 1
         self.stats.sim_seconds += self.model.put_s
+
+    def delete(self, key: str) -> None:
+        """DeleteItem semantics: idempotent, missing keys are a no-op.
+        Without this, a search fleet's document deletes would be cosmetic —
+        the index tombstones the doc but its full contents stay fetchable
+        by ext id forever (the usual reason to delete IS data removal)."""
+        with self._lock:
+            self._items.pop(key, None)
+        self.stats.deletes += 1
+        self.stats.round_trips += 1
+        self.stats.sim_seconds += self.model.put_s   # DeleteItem ≈ PutItem
 
     def get(self, key: str) -> dict:
         with self._lock:

@@ -102,6 +102,18 @@ def partitioned_topk(
 MERGE_COST_S = 0.001
 
 
+class GenerationMismatch(Exception):
+    """A scatter's legs answered from DIFFERENT index generations.
+
+    Merging such hits would be silently wrong — partition A scored under
+    generation N's stats while partition B scored under N+1's (different
+    idf/avgdl, different tombstones), so the merged ranking corresponds to
+    no index that ever existed. The coordinator pins one generation per
+    query precisely so this cannot happen; this guard turns any future
+    regression (an unpinned payload, a handler ignoring the pin) into a
+    loud failure instead of a subtly-torn result."""
+
+
 @dataclasses.dataclass
 class HedgePolicy:
     """When does a scatter leg deserve a backup on a replica?
@@ -219,6 +231,7 @@ class ScatterGather:
         self.merge_cost_s = merge_cost_s
         self.routing = routing
         self.kill_window_s = kill_window_s
+        self.last_versions: list[str] = []   # index versions of the last scatter
 
     # -- mutable replica groups (the autoscaler's levers) ---------------------
 
@@ -297,8 +310,21 @@ class ScatterGather:
             result, rec = self._invoke_leg(group, payload, t0)
             results.append(result)
             records.append(rec)
+        self._check_generations(results)
         lat = max((r.latency_s for r in records), default=0.0)
         return results, lat + self.merge_cost_s, records
+
+    def _check_generations(self, results: list) -> None:
+        """Every leg that reports an index version must report the SAME one
+        — hedged replicas and freshly-scaled pools included. See
+        :class:`GenerationMismatch`."""
+        versions = {r["version"] for r in results
+                    if isinstance(r, dict) and "version" in r}
+        self.last_versions = sorted(versions)
+        if len(versions) > 1:
+            raise GenerationMismatch(
+                f"scatter legs answered from {sorted(versions)} — a query "
+                "may never merge hits across index generations")
 
     def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
         """Single-query scatter-gather: merged top-k hits."""

@@ -79,6 +79,8 @@ class InvocationRecord:
     # keep-alive ping (standby-capacity maintenance, not a query): excluded
     # from latency percentiles and hedge-policy history, billed as idle
     keepalive: bool = False
+    # indexing work (delta pack / merge): billed to the ledger's write line
+    write: bool = False
 
     @property
     def overhead_s(self) -> float:
@@ -271,14 +273,16 @@ class FaaSRuntime:
         return 0.0, cfg.provision_s
 
     def invoke(self, fn: str, payload: Any, *, t_arrival: float | None = None,
-               keepalive: bool = False) -> tuple[Any, InvocationRecord]:
+               keepalive: bool = False,
+               write: bool = False) -> tuple[Any, InvocationRecord]:
         if fn not in self._handlers:
             raise RuntimeError_(f"no function {fn!r} registered")
         if fn in self._retired:
             raise RuntimeError_(f"function {fn!r} is retired (draining)")
         now = self.clock if t_arrival is None else max(t_arrival, 0.0)
         self.clock = max(self.clock, now)
-        return self._invoke_retrying(fn, payload, now, keepalive=keepalive)
+        return self._invoke_retrying(fn, payload, now, keepalive=keepalive,
+                                     write=write)
 
     def invoke_hedged(self, fn: str, backup_fn: str, payload: Any, *,
                       t_arrival: float | None = None) -> tuple[Any, InvocationRecord]:
@@ -313,13 +317,13 @@ class FaaSRuntime:
 
     def _invoke_retrying(self, fn: str, payload: Any, now: float, *,
                          record: bool = True, hedge: bool = False,
-                         keepalive: bool = False):
+                         keepalive: bool = False, write: bool = False):
         attempt = 0
         while True:
             try:
                 return self._invoke_once(fn, payload, now, attempt,
                                          record=record, hedge=hedge,
-                                         keepalive=keepalive)
+                                         keepalive=keepalive, write=write)
             except _InstanceDied:
                 attempt += 1
                 if attempt > self.config.max_retries:
@@ -328,7 +332,7 @@ class FaaSRuntime:
 
     def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int, *,
                      record: bool = True, hedge: bool = False,
-                     keepalive: bool = False):
+                     keepalive: bool = False, write: bool = False):
         cfg = self.config
         inst, fresh = self._acquire(now, fn)
         queue_wait = max(0.0, inst.busy_until - now)
@@ -383,12 +387,13 @@ class FaaSRuntime:
         self.clock = max(self.clock, inst.busy_until)
 
         self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s,
-                                      cold, hedge=hedge, idle=keepalive))
+                                      cold, hedge=hedge, idle=keepalive,
+                                      write=write))
         rec = InvocationRecord(
             fn=fn, t_arrival=now, t_done=t_start + result_duration,
             latency_s=queue_wait + result_duration, exec_s=exec_s,
             hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
-            retries=attempt, hedged=hedged, keepalive=keepalive,
+            retries=attempt, hedged=hedged, keepalive=keepalive, write=write,
         )
         if record:
             self.records.append(rec)

@@ -118,6 +118,52 @@ def global_vocab(stats: dict) -> dict[str, int]:
     return {t: i for i, t in enumerate(sorted(stats["df"]))}
 
 
+def extend_vocab(vocab: dict[str, int], terms: Iterable[str]) -> dict[str, int]:
+    """Append-only vocab growth for incremental indexing.
+
+    Existing term ids NEVER move (already-published segments index
+    ``term_offsets``/``idf`` by them); genuinely new terms get fresh ids
+    appended in sorted order, deterministically. Segments packed against a
+    shorter vocab stay valid — their ``term_offsets`` is edge-padded at
+    hydration (new terms have zero blocks there)."""
+    out = dict(vocab)
+    for t in sorted(set(terms) - out.keys()):
+        out[t] = len(out)
+    return out
+
+
+def update_stats(stats: dict, text: str, *, sign: int = 1,
+                 counts: "dict | None" = None) -> dict:
+    """Incrementally fold one document into (sign=+1) or out of (sign=-1)
+    ``compute_global_stats``-shaped stats, in place. The NRT writer calls
+    this per add/delete so commit-time stats are O(changed docs), while
+    staying exactly equal to a from-scratch ``compute_global_stats`` over
+    the live corpus (the delta-vs-rebuild parity requirement). Pass
+    ``counts`` (``token_counts(text)``) when the caller already tokenized
+    the doc for other bookkeeping — the text is not re-tokenized."""
+    if counts is None:
+        from repro.index.tokenizer import token_counts
+        counts = token_counts(text)
+    n = stats["n_docs"] + sign
+    total_len = stats["avgdl"] * max(1, stats["n_docs"]) \
+        if stats["n_docs"] else 0.0
+    # avgdl is stored, not the raw total — keep an exact integer token total
+    # alongside so repeated +/- cannot accumulate float drift
+    total = stats.setdefault("_total_len", round(total_len))
+    total += sign * sum(counts.values())
+    stats["_total_len"] = total
+    df = stats["df"]
+    for t in counts:
+        new = df.get(t, 0) + sign
+        if new > 0:
+            df[t] = new
+        else:
+            df.pop(t, None)
+    stats["n_docs"] = n
+    stats["avgdl"] = total / max(1, n)
+    return stats
+
+
 class IndexWriter:
     """Accumulates documents, then packs. Offline batch side of paper §3.
 
@@ -159,6 +205,26 @@ class IndexWriter:
     def add_many(self, docs: Iterable[tuple[str, str]]) -> None:
         for ext_id, text in docs:
             self.add(ext_id, text)
+
+    @classmethod
+    def delta(cls, docs: Iterable[tuple[str, str]], base_stats: dict, *,
+              vocab: dict[str, int], k1: float = K1_DEFAULT,
+              b: float = B_DEFAULT, block: int = BLOCK) -> PackedIndex:
+        """Pack ONLY ``docs`` as a delta segment against the frozen global
+        ``vocab`` and ``base_stats`` — the NRT increment: a commit uploads
+        just these blocks, never touching the published base segment.
+
+        Delta doc ids are segment-local (0..len(docs)); the serving side
+        shifts them when it combines base + deltas
+        (:func:`combine_segments`). The frozen stats only shape the
+        IMPACT ORDERING baked into ``block_max`` — idf/avgdl applied at
+        query time come from the generation manifest's live stats, which
+        is what keeps delta-served scores equal to a full rebuild's.
+        Extend the vocab first (:func:`extend_vocab`) when the new docs
+        carry unseen terms; ``pack`` refuses stale vocabs."""
+        w = cls(k1=k1, b=b, block=block, global_stats=base_stats, vocab=vocab)
+        w.add_many(docs)
+        return w.pack()
 
     # -- packing ----------------------------------------------------------------
 
@@ -281,3 +347,149 @@ def read_segment(directory: Directory) -> PackedIndex:
         for name in SEGMENT_FILES
     }
     return PackedIndex(meta=meta, vocab=vocab, **arrays)
+
+
+# -- NRT: combining base + delta segments at hydration ---------------------------
+
+
+def combine_segments(packs: list[PackedIndex], *, vocab: dict[str, int],
+                     stats: dict, tombstones: Iterable[int] = ()) -> PackedIndex:
+    """Fuse one base segment + its ordered deltas into ONE PackedIndex.
+
+    The TPU analogue of Lucene's multi-segment reader: fixed-shape jitted
+    evaluation wants one array set per compiled fn, so segments fuse at
+    HYDRATION (per generation, off the query path) instead of per query —
+    base + deltas then score in one vmapped device call.
+
+    * Doc ids concatenate: pack ``i``'s local ids shift by the doc count of
+      packs before it (delta docs append after the base, in commit order).
+    * Per term, blocks concatenate across packs and re-sort by impact under
+      the LIVE stats, preserving the impact-ordering truncation contract.
+      The whole fuse is vectorized over blocks (one lexsort by (term,
+      -block_max)), never a Python loop over the vocab — hydration cost
+      scales with postings, not V × segments.
+    * ``stats``/``vocab`` are the generation's live values: idf and avgdl
+      are recomputed HERE, at hydration — segment blocks carry only tf and
+      doc lengths, which is what makes a delta-served index score exactly
+      like a from-scratch rebuild of the live corpus.
+    * ``tombstones`` are INTERNAL doc positions in the combined id space
+      (a doc deleted and later re-added gets a fresh position, so the old
+      copy's tombstone can never kill the new copy). Their postings' tf
+      zeroes out, so deleted docs score exactly 0 and can never enter the
+      partition-local top-k — subtraction BEFORE top-k, not
+      post-filtering (a post-filter would silently shrink k).
+    """
+    if not packs:
+        raise ValueError("combine_segments needs at least a base segment")
+    V = len(vocab)
+    B = packs[0].meta.block
+    k1, b = packs[0].meta.k1, packs[0].meta.b
+    for p in packs[1:]:
+        if p.meta.block != B or (p.meta.k1, p.meta.b) != (k1, b):
+            raise ValueError("segments disagree on block size or BM25 params")
+
+    doc_offsets, n_docs = [], 0
+    for p in packs:
+        doc_offsets.append(n_docs)
+        n_docs += p.meta.n_docs
+    doc_ids: list[str] = []
+    for p in packs:
+        doc_ids.extend(p.meta.doc_ids)
+    dead_mask = np.zeros(n_docs + 1, dtype=bool)
+    dead_mask[np.asarray(sorted(tombstones), dtype=np.int64)] = True
+
+    n_live = int(stats["n_docs"])
+    avgdl = float(stats["avgdl"]) or 1.0
+    df_map = stats["df"]
+    df = np.zeros(V, dtype=np.float64)
+    for t, i in vocab.items():
+        df[i] = df_map.get(t, 0)
+    idf = np.log(1.0 + (n_live - df + 0.5) / (df + 0.5)).astype(np.float32)
+
+    doc_len = np.concatenate(
+        [p.doc_len[:p.meta.n_docs] for p in packs] + [[1.0]]).astype(np.float32)
+
+    # per pack, vectorized over ALL its blocks at once: shift local ids to
+    # the combined space, zero tombstoned/pad tf, recompute block_max under
+    # the live stats
+    cat_docs, cat_tf, cat_max, cat_term = [], [], [], []
+    for pi, p in enumerate(packs):
+        if p.meta.n_blocks == 0:
+            continue
+        docs = p.block_docs.astype(np.int64)             # (NB_p, B)
+        pad = docs >= p.meta.n_docs
+        docs = np.where(pad, n_docs, docs + doc_offsets[pi])
+        tf = np.where(pad | dead_mask[docs], 0, p.block_tf).astype(np.uint8)
+        to = p.term_offsets.astype(np.int64)
+        n_blk = to[1:] - to[:-1]                         # (V_p,)
+        term_of_block = np.repeat(np.arange(len(n_blk)), n_blk)
+        dl = doc_len[np.minimum(docs, n_docs)]
+        tff = tf.astype(np.float64)
+        imp = idf[term_of_block][:, None] * tff / np.where(
+            tff > 0, tff + k1 * (1 - b + b * dl / avgdl), 1.0)
+        cat_docs.append(docs.astype(np.int32))
+        cat_tf.append(tf)
+        cat_max.append(imp.max(axis=1))
+        cat_term.append(term_of_block)
+
+    if cat_docs:
+        docs_all = np.concatenate(cat_docs)
+        tf_all = np.concatenate(cat_tf)
+        max_all = np.concatenate(cat_max)
+        term_all = np.concatenate(cat_term)
+        # group by term, impact-descending within; lexsort is stable, so
+        # equal-impact blocks keep pack order (base before deltas)
+        order = np.lexsort((-max_all, term_all))
+        docs_all, tf_all = docs_all[order], tf_all[order]
+        max_all, term_all = max_all[order], term_all[order]
+    else:
+        docs_all = np.zeros((0, B), np.int32)
+        tf_all = np.zeros((0, B), np.uint8)
+        max_all = np.zeros(0)
+        term_all = np.zeros(0, np.int64)
+    new_off = np.zeros(V + 1, dtype=np.int32)
+    new_off[1:] = np.cumsum(np.bincount(term_all, minlength=V)[:V])
+
+    NB = docs_all.shape[0]
+    meta = IndexMeta(
+        n_docs=n_docs, n_terms=V, n_blocks=NB, block=B,
+        avgdl=avgdl, k1=k1, b=b, doc_ids=doc_ids)
+    return PackedIndex(
+        meta=meta, vocab=dict(vocab), term_offsets=new_off,
+        block_docs=docs_all, block_tf=tf_all,
+        block_max=max_all.astype(np.float32),
+        doc_len=doc_len, idf=idf)
+
+
+@dataclasses.dataclass
+class MergePolicy:
+    """Size-tiered delta compaction: when does the delta tier fold back
+    into the base segment?
+
+    A growing delta tier costs on three axes — more blocks to hydrate and
+    evaluate per query, dead weight (a tombstoned posting's tf zeroes at
+    hydration, but it still occupies a block slot that gathers, scores to
+    0, and pads the doc-id space — wasted lanes and accumulator width),
+    and manifest bloat. Compaction rebuilds the partition's base from its
+    LIVE docs (purging tombstones) at the cost of one full re-pack +
+    re-upload. Triggers, any of:
+
+    * ``max_deltas``  — the tier is longer than this many segments;
+    * ``ratio``       — delta-tier docs outgrow ``ratio`` × base docs
+                        (the size-tiered criterion);
+    * ``tombstone_ratio`` — deleted docs outgrow this fraction of all docs
+                        (the dead-weight bound).
+    """
+
+    max_deltas: int = 4
+    ratio: float = 0.5
+    tombstone_ratio: float = 0.2
+
+    def should_merge(self, base_docs: int, delta_docs: int,
+                     n_deltas: int, n_tombstones: int) -> bool:
+        total = base_docs + delta_docs
+        if n_deltas == 0 and n_tombstones == 0:
+            return False
+        return (n_deltas > self.max_deltas
+                or delta_docs > self.ratio * max(1, base_docs)
+                or n_tombstones > self.tombstone_ratio * max(1, total))

@@ -24,3 +24,10 @@ def tokenize(text: str, *, stopwords: frozenset[str] = STOPWORDS,
         t for t in _TOKEN_RE.findall(text.lower())
         if t not in stopwords and len(t) <= max_token_len
     ]
+
+
+def token_counts(text: str) -> "Counter[str]":
+    """term -> tf for one document — the unit the incremental stats
+    maintenance (df/avgdl updates on add/delete) works in."""
+    from collections import Counter
+    return Counter(tokenize(text))

@@ -19,8 +19,8 @@ import numpy as np
 from repro.core.cache import HydrationCache
 from repro.core.kvstore import KVStore
 from repro.core.object_store import ObjectStore
-from repro.core.refresh import AssetCatalog
-from repro.index.builder import PackedIndex, read_segment
+from repro.core.refresh import GENERATION_FILE, AssetCatalog, generation_version
+from repro.index.builder import PackedIndex, combine_segments, read_segment
 from repro.search.bm25 import SearchState, encode_queries, make_search_fn
 
 
@@ -44,6 +44,12 @@ class SearchConfig:
     # against exactly. Leave None to measure (the paper's claims).
     sim_exec_s: float | None = None
     sim_exec_per_query_s: float = 0.0002
+    # Same idea for the NRT writer path: when set, indexer invocations
+    # (delta pack / merge) report sim_write_s + sim_write_per_doc_s × docs
+    # as their compute time — a commit's cost and rollover latency then
+    # reproduce bit-for-bit in CI. Leave None to measure.
+    sim_write_s: float | None = None
+    sim_write_per_doc_s: float = 2e-5
 
 
 class Searcher:
@@ -92,13 +98,33 @@ class Searcher:
 
 
 def hydrate_searcher(catalog: AssetCatalog, asset: str,
-                     config: SearchConfig) -> tuple[Searcher, float]:
+                     config: SearchConfig,
+                     version: str | None = None) -> tuple[Searcher, float]:
     """Cold-start hydration: resolve manifest, stream segment files through
-    the StoreDirectory, unpack, compile. Returns (searcher, simulated_s)."""
+    the StoreDirectory, unpack, compile. Returns (searcher, simulated_s).
+
+    Two version layouts hydrate through the same call:
+
+    * a PLAIN version directory holding one segment's files (the original
+      batch-publish path), read directly; or
+    * a GENERATION manifest (NRT): base + ordered delta segments stream in
+      and fuse into one PackedIndex (:func:`~repro.index.builder.
+      combine_segments`) under the generation's live stats/vocab, with
+      tombstones zeroed — so the compiled search fn never knows the index
+      was built incrementally.
+    """
     store = catalog.store
     before = store.stats.sim_seconds
-    version, directory = catalog.open(asset)
-    packed = read_segment(directory)
+    version, directory = catalog.open(asset, version)
+    if GENERATION_FILE in directory.list():
+        manifest = catalog.read_generation(asset, version)
+        stats, vocab = catalog.resolve_generation_state(manifest)
+        packs = [read_segment(catalog.open_segment(asset, seg))
+                 for seg in manifest.segments]
+        packed = combine_segments(packs, vocab=vocab, stats=stats,
+                                  tombstones=manifest.tombstones)
+    else:
+        packed = read_segment(directory)
     network_s = store.stats.sim_seconds - before
     deserialize_s = packed.nbytes / config.hydrate_Bps
     return Searcher(packed, config), network_s + deserialize_s
@@ -116,14 +142,25 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
     (micro-batch → ``{"results": [...]}``, one vmapped device call for the
     whole batch — how the gateway absorbs concurrent traffic without one
     invocation per query).
+
+    ``payload["gen"]`` (an int) PINS the index generation: the handler
+    serves exactly that generation, hydrating it if this instance hasn't
+    seen it yet (old generations stay readable until gc). The coordinator
+    resolves the serving generation ONCE per query and pins every scatter
+    leg — primaries, hedged backups, freshly-scaled replicas — so no query
+    can ever merge hits across index generations, even when a commit's
+    rollover lands mid-scatter. Unpinned payloads resolve the asset
+    manifest's current version (the single-function app's path).
     """
     cfg = config or SearchConfig()
 
     def handler(cache: HydrationCache, payload: dict) -> tuple[dict, float]:
-        version = catalog.current_version(asset)
+        gen = payload.get("gen")
+        version = (generation_version(gen) if gen is not None
+                   else catalog.current_version(asset))
 
         def _hydrate():
-            searcher, sim_s = hydrate_searcher(catalog, asset, cfg)
+            searcher, sim_s = hydrate_searcher(catalog, asset, cfg, version)
             return searcher, sim_s
 
         searcher: Searcher = cache.get_or_hydrate(asset, version, _hydrate)

@@ -11,7 +11,7 @@ from repro.core.directory import RamDirectory, StoreDirectory
 from repro.core.gateway import Gateway
 from repro.core.object_store import (NoSuchKey, ObjectStore,
                                      PreconditionFailed)
-from repro.core.refresh import AssetCatalog, refresh_fleet
+from repro.core.refresh import AssetCatalog, PublishConflict, refresh_fleet
 from repro.core.runtime import FaaSRuntime, RuntimeConfig
 
 
@@ -225,6 +225,53 @@ def test_publish_switchover_and_conflict():
     _, dir1 = cat.open("index", "v1")
     assert dir1.open_input("f").read_all() == b"v1-data"
     assert set(cat.versions("index")) == {"v1", "v2"}
+
+
+def test_publish_conflict_on_interleaved_manifest_swap():
+    """A second publisher swapping the manifest between our etag read and
+    our conditional put must surface as PublishConflict (paper §3: 'new
+    indexes placed alongside the old' — never a torn pointer)."""
+    s = ObjectStore()
+    cat = AssetCatalog(s)
+    cat.publish("index", "v1", RamDirectory({"f": b"1"}))
+    real_head = s.head
+
+    def racing_head(key):
+        meta = real_head(key)
+        if key.endswith("MANIFEST"):
+            s.put(key, b'{"current": "v2"}')      # the interleaved writer
+        return meta
+
+    s.head = racing_head
+    with pytest.raises(PublishConflict):
+        cat.publish("index", "v3", RamDirectory({"f": b"3"}))
+    s.head = real_head
+    # the interleaved writer's flip survives; v3's data files exist but are
+    # unreferenced (next gc's problem), and v1 stays readable
+    assert cat.current_version("index") == "v2"
+    _, d1 = cat.open("index", "v1")
+    assert d1.open_input("f").read_all() == b"1"
+
+
+def test_gc_keeps_serving_version_and_rollback():
+    s = ObjectStore()
+    cat = AssetCatalog(s)
+    for i in (1, 2, 3, 4):
+        cat.publish("index", f"v{i}", RamDirectory({"f": b"x" * i}))
+    assert cat.current_version("index") == "v4"
+    doomed = cat.gc("index", keep=2)
+    assert doomed == ["v1", "v2"]
+    assert set(cat.versions("index")) == {"v3", "v4"}       # serving + rollback
+    for v in ("v1", "v2"):
+        assert not s.list(cat.version_prefix("index", v))   # files really gone
+    _, d = cat.open("index")
+    assert d.open_input("f").read_all() == b"xxxx"
+    # keep=1 may prune the rollback version but NEVER the serving one,
+    # even after further publishes move the pointer
+    cat.publish("index", "v5", RamDirectory({"f": b"y"}))
+    assert cat.gc("index", keep=1) == ["v3", "v4"]
+    assert cat.versions("index") == ["v5"]
+    assert cat.current_version("index") == "v5"
 
 
 def test_refresh_fleet_invalidates_warm_instances():
