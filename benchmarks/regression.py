@@ -6,7 +6,7 @@
 Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
-with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b10,b11 --json
+with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b10,b11,b12 --json
 BENCH_baseline.json`` whenever a deliberate perf change moves a metric).
 
 Gated metrics (lower is better for all of them):
@@ -14,7 +14,8 @@ Gated metrics (lower is better for all of them):
 * B6/B7 gateway latencies     — fail on a regression > 25%
 * B8 refresh/rollover latency — fail on a regression > 25%
 * B11 NRT gateway latencies   — fail on a regression > 25%
-* B7/B11 $/1k-queries         — fail on a regression > 15%
+* B12 skewed-fleet latencies  — fail on a regression > 25%
+* B7/B11/B12 $/1k-queries     — fail on a regression > 15%
 
 A tiny absolute floor per metric class absorbs float jitter without hiding
 real regressions (a forgotten merge-cost term or a doubled invocation count
@@ -47,6 +48,10 @@ GATES: list[tuple[str, float, float]] = [
     ("b11_rollover_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b11_commit_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b11_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("b12_hetero_gw_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b12_hetero_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b12_hetero_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("b12_uniform_R2_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
 ]
 
 

@@ -23,6 +23,10 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
       while committing delta batches — rollover p99 vs steady state,
       $/1k including writer invocations, post-commit parity vs a
       from-scratch oracle rebuild
+  B12 skew-aware serving: Zipf-skewed partition load through the
+      gateway's adaptive micro-batch window — heterogeneous autoscaled
+      fleet (head partition R=3, tails R=1) vs uniform R=2 on $/1k and
+      p99, top-k pinned to per-generation oracles across mid-run commits
 
 Determinism: every RNG is seeded per-benchmark from ``--seed`` (so the
 bench-smoke gate and the CI regression diff don't depend on which
@@ -625,6 +629,225 @@ def bench_nrt(n_docs: int, n_queries: int) -> None:
          "no query merged hits across generations")
 
 
+def bench_skew(n_docs: int, n_queries: int) -> None:
+    """B12: skew-aware serving — adaptive micro-batch window + per-partition
+    heterogeneous replica targets under Zipf-skewed partition load.
+
+    Real collections are skewed: one head partition holds most of the
+    documents (here ~73% via ``partition_weights``), so its vmapped eval
+    runs ~7× longer per invocation than a tail partition's. Two fleets
+    serve the IDENTICAL arrival schedule through the gateway's adaptive
+    window (sustained ~100 QPS burst coalescing into ~8-query windows —
+    one vmapped invocation per partition per window — then a long sparse
+    stretch where the window collapses to zero):
+
+      uniform_R2  fixed R=2 everywhere (min==max pins the controller to
+                  keep-alive only): the head partition runs hot at ~93%
+                  utilization while three tail partitions' standby pools
+                  bill keep-alive spend through every quiet stretch;
+      hetero      heterogeneous autoscaled: each group chases its OWN
+                  Little's-law target, so the head partition runs R=3
+                  (~62% utilization) while tails stay R=1 and the quiet
+                  stretch drains the head back down.
+
+    Two delta commits land MID-BURST — one inside an open window — so the
+    run also proves the window and NRT rollover compose: admitted queries
+    keep their admission-pinned generation, the flush splits into
+    per-generation scatters, and every response matches an OracleSearcher
+    rebuild of its own generation's live corpus.
+
+    Targets: hetero beats uniform R=2 on $/1k by ≥20% at equal-or-better
+    p99; sparse traffic pays ZERO added window wait; merged top-k
+    bit-identical across fleets and equal to the per-generation oracle
+    throughout scale events and commits.
+
+    Reproduce: PYTHONPATH=src python -m benchmarks.run --fast --det --only b12
+    """
+    print("\nB12: skew-aware serving — adaptive window + heterogeneous fleet")
+    from repro.core.autoscale import AutoscalePolicy
+    from repro.core.gateway import WindowPolicy
+    from repro.core.partition import HedgePolicy
+    from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
+    from repro.data.corpus import synth_corpus, synth_queries
+    from repro.search.oracle import OracleSearcher
+    from repro.search.service import build_partitioned_search_app
+
+    n_parts = 4
+    weights = [8.0, 1.0, 1.0, 1.0]          # Zipf-ish head/tail split
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    n_init = int(0.9 * len(docs))
+    init, incoming = docs[:n_init], docs[n_init:]
+    queries = synth_queries(docs, n_queries, seed=8)
+
+    # the arrival schedule, as OFFSETS from each fleet's own t0 so both
+    # fleets see identical window formation: a lead-in burst (unmeasured —
+    # the controller converges here, exactly like B7's warm-up), a
+    # measured sustained burst with two commits, then a sparse stretch
+    rng = np.random.default_rng(SEED + 12)
+    n_lead, n_meas = 200, 800
+    gaps = 0.01 * rng.uniform(0.9, 1.1, size=n_lead + n_meas)  # ~100 QPS
+    burst_offsets = np.cumsum(gaps)
+    commit_at = (burst_offsets[n_lead + n_meas // 3],
+                 burst_offsets[n_lead + (2 * n_meas) // 3])
+    n_quiet = 24                            # sparse: ~1 query / 10 min —
+    quiet_gaps = 600.0 * rng.uniform(0.9, 1.1, size=n_quiet)  # pre-drawn,
+    #                       so BOTH fleets replay the identical timeline
+    timer_s = 15.0                          # out-of-band controller timer
+
+    window = WindowPolicy(max_window_s=0.08, target_batch=8, sparse_qps=2.0,
+                          p99_budget_s=2.0)
+    cfg = _fleet_search_cfg()
+    if cfg is not None:
+        # the skew model: eval time grows with the partition's documents,
+        # so the head partition's handler runs ~7× a tail's
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, sim_exec_per_kdoc_s=0.1)
+
+    def run_fleet(replicas: int, policy: AutoscalePolicy):
+        app = build_partitioned_search_app(
+            init, n_parts=n_parts, replicas=replicas, hedge=HedgePolicy(),
+            autoscale=policy, window=window, partition_weights=weights,
+            runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+            search_config=cfg)
+        app.warm()
+        for q in queries[:8]:               # warm-latency history
+            app.query(q, k=10, t_arrival=app.runtime.clock + 0.5,
+                      fetch_docs=False)
+        t0 = app.runtime.clock + 2.0
+        led = app.runtime.ledger
+        handles, meas_idx, commits, batch_i = [], [], [], 0
+        gen_corpora = {app.indexer.gen: list(app.indexer.live_corpus())}
+        snap = None                         # ledger snapshot at measure start
+        for i, off in enumerate(burst_offsets):
+            if batch_i < len(commit_at) and off >= commit_at[batch_i]:
+                # commits land mid-burst — the second lands while a window
+                # is open, so one flush spans two generations
+                n_inc = len(incoming) // 2
+                adds = incoming[batch_i * n_inc:(batch_i + 1) * n_inc]
+                dels = [e for e, _ in gen_corpora[app.indexer.gen][::301]]
+                app.add_documents(adds, t_arrival=t0 + off)
+                app.delete_documents(dels, t_arrival=t0 + off)
+                r = app.commit(t_arrival=t0 + off)
+                assert r.ok, r.body
+                commits.append(r.body["gen"])
+                gen_corpora[r.body["gen"]] = list(app.indexer.live_corpus())
+                batch_i += 1
+            if i == n_lead:                 # measured window opens here:
+                app.flush()                 # close the lead-in's window,
+                snap = (led.total_dollars, led.idle_dollars,  # then snapshot
+                        led.hedge_dollars, len(app.runtime.records))
+            h = app.submit(queries[i % len(queries)], k=10,
+                           t_arrival=t0 + off, fetch_docs=False)
+            handles.append(h)
+            if i >= n_lead:
+                meas_idx.append(i)
+        app.flush()
+        # the sparse stretch: the window must collapse to zero — every
+        # lone query resolves AT its own arrival, no added wait
+        t = t0 + float(burst_offsets[-1])
+        tick = t
+        sparse_immediate = True
+        for j in range(n_quiet):
+            t += float(quiet_gaps[j])
+            while tick + timer_s < t:       # scheduled-pinger analogue
+                tick += timer_s
+                app.controller.maybe_tick(tick)
+                app.flush(tick)
+            tick = max(tick, t)
+            h = app.submit(queries[j % len(queries)], k=10, t_arrival=t,
+                           fetch_docs=False)
+            sparse_immediate = sparse_immediate and h.done()
+            handles.append(h)
+            meas_idx.append(len(burst_offsets) + j)
+        dollars = (led.total_dollars - snap[0], led.idle_dollars - snap[1],
+                   led.hedge_dollars - snap[2])
+        measured = set(meas_idx)
+        out = [(tuple(h.response.body["ext_ids"]),
+                tuple(round(s, 6) for s in h.response.body["scores"]),
+                h.response.body.get("generation"),
+                h.response.latency_s, i in measured)
+               for i, h in enumerate(handles)]
+        return app, out, dollars, gen_corpora, sparse_immediate, commits
+
+    uniform_pol = AutoscalePolicy(min_replicas=2, max_replicas=2,
+                                  tick_s=0.25, rate_window_s=1.0,
+                                  up_qps_per_replica=float("inf"))
+    hetero_pol = AutoscalePolicy(min_replicas=1, max_replicas=3,
+                                 tick_s=0.25, rate_window_s=1.0,
+                                 up_qps_per_replica=float("inf"),
+                                 down_qps_per_replica=1.0,
+                                 idle_ticks_to_retire=2,
+                                 up_ticks_to_scale=3,
+                                 target_utilization=0.6)
+    p99s, dollars_1k, results = {}, {}, {}
+    sparse_ok, hetero_counts = True, None
+    for tag, (replicas, pol) in (("uniform_R2", (2, uniform_pol)),
+                                 ("hetero", (1, hetero_pol))):
+        app, out, (dollars, idle_d, hedge_d), gen_corpora, sparse, commits \
+            = run_fleet(replicas, pol)
+        results[tag] = [(ids, scores, gen) for ids, scores, gen, _, _ in out]
+        sparse_ok = sparse_ok and sparse
+        meas = [lat for _, _, _, lat, measured in out if measured]
+        p = nearest_rank_percentiles(meas, qs=(0.5, 0.99))
+        p99s[tag] = p[0.99]
+        n_meas_q = len(meas)
+        dollars_1k[tag] = dollars / n_meas_q * 1000.0
+        emit(f"b12_{tag}_gw_p50_ms", round(p[0.5] * 1e3, 1), "ms")
+        emit(f"b12_{tag}_gw_p99_ms", round(p[0.99] * 1e3, 1), "ms",
+             f"{n_meas_q} measured queries, {len(commits)} commits mid-run")
+        emit(f"b12_{tag}_dollars_per_1k_q", round(dollars_1k[tag], 6), "$",
+             f"idle ${idle_d:.6f} hedge ${hedge_d:.6f}")
+        if tag == "hetero":
+            hetero_counts = app.controller.replica_counts()
+            st = app.controller.stats()
+            # per-partition peak R over the whole run: the heterogeneity
+            # claim is that the head's peak strictly exceeds every tail's
+            peaks = [1] * n_parts
+            for e in app.controller.events:
+                if e["action"] == "scale_up":
+                    p_i = e["partition"]
+                    peaks[p_i] = max(peaks[p_i], e["replicas"])
+            emit("b12_hetero_peak_head_R", peaks[0], "replicas",
+                 f"peaks {peaks}, final {hetero_counts}, "
+                 f"{st['scale_ups']} up / {st['retires']} down")
+            emit("b12_hetero_head_exceeds_tails",
+                 int(peaks[0] > max(peaks[1:])), "bool",
+                 "the head partition's capacity scaled past every tail's")
+            ws = app.gateway.window_stats("GET", "/search")
+            emit("b12_mean_window_batch", round(ws["mean_batch"], 2),
+                 "queries/window", f"{ws['batches']} windows")
+            # oracle parity, per pinned generation: every response equals a
+            # from-scratch rebuild of the generation it was admitted under
+            oracles = {g: OracleSearcher(c) for g, c in gen_corpora.items()}
+            want_cache: dict = {}
+            ok = True
+            for i, (ids, _, gen, _, _) in enumerate(out):
+                q = queries[(i if i < len(burst_offsets)
+                             else i - len(burst_offsets)) % len(queries)]
+                key = (gen, q)
+                if key not in want_cache:
+                    o = oracles[gen]
+                    want_cache[key] = [o.doc_ids[d]
+                                       for d, _ in o.search(q, k=10)]
+                ok = ok and list(ids) == want_cache[key]
+            emit("b12_topk_equals_oracle", int(ok), "bool",
+                 "per pinned generation, through scale events + commits")
+
+    emit("b12_hetero_final_R", str(hetero_counts).replace(",", ";"),
+         "replicas", "head partition scaled independently of the tail")
+    emit("b12_hetero_p99_vs_uniform", round(p99s["hetero"]
+                                            / p99s["uniform_R2"], 2),
+         "x", "target: <= 1 (equal-or-better)")
+    emit("b12_hetero_cost_saving_vs_uniform_pct",
+         round(100 * (1 - dollars_1k["hetero"] / dollars_1k["uniform_R2"])),
+         "%", "target: >= 20")
+    emit("b12_sparse_zero_added_wait", int(sparse_ok), "bool",
+         "lone queries resolve at their own arrival instant")
+    emit("b12_results_bitwise_equal",
+         int(results["hetero"] == results["uniform_R2"]), "bool",
+         "same windows, same generations, same merged top-k")
+
+
 def bench_roofline_summary() -> None:
     print("\nB9: roofline summary (from dry-run artifacts, if present)")
     from benchmarks.roofline import analyze
@@ -679,6 +902,7 @@ def main() -> None:
         "b9": bench_roofline_summary,
         "b10": lambda: bench_autoscale(min(n_docs, 8_000), min(n_q, 108)),
         "b11": lambda: bench_nrt(min(n_docs, 6_000), min(n_q, 120)),
+        "b12": lambda: bench_skew(min(n_docs, 2_000), min(n_q, 100)),
     }
     only = None
     if args.only:

@@ -16,12 +16,15 @@ into feedback: on a virtual-clock tick it reads, per replica group,
 * the :class:`~repro.core.cost.CostLedger`'s hedge/idle attribution — what
   tail mitigation and standby capacity actually cost since the last tick,
 
-then scales the group: **up** by registering a fresh ``search-p{p}rN``
-function over the partition's already-published segment (one
-``AssetCatalog`` entry, N pools — the PR 2 invariant; nothing is
-re-published) and prewarming its pool; **down** by draining the newest
-replica through ``FaaSRuntime.retire`` so in-flight work finishes and the
-keep-alive pings that made it cost money stop.
+then steers the group toward a PER-GROUP replica target — real traffic is
+Zipf-skewed, and the serverless bet (pay only for what runs) only pays off
+when a hot head partition can hold R=3 while its cold siblings drain to
+R=1 under the same fleet-wide traffic. Capacity moves **up** by
+registering a fresh ``search-p{p}rN`` function over the partition's
+already-published segment (one ``AssetCatalog`` entry, N pools — the PR 2
+invariant; nothing is re-published) and prewarming its pool; **down** by
+draining the newest replica through ``FaaSRuntime.retire`` so in-flight
+work finishes and the keep-alive pings that made it cost money stop.
 
 Keep-alive is the controller's second job: a pool the provider would reap
 before its next use gets a ping, billed to the ledger's IDLE line — which
@@ -52,10 +55,16 @@ class AutoscalePolicy:
     scale up eagerly on tail pressure (a cold start costs ~10× a warm
     query), scale down only after ``idle_ticks_to_retire`` consecutive
     quiet ticks (hysteresis — a diurnal lull should retire standby pools,
-    a two-query gap should not)."""
+    a two-query gap should not).
 
-    min_replicas: int = 1
-    max_replicas: int = 3
+    Replica bounds may be ONE int pair (every partition shares them) or a
+    per-partition sequence — a fleet whose partitions are known a priori to
+    be heterogeneous (a Zipf-hot head partition, a cold tail) can bound
+    each group separately, and the controller's per-group targets do the
+    rest at runtime."""
+
+    min_replicas: "int | Sequence[int]" = 1
+    max_replicas: "int | Sequence[int]" = 3
     tick_s: float = 1.0                 # control period (virtual seconds)
     rate_window_s: float = 2.0          # trailing window for arrival rate
     # demand thresholds are INVOCATIONS/s per replica (a micro-batch
@@ -64,8 +73,28 @@ class AutoscalePolicy:
     up_qps_per_replica: float = 10.0
     down_qps_per_replica: float = 1.0
     idle_ticks_to_retire: int = 2       # ...for this many consecutive ticks
+    # up-scale hysteresis: how many CONSECUTIVE pressured ticks before a
+    # scale-up lands. 1 (default) reacts within one control period — right
+    # when pressure means kills or burst onset. Raise it for fleets whose
+    # pressure has known sub-tick transients (a generation rollover's
+    # hydration stall congests every pool for ~2 ticks; scaling up buys
+    # pools that would themselves hydrate) so only PERSISTENT pressure
+    # grows the fleet.
+    up_ticks_to_scale: int = 1
     up_overhead_s: float | None = None  # queue/cold projection trigger;
     #                                     None → max(provision/2, 2× warm p50)
+    # Little's-law capacity target per group: replicas chase
+    # ceil(arrival_rate × warm_p50 / target_utilization), the rule that
+    # makes a fleet HETEROGENEOUS under skew — a partition whose vmapped
+    # eval runs 7× longer (7× the documents) needs 7× the pool-seconds at
+    # the same invocation rate, which no shared invocations/s threshold
+    # can express. None disables (PR 3's escalation triggers only).
+    target_utilization: float | None = 0.6
+    # newest-N warm records behind every quantile the controller reads —
+    # the SAME window HedgePolicy scans, so scaling and hedging judge one
+    # latency regime (unwindowed, a long-running fleet would hedge on
+    # recent behaviour while scaling on stale history)
+    warm_window: int = 256
     keepalive: bool = True              # ping pools the provider would reap
     keepalive_margin_s: float | None = None  # ping when expiry < margin;
     #                                     None → idle_timeout / 2
@@ -77,6 +106,9 @@ class _GroupState:
     base: str                 # the partition's base function name (group[0])
     next_replica: int         # suffix for the next registered replica
     idle_ticks: int = 0
+    over_ticks: int = 0       # consecutive ticks above the concurrency target
+    up_ticks: int = 0         # consecutive ticks WITH up-pressure (hysteresis)
+    last_target: int = 0      # the target the last tick computed (introspection)
 
 
 class FleetController:
@@ -103,7 +135,14 @@ class FleetController:
         self.factories = list(handler_factories)
         self.policy = policy if policy is not None else AutoscalePolicy()
         self.ping_payload = ping_payload if ping_payload is not None else {}
-        self.groups = [_GroupState(base=g[0], next_replica=len(g))
+        for bound in (self.policy.min_replicas, self.policy.max_replicas):
+            if (not isinstance(bound, int)
+                    and len(bound) != len(scatter.groups)):
+                raise ValueError(
+                    f"per-partition replica bounds need one entry per group: "
+                    f"{len(bound)} bounds for {len(scatter.groups)} groups")
+        self.groups = [_GroupState(base=g[0], next_replica=len(g),
+                                   last_target=len(g))
                        for g in scatter.groups]
         self.events: list[dict] = []     # scale_up / retire, with reasons
         self.pings = 0
@@ -165,20 +204,48 @@ class FleetController:
                 n += 1
         return n / self.policy.rate_window_s
 
+    def _bounds(self, p: int) -> tuple[int, int]:
+        """(min, max) replicas for partition ``p`` — shared ints or the
+        per-partition entries of a heterogeneous bounds sequence."""
+        pol = self.policy
+        lo = (pol.min_replicas if isinstance(pol.min_replicas, int)
+              else pol.min_replicas[p])
+        hi = (pol.max_replicas if isinstance(pol.max_replicas, int)
+              else pol.max_replicas[p])
+        return lo, max(lo, hi)
+
     def _overhead_threshold(self, group: list[str]) -> float:
         if self.policy.up_overhead_s is not None:
             return self.policy.up_overhead_s
         wp50 = self.runtime.latency_percentiles(
-            group, qs=(0.5,), warm_only=True)[0.5]
+            group, qs=(0.5,), warm_only=True,
+            window=self.policy.warm_window)[0.5]
         floor = self.runtime.config.provision_s / 2
         return floor if math.isnan(wp50) else max(floor, 2.0 * wp50)
 
     def _control_group(self, p: int, group: list[str], window: list,
                        spend_delta: dict, now: float) -> None:
+        """Steer partition ``p``'s group toward ITS OWN replica target.
+
+        Every signal here is per-group — this group's trailing arrival
+        share, this group's warm quantiles (windowed to the current
+        latency regime), this group's hedge/cold pressure — so a
+        Zipf-hot partition holds R=3 while its cold siblings drain to
+        R=1 under the same fleet-wide traffic. The escalation triggers
+        (demand/hedge/tail/projection) step capacity by one, PR 3 style;
+        the Little's-law concurrency rule may target several steps at
+        once, and the controller walks the whole gap in one tick (a
+        saturated head partition should not wait N control periods for
+        capacity the math already justifies)."""
         pol, st = self.policy, self.groups[p]
+        lo, hi = self._bounds(p)
         names = set(group)
         grp = [r for r in window if r.fn in names]
-        colds = sum(r.cold for r in grp)
+        # capacity pressure counts FRESH container boots only: a
+        # hydration-only cold (warm pool, new index generation after a
+        # commit) is content turnover every pool pays once per generation —
+        # more pools would mean MORE hydrations, not fewer
+        colds = sum(r.provisioned for r in grp)
         hedges = sum(r.hedged for r in grp)
         rate = self._group_rate(group, now)
         # project one tick AHEAD: at the tick instant itself the request
@@ -196,33 +263,83 @@ class FleetController:
         # cold pool would burn a rehydration per burst-that-never-comes
         # and the cold-in-window signal would block every retire
         active = rate >= pol.down_qps_per_replica
-        up_reason = None
+        target, up_reason = len(group), None
         if rate / len(group) > pol.up_qps_per_replica:
+            target = len(group) + 1
             up_reason = f"demand: {rate:.1f} q/s over {len(group)} pool(s)"
         elif active and hedges:
+            target = len(group) + 1
             up_reason = (f"hedge tax: {hedges} backup leg(s), "
                          f"${spend_delta.get('hedge', 0.0):.6f} since last tick")
         elif active and colds:
-            up_reason = f"tail: {colds} cold start(s) in window"
+            target = len(group) + 1
+            up_reason = f"tail: {colds} cold boot(s) in window"
         elif active and best_overhead > self._overhead_threshold(group):
+            target = len(group) + 1
             up_reason = f"projection: {best_overhead * 1e3:.0f} ms queued/cold"
 
-        if up_reason is not None:
-            st.idle_ticks = 0
-            if len(group) < pol.max_replicas:
+        # the heterogeneous-fleet rule: offered concurrency (Little's law,
+        # arrival rate × warm service time) over the utilization target is
+        # how many pools THIS group's load needs — a head partition whose
+        # eval runs 7× longer demands 7× the capacity at the same
+        # invocation rate, invisible to any shared invocations/s threshold
+        need = None
+        if active and pol.target_utilization:
+            wp50 = self.runtime.latency_percentiles(
+                group, qs=(0.5,), warm_only=True,
+                window=pol.warm_window)[0.5]
+            if not math.isnan(wp50):
+                need = math.ceil(rate * wp50 / pol.target_utilization)
+                if need > target:
+                    target = need
+                    up_reason = (
+                        f"concurrency: {rate:.1f} inv/s × {wp50 * 1e3:.0f} ms "
+                        f"warm p50 ÷ {pol.target_utilization:g} util "
+                        f"→ {need} pool(s)")
+
+        target = min(target, hi)
+        st.last_target = max(target, min(len(group), hi))
+        if target > len(group):
+            st.idle_ticks = st.over_ticks = 0
+            st.up_ticks += 1
+            if st.up_ticks < pol.up_ticks_to_scale:
+                return                  # pressure must persist before it buys pools
+            while len(self.scatter.groups[p]) < target:
                 self._scale_up(p, st, now, up_reason)
+            st.up_ticks = 0
+            return
+        st.up_ticks = 0
+        if up_reason is not None:
+            st.idle_ticks = st.over_ticks = 0   # pressure at the cap ≠ idleness
             return
 
-        if (len(group) > pol.min_replicas
+        if (len(group) > lo
                 and rate / len(group) < pol.down_qps_per_replica):
+            st.over_ticks = 0
             st.idle_ticks += 1
             if st.idle_ticks >= pol.idle_ticks_to_retire:
                 self._retire(p, group, st, now,
                              f"idle: {rate:.2f} q/s, no hedges, idle tax "
                              f"${spend_delta.get('idle', 0.0):.6f} since last tick")
                 st.idle_ticks = 0
-        else:
+        elif need is not None and need < len(group) > lo:
+            # OVER-provisioned under live traffic: a transient (one commit's
+            # concurrency spike, a one-off cold) grew the group past what
+            # its own concurrency math justifies, and the idle rule will
+            # never fire while traffic flows. Converge DOWN to the target
+            # with the same hysteresis scale-down uses — so a tail
+            # partition that briefly ballooned drains back to R=1 while a
+            # head partition whose demand is real keeps its pools (its
+            # up-pressure resets the counter every tick).
             st.idle_ticks = 0
+            st.over_ticks += 1
+            if st.over_ticks >= pol.idle_ticks_to_retire:
+                self._retire(p, group, st, now,
+                             f"over-provisioned: {rate:.1f} inv/s needs "
+                             f"{need} pool(s), running {len(group)}")
+                st.over_ticks = 0
+        else:
+            st.idle_ticks = st.over_ticks = 0
 
     def _scale_up(self, p: int, st: _GroupState, now: float,
                   reason: str) -> None:
@@ -276,10 +393,17 @@ class FleetController:
     def replica_counts(self) -> list[int]:
         return [len(g) for g in self.scatter.groups]
 
+    def replica_targets(self) -> list[int]:
+        """Per-group targets from the last tick — the heterogeneous shape
+        the controller is steering toward (counts converge to targets as
+        scale-ups land and idle hysteresis drains)."""
+        return [st.last_target for st in self.groups]
+
     def stats(self) -> dict:
         led = self.runtime.ledger
         return {
             "replica_counts": self.replica_counts(),
+            "replica_targets": self.replica_targets(),
             "scale_ups": sum(e["action"] == "scale_up" for e in self.events),
             "retires": sum(e["action"] == "retire" for e in self.events),
             "pings": self.pings,

@@ -134,9 +134,17 @@ class CostLedger:
     def dollars_per_1k(self, n_queries: int) -> float:
         """$ per 1000 LOGICAL queries — the caller supplies the query count
         because hedging makes invocations ≠ queries (backup legs bill but
-        answer no extra query)."""
+        answer no extra query).
+
+        Zero-traffic guard: a just-built fleet that has served nothing and
+        spent nothing reports $0 — the true unit cost of zero queries at
+        zero spend, and what a dashboard should show before traffic, never
+        a ZeroDivisionError. Spend WITHOUT queries (keep-alive pings,
+        prewarming, writer invocations before the first search) is NaN:
+        there is no per-query number that honestly describes a bill no
+        query caused."""
         if n_queries <= 0:
-            return float("nan")
+            return 0.0 if self.total_dollars == 0.0 else float("nan")
         return self.total_dollars / n_queries * 1000.0
 
 

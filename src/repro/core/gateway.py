@@ -7,11 +7,22 @@ accessible to a search client."
 The gateway owns route → function mapping, request/response envelopes, and
 adds the gateway's own (small) proxy overhead so end-to-end latency matches
 what the paper measures "from the browser".
+
+Batched routes additionally get an ADMISSION QUEUE with an adaptive
+micro-batch window: concurrent arrivals inside one window coalesce into a
+single coordinator dispatch (for ``/search``: one vmapped invocation per
+partition per window), which is how the gateway serves "interactive search
+at unusual operating points" — amortizing a device call over whatever
+concurrency the arrival process actually offers. The window is sized from
+the trailing arrival rate, clamped by a p99-latency budget, and collapses
+to ZERO under sparse traffic so a lone query never waits on a window that
+no second query will ever join.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable
 
 from repro.core.runtime import (FaaSRuntime, InvocationRecord,
@@ -23,6 +34,13 @@ GATEWAY_OVERHEAD_S = 0.010   # API-Gateway proxy+auth overhead (~10 ms)
 
 class RouteError(Exception):
     pass
+
+
+class BadRequest(Exception):
+    """A malformed request body (e.g. an empty micro-batch). Raised by a
+    coordinator or an admission validator; the gateway maps it to a 400 —
+    the client's error — instead of the 502 a Lambda failure earns, and a
+    batched route rejects it AT ADMISSION, before anything dispatches."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,17 +55,106 @@ class Response:
         return 200 <= self.status < 300
 
 
+class PendingResponse:
+    """Handle for a request admitted to a batching window. The response
+    materializes when the window flushes (immediately, when the adaptive
+    window is zero); reading ``response`` before then raises — in a
+    virtual-clock simulation that is always a driver bug, never a race."""
+
+    __slots__ = ("t_arrival", "_response")
+
+    def __init__(self, t_arrival: float) -> None:
+        self.t_arrival = t_arrival
+        self._response: Response | None = None
+
+    def done(self) -> bool:
+        return self._response is not None
+
+    @property
+    def response(self) -> Response:
+        if self._response is None:
+            raise RuntimeError("window still open — flush the gateway (or "
+                               "submit a later arrival) before reading")
+        return self._response
+
+    def _resolve(self, response: Response) -> None:
+        self._response = response
+
+
+@dataclasses.dataclass
+class WindowPolicy:
+    """Sizing rule for the adaptive micro-batch window.
+
+    On the FIRST arrival of a window the gateway picks how long to hold the
+    admission queue open:
+
+    * sparse traffic (trailing rate < ``sparse_qps``) → window 0: a lone
+      query dispatches immediately and never pays for a batch that will not
+      form;
+    * otherwise ``target_batch / rate`` — just long enough for the arrival
+      process to offer ~``target_batch`` coalescable queries — capped at
+      ``max_window_s``;
+    * clamped so the added wait cannot push the route past its latency
+      budget: window ≤ ``p99_budget_s`` − the route's trailing p99 (over
+      the ``p99_window`` most recent requests). A route already near
+      budget stops batching before it starts breaching.
+    """
+
+    max_window_s: float = 0.050
+    target_batch: int = 8
+    rate_window_s: float = 1.0
+    sparse_qps: float = 2.0            # below this, window -> 0
+    p99_budget_s: float | None = 0.300
+    p99_window: int = 64               # trailing requests for the budget clamp
+    max_batch: int = 64                # hard flush at this many queued
+
+    def window_s(self, rate_qps: float, route_p99_s: float) -> float:
+        if rate_qps < self.sparse_qps:
+            return 0.0
+        w = min(self.max_window_s, self.target_batch / max(rate_qps, 1e-9))
+        if self.p99_budget_s is not None and not math.isnan(route_p99_s):
+            w = min(w, max(0.0, self.p99_budget_s - route_p99_s))
+        return w
+
+
 # A coordinator route fans one request out to several functions (e.g.
 # scatter-gather over partitions) and owns its own latency accounting:
 # (body, t_arrival) -> (result, latency_s, representative record | None).
 Coordinator = Callable[[Any, "float | None"],
                        "tuple[Any, float, InvocationRecord | None]"]
 
+# A batch coordinator dispatches one WINDOW of admitted requests at the
+# window-close instant: (bodies, t_arrivals, t_dispatch) -> per-request
+# (result, dispatch_latency_s) pairs, in admission order. The gateway adds
+# each request's queue wait (t_dispatch - t_arrival) and proxy overhead.
+BatchCoordinator = Callable[[list, list, float], "list[tuple[Any, float]]"]
+
+
+class _AdmissionQueue:
+    """One batched route's open window: admitted requests + close time."""
+
+    def __init__(self, policy: WindowPolicy) -> None:
+        self.policy = policy
+        self.pending: list[tuple[Any, PendingResponse]] = []
+        self.window_close = 0.0
+        self.arrivals: list[float] = []     # trailing-rate history
+        self.waits: list[float] = []        # per-request t_dispatch - t_arrival
+        self.batch_sizes: list[int] = []    # per-flush, for introspection
+
+    def rate(self, now: float) -> float:
+        cutoff = now - self.policy.rate_window_s
+        self.arrivals = [t for t in self.arrivals if t > cutoff]
+        return len(self.arrivals) / self.policy.rate_window_s
+
 
 class Gateway:
     def __init__(self, runtime: FaaSRuntime) -> None:
         self.runtime = runtime
         self._routes: dict[tuple[str, str], "str | Coordinator"] = {}
+        # batched routes: admission queue + window policy per route
+        self._batched: dict[tuple[str, str],
+                            tuple[BatchCoordinator, "Callable | None"]] = {}
+        self._queues: dict[tuple[str, str], _AdmissionQueue] = {}
         # end-to-end latency log per route (what "the browser" saw) — the
         # runtime's records are per-invocation, so a hedged or fanned-out
         # request has no single record to read percentiles from
@@ -57,6 +164,24 @@ class Gateway:
         """Map method+path to a runtime function name, or to a coordinator
         callable that orchestrates several invocations (scatter-gather)."""
         self._routes[(method.upper(), path)] = fn
+
+    def route_batched(self, method: str, path: str,
+                      coordinator: BatchCoordinator, *,
+                      policy: WindowPolicy | None = None,
+                      admit: "Callable[[Any, float], Any] | None" = None
+                      ) -> None:
+        """Register a route whose :meth:`submit` arrivals coalesce through
+        the adaptive micro-batch window into single batch dispatches.
+
+        ``admit(body, t_arrival)`` runs at ADMISSION (not dispatch): it
+        validates the body — raising :class:`BadRequest` rejects it with a
+        400 before it can occupy the window — and may return an annotated
+        replacement body (e.g. pinning the index generation the request
+        must be served from, so a commit landing while the window is open
+        can never retroactively move an already-admitted query)."""
+        key = (method.upper(), path)
+        self._batched[key] = (coordinator, admit)
+        self._queues[key] = _AdmissionQueue(policy or WindowPolicy())
 
     def request(self, method: str, path: str, body: Any = None,
                 *, t_arrival: float | None = None) -> Response:
@@ -71,10 +196,124 @@ class Gateway:
                 result, rec = self.runtime.invoke(fn, body,
                                                   t_arrival=t_arrival)
                 lat = rec.latency_s
+        except BadRequest as e:  # malformed body → 400, nothing dispatched
+            return Response(400, {"error": str(e)}, GATEWAY_OVERHEAD_S)
         except Exception as e:  # Lambda error → 502 from the gateway
             return Response(502, {"error": str(e)}, GATEWAY_OVERHEAD_S)
         self.latencies.setdefault(key, []).append(lat + GATEWAY_OVERHEAD_S)
         return Response(200, result, lat + GATEWAY_OVERHEAD_S, rec)
+
+    # -- the admission queue (batched routes) ---------------------------------
+
+    def submit(self, method: str, path: str, body: Any = None,
+               *, t_arrival: float | None = None) -> PendingResponse:
+        """Admit a request to its route's micro-batch window.
+
+        Arrivals must be submitted in nondecreasing ``t_arrival`` order (the
+        virtual-clock discipline every driver already follows). A submission
+        past the open window's close first flushes that window — so the
+        caller of an EARLIER arrival can always read its response once any
+        later arrival (or :meth:`flush`) has moved time past the close.
+        Routes without a batch registration dispatch immediately through
+        :meth:`request` and return an already-resolved handle."""
+        key = (method.upper(), path)
+        t0 = self.runtime.clock if t_arrival is None else t_arrival
+        if key not in self._batched:
+            handle = PendingResponse(t0)
+            handle._resolve(self.request(method, path, body, t_arrival=t0))
+            return handle
+        q = self._queues[key]
+        # a window whose close has passed flushes before the new arrival
+        if q.pending and t0 >= q.window_close:
+            self._flush_queue(key, q.window_close)
+
+        coordinator, admit = self._batched[key]
+        handle = PendingResponse(t0)
+        if admit is not None:
+            try:
+                annotated = admit(body, t0)
+            except BadRequest as e:
+                handle._resolve(
+                    Response(400, {"error": str(e)}, GATEWAY_OVERHEAD_S))
+                return handle
+            if annotated is not None:
+                body = annotated
+
+        q.arrivals.append(t0)
+        if not q.pending:
+            w = q.policy.window_s(q.rate(t0), self._route_p99(key, q))
+            if w <= 0.0:                # sparse traffic: a lone query never
+                q.pending.append((body, handle))   # waits on a window
+                self._flush_queue(key, t0)
+                return handle
+            q.window_close = t0 + w
+        q.pending.append((body, handle))
+        if len(q.pending) >= q.policy.max_batch:
+            self._flush_queue(key, t0)  # hard cap: dispatch now
+        return handle
+
+    def flush(self, now: float | None = None) -> int:
+        """Close due (or, with ``now=None``, ALL) open windows.
+
+        Drivers call this when virtual time passes a window close with no
+        further arrivals to trigger it — the analogue of the window timer
+        firing — and once at end of run. Returns the number of windows
+        flushed."""
+        n = 0
+        for key, q in self._queues.items():
+            if not q.pending:
+                continue
+            if now is None or now >= q.window_close:
+                self._flush_queue(key, q.window_close)
+                n += 1
+        return n
+
+    def _route_p99(self, key: tuple[str, str], q: _AdmissionQueue) -> float:
+        lats = self.latencies.get(key, [])
+        return nearest_rank_percentiles(
+            lats[-q.policy.p99_window:], qs=(0.99,))[0.99]
+
+    def _flush_queue(self, key: tuple[str, str], t_dispatch: float) -> None:
+        q = self._queues[key]
+        batch, q.pending = q.pending, []
+        q.batch_sizes.append(len(batch))
+        coordinator, _ = self._batched[key]
+        bodies = [b for b, _ in batch]
+        arrivals = [h.t_arrival for _, h in batch]
+        try:
+            results = coordinator(bodies, arrivals, t_dispatch)
+        except BadRequest as e:
+            for _, handle in batch:
+                handle._resolve(
+                    Response(400, {"error": str(e)}, GATEWAY_OVERHEAD_S))
+            return
+        except Exception as e:          # whole-flight failure → 502 each
+            for _, handle in batch:
+                handle._resolve(
+                    Response(502, {"error": str(e)}, GATEWAY_OVERHEAD_S))
+            return
+        for (_, handle), (result, disp_lat) in zip(batch, results):
+            wait = t_dispatch - handle.t_arrival
+            q.waits.append(wait)
+            lat = wait + disp_lat + GATEWAY_OVERHEAD_S
+            self.latencies.setdefault(key, []).append(lat)
+            handle._resolve(Response(200, result, lat))
+
+    def window_stats(self, method: str, path: str) -> dict:
+        """Introspection for the route's admission queue: flush batch sizes
+        and per-request added waits (a sparse-traffic run must show every
+        wait at exactly zero — the window's no-added-latency contract)."""
+        q = self._queues.get((method.upper(), path))
+        if q is None:
+            return {"batches": 0, "mean_batch": 0.0, "max_wait_s": 0.0,
+                    "waits": []}
+        return {
+            "batches": len(q.batch_sizes),
+            "mean_batch": (sum(q.batch_sizes) / len(q.batch_sizes)
+                           if q.batch_sizes else 0.0),
+            "max_wait_s": max(q.waits, default=0.0),
+            "waits": list(q.waits),
+        }
 
     def latency_percentiles(self, method: str, path: str,
                             qs=(0.5, 0.9, 0.99)) -> dict[float, float]:

@@ -147,18 +147,17 @@ class HedgePolicy:
         """The projected-overhead threshold for this group, or None if the
         policy has no basis to hedge yet.
 
-        One newest-first scan of the record log, stopping at ``window``
-        matches — "recent" by construction, and per-query work stays bounded
-        instead of growing with the run length."""
+        One newest-first scan of the record log
+        (``FaaSRuntime.recent_latencies``), stopping at ``window`` matches —
+        "recent" by construction, per-query work bounded instead of growing
+        with the run length, and the SAME windowing the fleet controller
+        reads its warm quantiles through (``latency_percentiles(...,
+        window=...)``): hedging and scaling must judge one latency regime,
+        not hedge on recent behaviour while scaling on stale history."""
         if self.after_s is not None:
             return self.after_s
-        names = set(group)
-        warm: list[float] = []
-        for r in reversed(runtime.records):
-            if r.fn in names and not r.cold and not r.keepalive:
-                warm.append(r.latency_s)
-                if len(warm) >= self.window:
-                    break
+        warm = runtime.recent_latencies(group, warm_only=True,
+                                        window=self.window)
         if len(warm) < self.min_history:
             return None
         q = nearest_rank_percentiles(warm, qs=(self.percentile,))

@@ -69,6 +69,13 @@ class InvocationRecord:
     exec_s: float
     hydrate_s: float
     cold: bool
+    # cold splits two ways: ``provisioned`` means a FRESH container booted
+    # for this request (capacity shortfall — more standby pools would have
+    # absorbed it), while a hydration-only cold (warm container, new index
+    # generation) is content turnover that every pool pays exactly once per
+    # generation — adding pools ADDS hydrations, so a scaling policy must
+    # not read it as load pressure
+    provisioned: bool
     instance_id: int
     retries: int = 0
     hedged: bool = False
@@ -239,7 +246,16 @@ class FaaSRuntime:
         """Seconds until the LAST of ``fn``'s instances would be reaped for
         idleness (None if the pool has no instances). A keep-alive manager
         pings a pool when this drops under its margin; a warm pool serving
-        steady traffic never needs the ping."""
+        steady traffic never needs the ping.
+
+        Boundary contract (``tests`` pin this): an instance idle EXACTLY
+        ``idle_timeout_s`` is still alive — ``_reap_idle``, ``probe``, and
+        ``_acquire`` all keep instances at ``now - last_used <=
+        idle_timeout_s``, reaping strictly after — and this method reports
+        ``0.0`` for it. Keep-alive margin math (``autoscale._keepalive``
+        pings when ``expiry < margin``) therefore fires the ping while the
+        instance is still warm: an expiry of 0 is a pingable pool, not a
+        lost one, and a margin of 0 would (correctly) never ping."""
         t = self.clock if now is None else now
         expiries = [i.last_used + self.config.idle_timeout_s - t
                     for i in self._instances if i.fn == fn and i.alive]
@@ -392,7 +408,8 @@ class FaaSRuntime:
         rec = InvocationRecord(
             fn=fn, t_arrival=now, t_done=t_start + result_duration,
             latency_s=queue_wait + result_duration, exec_s=exec_s,
-            hydrate_s=hydrate_s, cold=cold, instance_id=inst.id,
+            hydrate_s=hydrate_s, cold=cold, provisioned=fresh,
+            instance_id=inst.id,
             retries=attempt, hedged=hedged, keepalive=keepalive, write=write,
         )
         if record:
@@ -405,14 +422,12 @@ class FaaSRuntime:
     def fleet_size(self) -> int:
         return len(self._instances)
 
-    def latency_percentiles(self, fn=None, qs=(0.5, 0.9, 0.99), *,
-                            warm_only: bool = False) -> dict[float, float]:
-        """Latency quantiles over the record log. ``fn`` may be a single
-        function name or a collection of names (e.g. one partition's replica
-        group); ``warm_only`` drops cold-start records — the baseline a
-        hedging policy compares projected completions against. Keep-alive
-        pings are never counted: they are capacity maintenance, not queries,
-        and their near-zero exec would drag every quantile down."""
+    def recent_latencies(self, fn=None, *, warm_only: bool = False,
+                         window: int | None = None) -> list[float]:
+        """Matching latencies from the record log, NEWEST first. ``window``
+        caps the scan at that many newest matches — one bounded reverse
+        pass, so per-query policy work never grows with the run length.
+        Keep-alive pings never match (capacity maintenance, not queries)."""
         if fn is None:
             match = lambda r: True
         elif isinstance(fn, str):
@@ -420,10 +435,32 @@ class FaaSRuntime:
         else:
             names = set(fn)
             match = lambda r: r.fn in names
+        out: list[float] = []
+        for r in reversed(self.records):
+            if match(r) and not r.keepalive and not (warm_only and r.cold):
+                out.append(r.latency_s)
+                if window is not None and len(out) >= window:
+                    break
+        return out
+
+    def latency_percentiles(self, fn=None, qs=(0.5, 0.9, 0.99), *,
+                            warm_only: bool = False,
+                            window: int | None = None) -> dict[float, float]:
+        """Latency quantiles over the record log. ``fn`` may be a single
+        function name or a collection of names (e.g. one partition's replica
+        group); ``warm_only`` drops cold-start records — the baseline a
+        hedging policy compares projected completions against. Keep-alive
+        pings are never counted: they are capacity maintenance, not queries,
+        and their near-zero exec would drag every quantile down.
+
+        ``window`` restricts the quantiles to the newest matching records —
+        the SAME recency convention :class:`~repro.core.partition.
+        HedgePolicy` scans with, so a long-running fleet's controller scales
+        on the latency regime it is actually in, not on hours-stale history
+        (unwindowed, a mid-run regime shift is invisible until the old
+        records are outnumbered)."""
         return nearest_rank_percentiles(
-            (r.latency_s for r in self.records
-             if match(r) and not r.keepalive and not (warm_only and r.cold)),
-            qs)
+            self.recent_latencies(fn, warm_only=warm_only, window=window), qs)
 
     def warm_fraction(self, fn: str | None = None) -> float:
         recs = [r for r in self.records if fn is None or r.fn == fn]

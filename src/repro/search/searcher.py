@@ -44,6 +44,12 @@ class SearchConfig:
     # against exactly. Leave None to measure (the paper's claims).
     sim_exec_s: float | None = None
     sim_exec_per_query_s: float = 0.0002
+    # Per-1000-docs exec term of the model: evaluation work scales with the
+    # partition's document count, so under a SKEWED partitioning a head
+    # partition's handler models proportionally longer invocations — the
+    # per-partition load heterogeneity B12 autoscales against. Default 0
+    # keeps every pre-existing modeled benchmark bit-identical.
+    sim_exec_per_kdoc_s: float = 0.0
     # Same idea for the NRT writer path: when set, indexer invocations
     # (delta pack / merge) report sim_write_s + sim_write_per_doc_s × docs
     # as their compute time — a commit's cost and rollover latency then
@@ -171,7 +177,10 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
         t0 = time.perf_counter()
         batch_hits = searcher.search_batch(queries, k)
         if cfg.sim_exec_s is not None:
-            exec_s = cfg.sim_exec_s + cfg.sim_exec_per_query_s * (len(queries) - 1)
+            exec_s = (cfg.sim_exec_s
+                      + cfg.sim_exec_per_query_s * (len(queries) - 1)
+                      + cfg.sim_exec_per_kdoc_s
+                      * searcher.packed.meta.n_docs / 1000.0)
         else:
             exec_s = time.perf_counter() - t0
 

@@ -22,7 +22,8 @@ import time
 from typing import Iterable
 
 from repro.core.autoscale import AutoscalePolicy, FleetController
-from repro.core.gateway import Gateway
+from repro.core.gateway import (BadRequest, Gateway, PendingResponse,
+                                WindowPolicy)
 from repro.core.kvstore import KVStore
 from repro.core.object_store import Backend, ObjectStore
 from repro.core.partition import HedgePolicy, PartitionHit, ScatterGather
@@ -548,6 +549,28 @@ class PartitionedSearchApp:
             "GET", "/search", _search_body(q, k, fetch_docs),
             t_arrival=t_arrival)
 
+    def submit(self, q: "str | list[str]", k: int = 10, *,
+               t_arrival: float | None = None,
+               fetch_docs: bool = True) -> PendingResponse:
+        """Admit a query to the gateway's adaptive micro-batch window:
+        concurrent arrivals inside one window coalesce into ONE
+        ``ScatterGather.search_batch`` dispatch — one vmapped invocation
+        per partition per window — and under sparse traffic the window is
+        zero, so the returned handle resolves immediately with exactly the
+        latency :meth:`query` would have charged. The serving generation is
+        pinned per query AT ADMISSION: a commit landing while the window is
+        open splits the flush into per-generation dispatches instead of
+        moving an admitted query to an index it didn't arrive under."""
+        return self.gateway.submit(
+            "GET", "/search", _search_body(q, k, fetch_docs),
+            t_arrival=t_arrival)
+
+    def flush(self, now: float | None = None) -> int:
+        """Close the search route's due admission window(s) — the window
+        timer's analogue for virtual-clock drivers; call once at end of
+        run (``now=None`` closes unconditionally)."""
+        return self.gateway.flush(now)
+
     def warm(self, *, t_arrival: float | None = None) -> list[InvocationRecord]:
         """Touch EVERY function — primaries and replicas — once, hydrating
         each pool (replicas otherwise only see traffic when a hedge fires,
@@ -642,6 +665,13 @@ class PartitionedSearchApp:
         k = min(int(body.get("k", self.search_k)), self.search_k)
         fetch_docs = body.get("fetch_docs", True)
         batched = "queries" in body
+        if batched and not body["queries"]:
+            # reject BEFORE anything dispatches: an empty micro-batch has
+            # nothing to scatter, and invoking the fleet for it would bill
+            # every partition for zero queries (the gateway maps this to a
+            # 400 — the client's error, not a 502 fleet failure)
+            raise BadRequest("queries=[] — an empty micro-batch has nothing "
+                             "to dispatch")
         payload = {"k": k, "fetch_docs": False}
         if self.indexer is not None:
             # pin ONE generation for every leg of this query — primaries,
@@ -680,6 +710,101 @@ class PartitionedSearchApp:
                 self.runtime.clock if t_arrival is None else t_arrival)
         return result, lat + fetch_s, slowest
 
+    # -- the windowed /search coordinator (adaptive micro-batch dispatch) ---------
+
+    def _admit_search(self, body: dict, t_arrival: float) -> dict:
+        """Admission hook for the batched ``/search`` route: validate the
+        body before it can occupy the window, and pin the serving
+        generation AT ADMISSION — so a commit whose rollover lands while
+        the window is still open can never retroactively move an admitted
+        query onto an index it didn't arrive under (the flush then splits
+        into one scatter per pinned generation; every one of them still
+        merges hits from exactly one generation)."""
+        if "queries" in body and not body["queries"]:
+            raise BadRequest("queries=[] — an empty micro-batch has nothing "
+                             "to dispatch")
+        if self.indexer is not None:
+            body = dict(body)
+            body["_gen"] = self.indexer.gen
+        return body
+
+    def _search_route_batch(self, bodies: list, t_arrivals: list,
+                            t_dispatch: float) -> list:
+        """Dispatch ONE admission window: every query of every admitted
+        body rides a single ``search_batch`` scatter per pinned generation
+        — one vmapped invocation per partition per window — and the merged
+        per-query top-k is bit-identical to serial dispatch (per-query
+        candidate sets never interact; a window's k is the per-partition
+        ``search_k`` ceiling and each body's smaller ``k`` is a prefix of
+        that merge). Duplicate query strings across (or within) bodies are
+        NOT coalesced: every admitted query gets its own slot in the batch
+        and its own full result."""
+        per_body = []      # (batched, queries, k, fetch_docs, gen) per body
+        for body in bodies:
+            batched = "queries" in body
+            per_body.append((
+                batched,
+                list(body["queries"]) if batched else [body["q"]],
+                min(int(body.get("k", self.search_k)), self.search_k),
+                body.get("fetch_docs", True),
+                body.get("_gen")))
+        # one scatter per pinned generation, in admission order — normally
+        # exactly one; two when a commit landed inside the open window
+        gen_order: list = []
+        gen_members: dict = {}
+        for bi, (_, _, _, _, gen) in enumerate(per_body):
+            if gen not in gen_members:
+                gen_order.append(gen)
+                gen_members[gen] = []
+            gen_members[gen].append(bi)
+        merged_by_body: dict[int, list] = {}
+        lat_by_body: dict[int, float] = {}
+        recs_by_body: dict[int, list] = {}
+        for gen in gen_order:
+            idxs = gen_members[gen]
+            flat = [q for bi in idxs for q in per_body[bi][1]]
+            payload: dict = {"queries": flat, "k": self.search_k,
+                             "fetch_docs": False}
+            if gen is not None:
+                payload["gen"] = gen
+            merged, lat, records = self.scatter.search_batch(
+                payload, self.search_k, t_arrival=t_dispatch)
+            at = 0
+            for bi in idxs:
+                n = len(per_body[bi][1])
+                merged_by_body[bi] = merged[at: at + n]
+                at += n
+                lat_by_body[bi] = lat
+                recs_by_body[bi] = records
+        # ONE batched KV fetch for the union of every doc-requesting
+        # body's hits — the same amortization the handler-side batch does
+        need = [hits for bi, (_, _, _, fetch, _) in enumerate(per_body)
+                if fetch for hits in merged_by_body[bi]]
+        raw, fetch_s = self._fetch_raw(need, True) if need else ({}, 0.0)
+        out = []
+        for bi, (batched, queries, k, fetch_docs, gen) in enumerate(per_body):
+            braw = raw if fetch_docs else {}
+            hit_lists = [hits[:k] for hits in merged_by_body[bi]]
+            if batched:
+                result: dict = {"results": [self._materialize(h, braw)
+                                            for h in hit_lists]}
+            else:
+                result = self._materialize(hit_lists[0], braw)
+            result["partitions"] = [
+                {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
+                 "latency_s": r.latency_s, "hedged": r.hedged}
+                for r in recs_by_body[bi]]
+            if gen is not None:
+                result["generation"] = gen
+            out.append((result,
+                        lat_by_body[bi] + (fetch_s if fetch_docs else 0.0)))
+        # same control-loop ride-along as the serial path: tick AFTER the
+        # window dispatched, so keep-alive pings never race the batch for
+        # a pool's idle instance
+        if self.controller is not None:
+            self.controller.maybe_tick(t_dispatch)
+        return out
+
 
 def build_partitioned_search_app(
     docs: Iterable[tuple[str, str]],
@@ -689,6 +814,8 @@ def build_partitioned_search_app(
     hedge: "HedgePolicy | float | None" = None,
     autoscale: "AutoscalePolicy | bool | None" = None,
     routing: str | None = None,
+    window: WindowPolicy | None = None,
+    partition_weights: "list[float] | None" = None,
     merge_policy: MergePolicy | None = None,
     runtime_config: RuntimeConfig | None = None,
     search_config: SearchConfig | None = None,
@@ -726,6 +853,16 @@ def build_partitioned_search_app(
     + zero-downtime generation rollovers; ``merge_policy`` bounds the
     delta tier. Every query pins the serving generation across all its
     scatter legs, so rollovers can never tear a merged result.
+
+    ``window`` (a :class:`~repro.core.gateway.WindowPolicy`; defaults
+    apply when omitted) governs the gateway's adaptive micro-batch window
+    behind :meth:`PartitionedSearchApp.submit`: concurrent arrivals
+    coalesce into one vmapped invocation per partition per window, sized
+    from the trailing arrival rate and zero under sparse traffic. The
+    synchronous :meth:`~PartitionedSearchApp.query` path never waits on a
+    window. ``partition_weights`` skews the document split (Zipf-shaped
+    fleets: a hot head partition, a cold tail) — global BM25 stats keep
+    the merged ranking exact regardless of the split.
     """
     if replicas < 1:
         raise ValueError(f"replicas must be >= 1, got {replicas}")
@@ -744,7 +881,7 @@ def build_partitioned_search_app(
     # every partition packs against the corpus-global vocab: queries then
     # encode (and idf-truncate, for > max_terms) identically per partition
     gvocab = global_vocab(gstats)
-    parts, per = partition_corpus(docs, n_parts)
+    parts, per = partition_corpus(docs, n_parts, weights=partition_weights)
     scfg = search_config or SearchConfig()
     indexer = FleetIndexer(
         catalog, doc_store, runtime, stats=gstats, vocab=gvocab,
@@ -786,5 +923,7 @@ def build_partitioned_search_app(
         fn_groups=scatter.groups, replicas=replicas, controller=controller,
         indexer=indexer)
     gateway.route("GET", "/search", app._search_route)
+    gateway.route_batched("GET", "/search", app._search_route_batch,
+                          policy=window, admit=app._admit_search)
     gateway.route("POST", "/index", app._index_route)
     return app

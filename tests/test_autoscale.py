@@ -70,6 +70,25 @@ def test_dollars_per_1k_counts_logical_queries_under_hedging():
     assert led.dollars_per_1k(0) != led.dollars_per_1k(0)  # NaN guard
 
 
+def test_empty_ledger_reports_zero_not_an_error():
+    """A just-built fleet with no traffic reports $0 per 1k queries and an
+    all-zero attribution — dashboards before the first query must see a
+    bill of zero, never a ZeroDivisionError (and never NaN for a fleet
+    that truly spent nothing)."""
+    led = CostLedger()
+    assert led.dollars_per_1k(0) == 0.0
+    assert led.total_dollars == 0.0
+    att = led.attribution()
+    assert set(att) == {"serving", "hedge", "idle", "write"}
+    assert all(v == 0.0 for v in att.values())
+    assert led.queries_per_dollar() == float("inf")
+    # spend with zero queries stays NaN: no per-query number honestly
+    # describes a bill no query caused (prewarm pings, writer work)
+    led.charge(Invocation(GB2, 0.05, idle=True))
+    assert led.dollars_per_1k(0) != led.dollars_per_1k(0)   # NaN
+    assert led.dollars_per_1k(10) > 0
+
+
 def test_attribution_partitions_the_compute_bill():
     led = CostLedger()
     led.charge(Invocation(GB2, 0.2))
@@ -153,6 +172,69 @@ def test_pool_introspection():
     assert rt.kill_instance(fn="f")
     assert rt.recent_kills("f", now=rt.clock, window_s=30.0) == 1
     assert rt.recent_kills("f", now=rt.clock + 60.0, window_s=30.0) == 0
+
+
+def test_pool_expiry_boundary_semantics():
+    """The keepalive margin math rests on a pinned boundary contract: an
+    instance idle EXACTLY ``idle_timeout_s`` is still alive (reaping is
+    strictly-greater), ``pool_expiry_s`` reports 0.0 for it, and the
+    controller's ``expiry < margin`` rule therefore PINGS it (an expiry of
+    0 is a pingable pool, not a lost one) while a margin of 0 never
+    pings."""
+    cfg = RuntimeConfig(idle_timeout_s=100.0)
+    rt = FaaSRuntime(cfg)
+    rt.register("f", _sleepy_handler)
+    _, rec = rt.invoke("f", 0)
+    t_exact = rec.t_done + cfg.idle_timeout_s    # last_used == t_done
+    # at the boundary: alive, expiry exactly 0, probe projects a WARM hit
+    assert rt.pool_expiry_s("f", t_exact) == pytest.approx(0.0)
+    assert rt.probe("f", t_exact) == (0.0, 0.0)
+    # strictly past the boundary: reaped — probe projects a cold provision
+    eps = 1e-6
+    assert rt.probe("f", t_exact + eps) == (0.0, cfg.provision_s)
+    assert rt.pool_expiry_s("f", t_exact + eps) == pytest.approx(-eps)
+    # an invocation AT the boundary reuses the warm instance (no cold)
+    _, rec2 = rt.invoke("f", 1, t_arrival=t_exact)
+    assert not rec2.cold and rec2.instance_id == rec.instance_id
+    # ...and one strictly past it pays the cold boot the probe projected
+    rt2 = FaaSRuntime(cfg)
+    rt2.register("f", _sleepy_handler)
+    _, r1 = rt2.invoke("f", 0)
+    _, r2 = rt2.invoke("f", 1, t_arrival=r1.t_done + cfg.idle_timeout_s + eps)
+    assert r2.cold and r2.provisioned and r2.instance_id != r1.instance_id
+
+
+def test_latency_percentile_window_tracks_regime_shift():
+    """The warm-latency window reconciliation: HedgePolicy scans the newest
+    ``window`` warm records, and ``latency_percentiles(window=...)`` now
+    gives its consumers the SAME recency — a fleet whose latency regime
+    shifts mid-run must hedge AND scale on the regime it is in, not scale
+    on hours-stale history."""
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", lambda cache, payload: (payload, payload))
+    t = 0.0
+    for _ in range(400):                 # old regime: 10 ms exec
+        t += 1.0
+        rt.invoke("f", 0.01, t_arrival=t)
+    for _ in range(200):                 # new regime: 100 ms exec
+        t += 1.0
+        rt.invoke("f", 0.1, t_arrival=t)
+    unwindowed = rt.latency_percentiles("f", qs=(0.5,), warm_only=True)[0.5]
+    windowed = rt.latency_percentiles("f", qs=(0.5,), warm_only=True,
+                                      window=256)[0.5]
+    assert unwindowed < 0.05             # stale history drags the quantile
+    assert windowed == pytest.approx(0.1)    # the window sees the shift
+    # HedgePolicy and the controller's threshold read the SAME regime now
+    pol = HedgePolicy(percentile=0.5, scale=2.0, min_history=4, window=256)
+    assert pol.threshold_s(rt, ["f"]) == pytest.approx(2.0 * windowed)
+    sc = ScatterGather(rt, [["f"]])
+    from repro.core.autoscale import FleetController
+    ctl = FleetController(rt, sc, [lambda: _sleepy_handler],
+                          AutoscalePolicy(warm_window=256))
+    assert ctl._overhead_threshold(["f"]) == pytest.approx(2.0 * windowed)
+    # newest-first capped scan returns at most `window` records
+    assert len(rt.recent_latencies("f", window=256)) == 256
+    assert len(rt.recent_latencies("f")) == 600
 
 
 # -- scatter layer ------------------------------------------------------------
@@ -283,6 +365,109 @@ def test_retiring_idle_replica_strictly_cuts_cost(corpus, queries):
     assert any(e["action"] == "retire" for e in auto_app.controller.events)
     assert auto_idle < fixed_idle           # the pings stopped...
     assert auto_cost < fixed_cost           # ...and the bill strictly shrank
+
+
+def test_heterogeneous_targets_scale_head_not_tail():
+    """The per-group target rule under skew: two partitions, the head
+    holding ~6× the documents (so ~6× the modeled eval time), served at a
+    sustained rate that saturates the head's single pool but leaves the
+    tail mostly idle. The controller must scale the HEAD to its
+    concurrency target while the tail never grows — then drain the head
+    back once the traffic goes quiet."""
+    corpus = synth_corpus(350, vocab=400, seed=45)
+    queries = synth_queries(corpus, 60, seed=46)
+    app = build_partitioned_search_app(
+        corpus, n_parts=2, replicas=1, hedge=HedgePolicy(),
+        autoscale=AutoscalePolicy(
+            min_replicas=1, max_replicas=3, tick_s=0.25, rate_window_s=1.0,
+            up_qps_per_replica=float("inf"), down_qps_per_replica=1.0,
+            idle_ticks_to_retire=2, target_utilization=0.6),
+        partition_weights=[6.0, 1.0],
+        runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+        search_config=SearchConfig(sim_exec_s=0.002,
+                                   sim_exec_per_kdoc_s=0.4))
+    assert len(app.indexer.parts[0].seg_docs) == 300
+    assert len(app.indexer.parts[1].seg_docs) == 50
+    app.warm()
+    # fixed external schedule, 6 inv/s: the ~122 ms head eval offers
+    # 0.73 concurrency on one pool — NO queue, NO cold boot, NO hedge
+    # fires, so the ONLY signal that can grow the head is Little's law
+    # (6/s × 122 ms ÷ 0.6 util → 2 pools); the tail's ~22 ms eval offers
+    # 0.13 and keeps its single pool
+    t0 = app.runtime.clock + 1.0
+    for i, q in enumerate(queries[:40]):
+        r = app.query(q, k=K, t_arrival=t0 + (1 / 6) * i, fetch_docs=False)
+        assert r.ok, r.body
+    assert app.controller.replica_counts() == [2, 1]
+    assert app.controller.replica_targets() == [2, 1]
+    ups = [e for e in app.controller.events if e["action"] == "scale_up"]
+    assert ups and all(e["partition"] == 0 for e in ups)
+    assert all("concurrency" in e["reason"] for e in ups)
+    # quiet: the head's extra pools drain back to the per-group minimum
+    t = t0 + (1 / 6) * 40
+    tick = t
+    for q in queries[40:46]:
+        t += 120.0
+        while tick + 15.0 < t:
+            tick += 15.0
+            app.controller.maybe_tick(tick)
+        app.query(q, k=K, t_arrival=t, fetch_docs=False)
+    assert app.controller.replica_counts() == [1, 1]
+
+
+def test_over_provisioned_group_drains_under_live_traffic():
+    """A transient (here: simply starting at R=2) must not pin capacity
+    forever just because traffic keeps flowing: when the group's own
+    concurrency math says one pool suffices and no pressure shows for
+    ``idle_ticks_to_retire`` ticks, the controller retires toward the
+    target even though the idle rule (rate < down_qps) can never fire."""
+    corpus = synth_corpus(240, vocab=400, seed=47)
+    queries = synth_queries(corpus, 30, seed=48)
+    app = build_partitioned_search_app(
+        corpus, n_parts=2, replicas=2, hedge=HedgePolicy(),
+        autoscale=AutoscalePolicy(
+            min_replicas=1, max_replicas=3, tick_s=0.25, rate_window_s=1.0,
+            up_qps_per_replica=float("inf"), down_qps_per_replica=1.0,
+            idle_ticks_to_retire=2, target_utilization=0.6),
+        runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+        search_config=SearchConfig(sim_exec_s=0.002))
+    app.warm()
+    t0 = app.runtime.clock + 1.0
+    for i, q in enumerate(queries):            # 5 inv/s: alive, easy load
+        r = app.query(q, k=K, t_arrival=t0 + 0.2 * i, fetch_docs=False)
+        assert r.ok, r.body
+    assert app.controller.replica_counts() == [1, 1]
+    downs = [e for e in app.controller.events if e["action"] == "retire"]
+    assert downs and all("over-provisioned" in e["reason"] for e in downs)
+
+
+def test_per_partition_replica_bounds():
+    """Heterogeneous bounds: a per-partition min/max sequence pins each
+    group's range independently (and a wrong-length sequence is rejected
+    at construction)."""
+    corpus = synth_corpus(240, vocab=400, seed=49)
+    queries = synth_queries(corpus, 20, seed=50)
+    app = build_partitioned_search_app(
+        corpus, n_parts=2, replicas=2, hedge=HedgePolicy(),
+        autoscale=AutoscalePolicy(
+            min_replicas=[2, 1], max_replicas=[3, 1], tick_s=0.25,
+            rate_window_s=1.0, up_qps_per_replica=float("inf"),
+            down_qps_per_replica=1.0, idle_ticks_to_retire=2,
+            target_utilization=0.6),
+        runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+        search_config=SearchConfig(sim_exec_s=0.002))
+    app.warm()
+    t0 = app.runtime.clock + 1.0
+    for i, q in enumerate(queries):
+        app.query(q, k=K, t_arrival=t0 + 0.2 * i, fetch_docs=False)
+    # partition 0 may never drop below 2; partition 1 may never exceed 1,
+    # so its over-provisioned second pool drains to its own bound
+    assert app.controller.replica_counts() == [2, 1]
+    from repro.core.autoscale import FleetController
+    with pytest.raises(ValueError, match="per-partition replica bounds"):
+        FleetController(app.runtime, app.scatter,
+                        [lambda: _sleepy_handler] * 2,
+                        AutoscalePolicy(min_replicas=[1, 1, 1]))
 
 
 def test_results_bit_identical_through_scale_events(corpus, queries, oracle=None):

@@ -1,0 +1,283 @@
+"""The gateway's admission queue + adaptive micro-batch window.
+
+The contract under test, layer by layer:
+
+* policy — the window is sized from the trailing arrival rate
+  (``target_batch / rate`` capped at ``max_window_s``), clamped by the
+  route's p99 budget, and ZERO under sparse traffic, so a lone query never
+  waits on a window no second query will join.
+* gateway — ``submit`` coalesces concurrent arrivals into ONE batch
+  dispatch per window; a submission past the open window's close flushes
+  it first; ``max_batch`` hard-flushes; malformed bodies 400 at admission
+  without dispatching anything.
+* app — the windowed path's merged top-k is BIT-IDENTICAL to serial
+  dispatch (and the oracle); duplicate query strings in one window each
+  get a full result; a commit landing inside an open window splits the
+  flush into per-generation scatters, every response matching its OWN
+  generation's from-scratch oracle rebuild.
+"""
+
+import pytest
+
+from repro.core.gateway import (GATEWAY_OVERHEAD_S, Gateway, PendingResponse,
+                                WindowPolicy)
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.oracle import OracleSearcher
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_partitioned_search_app
+
+K = 10
+N_PARTS = 3
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(260, vocab=400, seed=51)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return synth_queries(corpus, 24, seed=53)
+
+
+def _build(corpus, **kw):
+    kw.setdefault("search_config", SearchConfig(sim_exec_s=0.002,
+                                                sim_write_s=0.02))
+    kw.setdefault("n_parts", N_PARTS)
+    return build_partitioned_search_app(corpus, **kw)
+
+
+# -- policy layer -------------------------------------------------------------
+
+
+def test_window_sizing_rate_budget_and_sparse_collapse():
+    pol = WindowPolicy(max_window_s=0.05, target_batch=8, sparse_qps=2.0,
+                       p99_budget_s=0.300)
+    nan = float("nan")
+    # sparse traffic: zero window, a lone query never waits
+    assert pol.window_s(0.0, nan) == 0.0
+    assert pol.window_s(1.9, nan) == 0.0
+    # sized from the rate: long enough to expect ~target_batch arrivals
+    assert pol.window_s(400.0, nan) == pytest.approx(8 / 400.0)
+    # capped at max_window_s
+    assert pol.window_s(10.0, nan) == pytest.approx(0.05)
+    # clamped by the p99 budget: the added wait may not breach it
+    assert pol.window_s(400.0, 0.290) == pytest.approx(0.010)
+    assert pol.window_s(400.0, 0.350) == 0.0
+    # no budget configured -> no clamp
+    assert WindowPolicy(p99_budget_s=None).window_s(400.0, 9.9) > 0
+
+
+# -- gateway layer ------------------------------------------------------------
+
+
+def test_submit_without_batch_route_dispatches_immediately():
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("f", lambda cache, p: (p, 0.001))
+    gw = Gateway(rt)
+    gw.route("GET", "/x", "f")
+    h = gw.submit("GET", "/x", 7, t_arrival=1.0)
+    assert isinstance(h, PendingResponse) and h.done()
+    assert h.response.ok and h.response.body == 7
+
+
+def test_window_coalesces_one_invocation_per_partition(corpus, queries):
+    app = _build(corpus)
+    app.warm()
+    for q in queries[:4]:                      # rate history
+        app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    t0 = app.runtime.clock + 1.0
+    n0 = len(app.runtime.records)
+    # 6 arrivals 5 ms apart: rate >= sparse_qps from the 2nd on; the 1st
+    # dispatches alone (no rate basis yet), the rest share ONE window
+    hs = [app.submit(q, k=K, t_arrival=t0 + 0.005 * i, fetch_docs=False)
+          for i, q in enumerate(queries[:6])]
+    assert not hs[-1].done()                   # window still open
+    app.flush()
+    assert all(h.done() and h.response.ok for h in hs)
+    ws = app.gateway.window_stats("GET", "/search")
+    assert ws["batches"] == 2 and ws["mean_batch"] == 3.0
+    # the 5-query window cost ONE invocation per partition, not five
+    recs = [r for r in app.runtime.records[n0:] if not r.keepalive]
+    assert len(recs) == 2 * N_PARTS
+    # reading an unresolved handle is a driver bug, loudly
+    h_open = app.submit(queries[0], k=K,
+                        t_arrival=app.runtime.clock + 0.004)
+    h_open2 = app.submit(queries[1], k=K,
+                         t_arrival=app.runtime.clock + 0.008)
+    if not h_open.done():
+        with pytest.raises(RuntimeError, match="window still open"):
+            _ = h_open.response
+    app.flush()
+    assert h_open.done() and h_open2.done()
+
+
+def test_windowed_results_bit_identical_to_serial_and_oracle(corpus, queries):
+    serial = _build(corpus)
+    windowed = _build(corpus)
+    for app in (serial, windowed):
+        app.warm()
+        for q in queries[:4]:
+            app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+    res_serial = [serial.query(q, k=K,
+                               t_arrival=serial.runtime.clock + 0.05,
+                               fetch_docs=False)
+                  for q in queries]
+    t0 = windowed.runtime.clock + 1.0
+    hs = [windowed.submit(q, k=K, t_arrival=t0 + 0.004 * i,
+                          fetch_docs=False)
+          for i, q in enumerate(queries)]
+    windowed.flush()
+    assert windowed.gateway.window_stats("GET", "/search")["mean_batch"] > 1
+    oracle = OracleSearcher(corpus)
+    for q, h, r in zip(queries, hs, res_serial):
+        assert h.response.ok
+        assert h.response.body["ext_ids"] == r.body["ext_ids"]
+        assert [round(s, 9) for s in h.response.body["scores"]] == \
+            [round(s, 9) for s in r.body["scores"]]
+        want = [oracle.doc_ids[i] for i, _ in oracle.search(q, k=K)]
+        assert h.response.body["ext_ids"] == want
+    # the window's latency accounting is explicit: earlier arrivals in a
+    # window waited for its close, and that wait is IN their latency
+    ws = windowed.gateway.window_stats("GET", "/search")
+    assert ws["max_wait_s"] > 0
+
+
+def test_sparse_submit_equals_query_latency_exactly(corpus, queries):
+    """The no-added-latency contract: under sparse traffic the window is
+    zero and a submitted query's latency equals the serial path's to the
+    last bit."""
+    a, b = _build(corpus), _build(corpus)
+    for app in (a, b):
+        app.warm()
+    for q in queries[:6]:
+        t_a = a.runtime.clock + 30.0           # < sparse_qps either way
+        r = a.query(q, k=K, t_arrival=t_a, fetch_docs=False)
+        h = b.submit(q, k=K, t_arrival=b.runtime.clock + 30.0,
+                     fetch_docs=False)
+        assert h.done()                        # resolved AT its own arrival
+        assert h.response.latency_s == pytest.approx(r.latency_s, abs=0.0)
+        assert h.response.body["ext_ids"] == r.body["ext_ids"]
+    assert b.gateway.window_stats("GET", "/search")["max_wait_s"] == 0.0
+
+
+def test_max_batch_hard_flush(corpus, queries):
+    app = _build(corpus, window=WindowPolicy(max_window_s=10.0,
+                                             target_batch=64, sparse_qps=0.0,
+                                             p99_budget_s=None, max_batch=4))
+    app.warm()
+    t0 = app.runtime.clock + 1.0
+    hs = [app.submit(q, k=K, t_arrival=t0 + 1e-4 * i, fetch_docs=False)
+          for i, q in enumerate(queries[:4])]
+    # the 4th admission hits max_batch and flushes without waiting out
+    # the (10 s!) window
+    assert all(h.done() for h in hs)
+    assert app.gateway.window_stats("GET", "/search")["batches"] == 1
+
+
+# -- malformed bodies: 400 at the edge, nothing dispatched --------------------
+
+
+def test_empty_batch_400s_cleanly_on_both_paths(corpus):
+    app = _build(corpus)
+    app.warm()
+    n_inv = app.runtime.ledger.invocations
+    # serial path
+    r = app.query([], k=K, t_arrival=app.runtime.clock + 1.0)
+    assert r.status == 400 and "queries" in r.body["error"]
+    # windowed path: rejected at ADMISSION, never occupies the window
+    h = app.submit([], k=K, t_arrival=app.runtime.clock + 2.0)
+    assert h.done() and h.response.status == 400
+    ws = app.gateway.window_stats("GET", "/search")
+    assert ws["batches"] == 0
+    # neither path dispatched (or billed) anything
+    assert app.runtime.ledger.invocations == n_inv
+    # a well-formed request on the same route still works
+    r = app.query("hello", k=K, t_arrival=app.runtime.clock + 3.0,
+                  fetch_docs=False)
+    assert r.ok
+
+
+def test_duplicate_queries_in_batch_do_not_collapse(corpus, queries):
+    app = _build(corpus)
+    app.warm()
+    q = queries[0]
+    # one body carrying duplicates: every slot gets its own full result
+    r = app.query([q, q, queries[1]], k=K,
+                  t_arrival=app.runtime.clock + 1.0, fetch_docs=False)
+    assert r.ok and len(r.body["results"]) == 3
+    assert r.body["results"][0]["ext_ids"] == r.body["results"][1]["ext_ids"]
+    assert r.body["results"][0]["scores"] == r.body["results"][1]["scores"]
+    assert r.body["results"][0]["ext_ids"]            # non-empty
+    # duplicates across one admission window: both handles resolve fully
+    t0 = app.runtime.clock + 1.0
+    app.submit(queries[2], k=K, t_arrival=t0, fetch_docs=False)
+    h1 = app.submit(q, k=K, t_arrival=t0 + 0.003, fetch_docs=False)
+    h2 = app.submit(q, k=K, t_arrival=t0 + 0.006, fetch_docs=False)
+    app.flush()
+    assert h1.response.ok and h2.response.ok
+    assert h1.response.body["ext_ids"] == h2.response.body["ext_ids"] \
+        == r.body["results"][0]["ext_ids"]
+
+
+# -- generation pinning at admission ------------------------------------------
+
+
+def test_commit_inside_open_window_splits_by_generation(corpus, queries):
+    """A commit landing while the window is open must not move admitted
+    queries to the new index: the flush dispatches one single-generation
+    scatter per pinned generation, and each response matches ITS OWN
+    generation's oracle rebuild."""
+    app = _build(corpus, n_parts=2)
+    extra = [(f"new-{i}", t) for i, (_, t) in enumerate(corpus[:30])]
+    app.warm()
+    for q in queries[:4]:
+        app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    old_corpus = list(app.indexer.live_corpus())
+    t0 = app.runtime.clock + 1.0
+    pre = [app.submit(q, k=K, t_arrival=t0 + 0.004 * i, fetch_docs=False)
+           for i, q in enumerate(queries[:4])]
+    r = app.commit(t_arrival=t0 + 0.016)       # nothing staged: no-op commit
+    assert r.ok and r.body["committed"] is False
+    app.add_documents(extra, t_arrival=t0 + 0.017)
+    r = app.commit(t_arrival=t0 + 0.018)
+    assert r.ok and r.body["gen"] == 2
+    post = [app.submit(q, k=K, t_arrival=t0 + 0.02 + 0.004 * i,
+                       fetch_docs=False)
+            for i, q in enumerate(queries[4:8])]
+    app.flush()
+    assert {h.response.body["generation"] for h in pre} == {1}
+    assert {h.response.body["generation"] for h in post} == {2}
+    o_old = OracleSearcher(old_corpus)
+    o_new = OracleSearcher(app.indexer.live_corpus())
+    for h, q in zip(pre, queries[:4]):
+        assert h.response.body["ext_ids"] == \
+            [o_old.doc_ids[i] for i, _ in o_old.search(q, k=K)]
+    for h, q in zip(post, queries[4:8]):
+        assert h.response.body["ext_ids"] == \
+            [o_new.doc_ids[i] for i, _ in o_new.search(q, k=K)]
+
+
+# -- misc gateway envelope ----------------------------------------------------
+
+
+def test_unknown_route_404_and_overhead_charged(corpus):
+    app = _build(corpus)
+    assert app.gateway.request("GET", "/nope").status == 404
+    r = app.query("anything", k=K, t_arrival=app.runtime.clock + 1.0,
+                  fetch_docs=False)
+    assert r.ok and r.latency_s > GATEWAY_OVERHEAD_S
+
+
+def test_flush_is_idempotent(corpus, queries):
+    app = _build(corpus)
+    app.warm()
+    assert app.flush() == 0                    # nothing pending: no-op
+    h = app.submit(queries[0], k=K, t_arrival=app.runtime.clock + 5.0,
+                   fetch_docs=False)
+    assert h.done()                            # sparse -> immediate
+    assert app.flush() == 0
