@@ -10,6 +10,10 @@ so every hypothesis → change → measure cycle is one command:
 Variants are declared in VARIANTS below (config-field overrides per cell);
 results land in benchmarks/results/perf/<cell>__<variant>.json and the
 table prints with deltas vs the recorded baseline.
+
+``--kernel-bench`` skips the mesh entirely and microbenches the scoring
+accumulators (dense vs sorted vs pruned block-max) on one device over an
+n_docs × terms × blocks sweep of fabricated impact-ordered postings.
 """
 
 import os
@@ -85,10 +89,14 @@ VARIANTS: dict[str, dict[str, dict]] = {
         "compact+fused": {"compact_ids": True, "fused_gather": True},
         "compact+fused+m16": {"compact_ids": True, "fused_gather": True,
                               "max_blocks": 16},
+        "pruned": {"accumulator": "pruned"},
+        "pruned+compact+fused": {"accumulator": "pruned",
+                                 "compact_ids": True, "fused_gather": True},
     },
     "anlessini/serve_q1": {
         "baseline": {},
         "compact+fused": {"compact_ids": True, "fused_gather": True},
+        "pruned": {"accumulator": "pruned"},
     },
 }
 
@@ -145,13 +153,87 @@ def build_variant_cell(arch: str, shape: str, over: dict):
     raise ValueError(fam)
 
 
+def kernel_bench() -> int:
+    """Single-device microbench of the three scoring accumulators over
+    fabricated impact-ordered postings (``synth_pruned_blocks`` — no index
+    build, no mesh):
+
+      dense   impacts → scatter-add into a (n_docs+1,) accumulator → top_k
+      sorted  impacts → sort-and-segment-sum → top-k (``accumulate_sorted``)
+      pruned  fused ``bm25_pruned_topk`` Pallas pass (block-max WAND)
+
+    Wall times here are CPU interpret-mode numbers — the pruned kernel does
+    dense-superset work on this backend, so read the ``touched`` column (the
+    kernel's own kept-block count) for the HBM story; ``benchmarks.run
+    --only b9b`` turns the same sweep into regression-gated roofline rows.
+    """
+    import functools
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data.corpus import synth_pruned_blocks
+    from repro.kernels.ops import bm25_pruned_topk
+    from repro.search.bm25 import accumulate_dense, accumulate_sorted
+
+    k = 10
+    params = (jnp.float32(0.9), jnp.float32(0.4), jnp.float32(12.0))
+
+    @functools.partial(jax.jit, static_argnames=("n_docs", "strategy"))
+    def score(tf, dl, docs, idf_q, *, n_docs, strategy):
+        k1, b, avgdl = params
+        tff = tf.astype(jnp.float32)
+        denom = tff + k1 * (1.0 - b + b * dl / avgdl)
+        imp = jnp.where((docs < n_docs) & (tf > 0),
+                        idf_q[:, None, None] * tff / denom, 0.0)
+        if strategy == "sorted":
+            return accumulate_sorted(docs, imp, n_docs, k)
+        return jax.lax.top_k(accumulate_dense(docs, imp, n_docs), k)
+
+    def timed(fn):
+        jax.block_until_ready(fn())              # warm: compile + caches
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) * 1e3
+
+    print(f"{'cell':24s} {'dense ms':>9s} {'sorted ms':>10s} "
+          f"{'pruned ms':>10s} {'touched':>12s}")
+    for n_docs in (100_000, 1_000_000):
+        for T, M in ((1, 32), (2, 32), (2, 8)):
+            raw = synth_pruned_blocks(7 + T + M, n_terms=T, max_blocks=M,
+                                      n_docs=n_docs, zipf_a=1.3)
+            tf, dl, docs, idf_q, ub, valid = [jnp.asarray(x) for x in raw]
+            (_, t_d) = timed(lambda: score(tf, dl, docs, idf_q,
+                                           n_docs=n_docs, strategy="dense"))
+            (_, t_s) = timed(lambda: score(tf, dl, docs, idf_q,
+                                           n_docs=n_docs, strategy="sorted"))
+            out, t_p = timed(lambda: bm25_pruned_topk(
+                tf, dl, docs, idf_q, ub, valid, *params,
+                k=k, n_docs=n_docs))
+            touched = int(out[2])
+            n_valid = int(np.asarray(raw[5]).sum())
+            cell = f"n{n_docs // 1000}k_T{T}_M{M}"
+            print(f"{cell:24s} {t_d:9.2f} {t_s:10.2f} {t_p:10.2f} "
+                  f"{touched:5d}/{n_valid} blk")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True)
+    ap.add_argument("--cell", default=None)
     ap.add_argument("--variant", default=None,
                     help="one variant (default: all declared for the cell)")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kernel-bench", action="store_true",
+                    help="microbench dense/sorted/pruned scoring on one "
+                         "device (no mesh, no --cell)")
     args = ap.parse_args()
+
+    if args.kernel_bench:
+        return kernel_bench()
+    if not args.cell:
+        ap.error("--cell is required (unless --kernel-bench)")
 
     from repro.launch.dryrun import run_cell
     from repro.launch.mesh import make_production_mesh

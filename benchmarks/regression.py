@@ -6,13 +6,17 @@
 Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
-with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b10,b11,b12 --json
-BENCH_baseline.json`` whenever a deliberate perf change moves a metric).
+with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12
+--json BENCH_baseline.json`` whenever a deliberate perf change moves a
+metric).
 
 Gated metrics (lower is better for all of them):
 
 * B6/B7 gateway latencies     — fail on a regression > 25%
 * B8 refresh/rollover latency — fail on a regression > 25%
+* B9b pruned-scoring model    — fail on blocks-touched fraction or
+  modeled per-query ms regression > 25% (model rows are µs-scale, so
+  their absolute floor is 1e-4 ms, not the gateway 0.2 ms)
 * B11 NRT gateway latencies   — fail on a regression > 25%
 * B12 skewed-fleet latencies  — fail on a regression > 25%
 * B7/B11/B12 $/1k-queries     — fail on a regression > 15%
@@ -44,6 +48,13 @@ GATES: list[tuple[str, float, float]] = [
     ("unhedged_R1_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
     ("hedged_R2_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
     ("refresh_rollover_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    # B9b rows are modeled HBM-roofline values (µs-scale): floors are a
+    # fraction tick / 1e-4 ms, not the gateway-latency 0.2 ms floor
+    ("b9b_pruned_blocks_touched_frac_100k", LATENCY_LIMIT, 0.02),
+    ("b9b_pruned_blocks_touched_frac_1m", LATENCY_LIMIT, 0.02),
+    ("b9b_pruned_model_ms_100k", LATENCY_LIMIT, 1e-4),
+    ("b9b_pruned_model_ms_1m", LATENCY_LIMIT, 1e-4),
+    ("b9b_dense_model_ms_1m", LATENCY_LIMIT, 1e-4),
     ("b11_steady_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b11_rollover_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b11_commit_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),

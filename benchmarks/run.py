@@ -17,6 +17,10 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
   B8  batch reindex + zero-downtime switch-over (§3) — deterministic
       virtual-clock rollover latencies (regression-gated)
   B9  roofline summary over the dry-run artifacts (if present)
+  B9b fused block-max pruned scoring vs dense on the modeled HBM
+      roofline — blocks-touched fraction, bytes/query and modeled
+      per-query latency at 100k/1M-doc partitions, bitwise parity
+      with the unpruned oracle (regression-gated under --det)
   B10 cost-ledger fleet autoscaler on a bursty diurnal arrival
       pattern — $/1k and p99 at fixed-R=1, fixed-R=2, autoscaled
   B11 near-real-time indexing: sustained query traffic at fixed QPS
@@ -868,6 +872,87 @@ def bench_roofline_summary() -> None:
                  round(float(np.max(fracs)), 3), "frac")
 
 
+def bench_pruned_roofline() -> None:
+    """B9b: fused block-max pruned scoring vs dense, on the modeled roofline.
+
+    Fabricates impact-ordered kernel inputs directly (``synth_pruned_blocks``
+    — no IndexWriter, so 1M-doc partitions cost milliseconds to set up), runs
+    the fused ``bm25_pruned_topk`` Pallas pass, and reports:
+
+    * blocks-touched fraction — the kernel's own ``touched`` count over the
+      valid blocks a dense pass would score (single-term rows are the gated
+      headline: tight bounds, ~10× fewer blocks; the multi-term row shows
+      the loose-bound regime honestly);
+    * modeled HBM bytes/query and per-query ms for pruned vs dense, on the
+      same byte model:  blocks×B×17 B/lane (docs 4 + tf 1 + dl 4 + scatter
+      read/write 8) + n_docs×4 for the top-k scan of the accumulator, at
+      roofline HBM_BW.  Deterministic — these are the regression-gated rows
+      (the pruned kernel's modeled latency may never exceed dense's);
+    * measured kernel wall time (NOT gated — CPU interpret mode does
+      dense-superset work, the modeled rows carry the claim);
+    * bitwise parity: pruned (vals, ids) vs the jitted unpruned oracle
+      ``bm25_pruned_topk_ref`` — vals compared as uint32 bit patterns.
+
+    Reproduce: PYTHONPATH=src python -m benchmarks.run --det --only b9b
+    """
+    print("\nB9b: block-max pruned scoring vs dense (modeled HBM roofline)")
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.roofline import HBM_BW
+    from repro.data.corpus import synth_pruned_blocks
+    from repro.kernels.ops import bm25_pruned_topk
+    from repro.kernels.ref import bm25_pruned_topk_ref
+
+    B, M, k, n_q = 128, 32, 10, 4
+    lane_bytes = 17            # docs 4B + tf 1B + dl 4B + scatter r/w 8B
+    params = (jnp.float32(0.9), jnp.float32(0.4), jnp.float32(12.0))
+    parity = True
+    for label, n_docs in (("100k", 100_000), ("1m", 1_000_000)):
+        scan_bytes = 4 * n_docs                  # top-k pass over the acc
+        for T, tag in ((1, "pruned"), (2, "multiterm")):
+            touched_b, dense_b, fracs, wall = [], [], [], []
+            for qi in range(n_q):
+                raw = synth_pruned_blocks(SEED * 7919 + 101 * T + qi,
+                                          n_terms=T, max_blocks=M,
+                                          n_docs=n_docs, block=B, zipf_a=1.3)
+                a = [jnp.asarray(x) for x in raw]
+                vals, ids, touched = bm25_pruned_topk(
+                    *a, *params, k=k, n_docs=n_docs)
+                t0 = time.perf_counter()         # shapes warm: re-run timed
+                vals2, _, _ = bm25_pruned_topk(*a, *params, k=k,
+                                               n_docs=n_docs)
+                jax.block_until_ready(vals2)
+                wall.append(time.perf_counter() - t0)
+                rv, ri = bm25_pruned_topk_ref(*a, *params, k=k,
+                                              n_docs=n_docs)
+                parity = parity and bool(
+                    (np.asarray(vals).view(np.uint32)
+                     == np.asarray(rv).view(np.uint32)).all()
+                    and (np.asarray(ids) == np.asarray(ri)).all())
+                n_valid = int(raw[5].sum())
+                touched_b.append(int(touched) * B * lane_bytes + scan_bytes)
+                dense_b.append(n_valid * B * lane_bytes + scan_bytes)
+                fracs.append(int(touched) / n_valid)
+            p_ms = float(np.mean(touched_b)) / HBM_BW * 1e3
+            d_ms = float(np.mean(dense_b)) / HBM_BW * 1e3
+            emit(f"b9b_{tag}_blocks_touched_frac_{label}",
+                 round(float(np.mean(fracs)), 4), "frac",
+                 f"T={T}, {n_q} queries, M={M} blocks/term")
+            if tag == "multiterm":      # loose Σ-of-ceilings bounds: the
+                continue                # frac row alone tells that story
+            emit(f"b9b_pruned_model_ms_{label}", round(p_ms, 6), "ms",
+                 f"{float(np.mean(touched_b)) / 1e6:.3f} MB/query modeled")
+            emit(f"b9b_dense_model_ms_{label}", round(d_ms, 6), "ms",
+                 f"{float(np.mean(dense_b)) / 1e6:.3f} MB/query modeled")
+            emit(f"b9b_pruned_vs_dense_model_{label}",
+                 round(p_ms / d_ms, 4), "x", "must be <= 1")
+            emit(f"b9b_pruned_kernel_wall_ms_{label}",
+                 round(float(np.median(wall)) * 1e3, 2), "ms",
+                 "measured, not gated (CPU interpret mode)")
+    emit("b9b_pruned_bitwise_equal", int(parity), "bool",
+         "pruned == unpruned oracle, uint32 val bits + ids")
+
+
 def main() -> None:
     global DET, SEED
     ap = argparse.ArgumentParser()
@@ -900,6 +985,7 @@ def main() -> None:
         "b7": lambda: bench_hedged_tail(min(n_docs, 8_000), min(n_q, 100)),
         "b8": bench_refresh,
         "b9": bench_roofline_summary,
+        "b9b": bench_pruned_roofline,
         "b10": lambda: bench_autoscale(min(n_docs, 8_000), min(n_q, 108)),
         "b11": lambda: bench_nrt(min(n_docs, 6_000), min(n_q, 120)),
         "b12": lambda: bench_skew(min(n_docs, 2_000), min(n_q, 100)),

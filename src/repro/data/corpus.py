@@ -38,6 +38,55 @@ def synth_corpus(n_docs: int, *, vocab: int = 5000, mean_len: int = 60,
     return docs
 
 
+def synth_pruned_blocks(seed: int, *, n_terms: int, max_blocks: int,
+                        n_docs: int, block: int = 128, zipf_a: float = 2.0,
+                        k1: float = 0.9, b: float = 0.4, avgdl: float = 12.0):
+    """Fabricate one query's gathered, IMPACT-ORDERED postings blocks —
+    kernel-shaped inputs for ``bm25_pruned_topk`` without paying
+    ``IndexWriter`` costs (1M-doc partitions pack in ms, not minutes).
+
+    Reproduces exactly what ``IndexWriter.pack`` + ``gather_query_blocks``
+    would hand the kernel: per term, Zipf-skewed tf postings sorted by f64
+    BM25 impact descending, cut into B-lane blocks with f64-computed
+    ``block_max`` (cast f32), tf pre-zeroed on invalid blocks, pad lanes
+    carrying doc id ``n_docs``. Impact ordering is load-bearing — the
+    pruning bound assumes block 0 holds each term's max impact.
+
+    Returns the ``bm25_pruned_topk`` positional inputs
+    (tf, dl, docs, idf_q, ub, valid) as numpy arrays.
+    """
+    rng = np.random.default_rng(seed)
+    T, M, B = n_terms, max_blocks, block
+    doc_len = rng.integers(5, 4 * int(avgdl), n_docs).astype(np.float32)
+    docs = np.full((T, M, B), n_docs, np.int32)
+    tf = np.zeros((T, M, B), np.uint8)
+    bmax = np.zeros((T, M), np.float64)
+    valid = np.zeros((T, M), bool)
+    idf = rng.uniform(0.5, 3.0, T).astype(np.float32)
+    qtf = rng.integers(1, 3, T).astype(np.float32)
+    for t in range(T):
+        n_post = int(rng.integers(B // 2, min(M * B, n_docs) + 1))
+        d = rng.choice(n_docs, n_post, replace=False).astype(np.int32)
+        f = np.minimum(rng.zipf(zipf_a, n_post), 255).astype(np.float64)
+        dl = doc_len[d].astype(np.float64)
+        imp = idf[t] * f / (f + k1 * (1.0 - b + b * dl / avgdl))
+        order = np.argsort(-imp, kind="stable")
+        d, f, imp = d[order], f[order], imp[order]
+        for m in range(min(M, -(-n_post // B))):
+            sl = slice(m * B, min((m + 1) * B, n_post))
+            nn = sl.stop - sl.start
+            docs[t, m, :nn] = d[sl]
+            tf[t, m, :nn] = f[sl]
+            bmax[t, m] = imp[sl].max(initial=0.0)
+            valid[t, m] = True
+    dl_g = np.concatenate([doc_len, np.ones(1, np.float32)])[
+        np.minimum(docs, n_docs)]
+    idf_q = (idf * qtf).astype(np.float32)
+    ub = np.where(valid, qtf[:, None] * bmax, 0.0).astype(np.float32)
+    tf = np.where(valid[..., None], tf, 0).astype(np.uint8)
+    return tf, dl_g, docs, idf_q, ub, valid
+
+
 def synth_queries(docs: list[tuple[str, str]], n_queries: int, *,
                   terms_per_query: int = 3, seed: int = 1) -> list[str]:
     rng = np.random.default_rng(seed)

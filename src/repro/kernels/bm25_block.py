@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
 
 DEFAULT_BLOCK_ROWS = 8   # rows of (T*M) per grid step; B=128 lanes fixed
 
@@ -37,8 +38,9 @@ def _bm25_kernel(tf_ref, dl_ref, idf_ref, params_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def bm25_block_scores(tf, dl, idf, k1, b, avgdl, *,
                       block_rows: int = DEFAULT_BLOCK_ROWS,
-                      interpret: bool = True):
+                      interpret: "bool | None" = None):
     """tf (T,M,B) uint8, dl (T,M,B) f32, idf (T,) f32 → (T,M,B) f32."""
+    interpret = resolve_interpret(interpret)
     T, M, B = tf.shape
     rows = T * M
     tf2 = tf.reshape(rows, B)

@@ -1,0 +1,181 @@
+"""Pallas kernel: fused block-max pruned BM25 scoring + on-chip top-k.
+
+One pass over a query's gathered (T, M) postings blocks that fuses what the
+dense path does in four HBM round-trips (impacts → (T,M,B) f32 intermediate →
+(n_docs,) accumulator → top-k scan):
+
+1. **BM25 impacts** — the `bm25_block.py` VPU math, computed per block row
+   in VMEM, never materialized in HBM.
+2. **Block-max pruning** — a block (t, m) is skipped when its score ceiling
+   cannot reach the running k-th-best threshold θ:
+
+       bound(t, m) = qtf_t·block_max(t, m) + Σ_{t'≠t} qtf_{t'}·block_max(t', 0)
+
+   Any doc inside block (t, m) draws at most qtf_t·block_max(t, m) from term
+   t and at most the FIRST (impact-ordered ⇒ largest) block's ceiling from
+   every other term, so bound(t, m) upper-bounds the doc's total score; when
+   bound·SAFETY < θ every doc in the block finishes strictly below the k-th
+   best and the whole block — its HBM reads included — is dead weight.
+3. **Streaming top-k** — `topk.py`'s k rounds of (max, argmax, mask) over
+   the VMEM accumulator; ties resolve to the lowest doc id, exactly like
+   ``lax.top_k`` over the dense accumulator.
+
+θ is bootstrapped from phase 1: the m = 0 block of every query term (each
+term's highest-impact postings) is always scored, and θ is the k-th best of
+the per-doc totals over just those T·B postings — a LOWER bound on the k-th
+best final score, since totals only grow as more blocks accumulate, and
+missing candidates count as score-0 docs (which exist whenever n_docs ≥ k).
+
+**Losslessness** (the parity invariant tests pin): a doc tied with or above
+the final k-th-best score has every one of its blocks kept — each such
+block's bound is ≥ the doc's own total ≥ θ — so top-k docs accumulate
+exactly the same additions, in the same order, as the dense path, and the
+skipped docs' partial sums stay strictly below θ (float-monotone: dropping
+non-negative addends never raises a float sum). PRUNE_SAFETY widens the
+keep test by 1e-4 relative so float rounding in the bound/θ arithmetic
+(~1e-6: the packer computes block_max in f64 and stores f32; impacts are
+f32) can never flip a keep into a skip; blocks whose bound EQUALS θ are
+kept outright (``>=``), which is what keeps boundary ties bit-identical.
+
+Interpret-mode notes (this container is CPU-only): the accumulator is one
+predicated (n_docs+1,) scatter-add — deliberately the SAME op the dense
+path issues, so duplicate-index rounding order matches bit-for-bit — and
+θ's phase-1 segment-sum uses sort+cumsum (Mosaic would want the scalar
+unit / a small scratch pass instead); semantics are bit-accurate either
+way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.interpret import resolve_interpret
+
+# Relative widening of the keep test (bound * PRUNE_SAFETY >= θ): absorbs
+# float rounding between the builder's f64 block_max and the query-time f32
+# impact sums. ~1e-6 of real noise vs 1e-4 of margin — pruning loses only
+# blocks whose ceiling is >1e-4 relative below θ, which provably cannot
+# contain a top-k doc.
+PRUNE_SAFETY = 1.0 + 1e-4
+
+
+def theta_lower_bound(d: jax.Array, v: jax.Array, k: int, n_docs: int):
+    """k-th best per-doc total over postings (d ids, v impacts) — a lower
+    bound on the k-th best FINAL score when v covers a subset of each doc's
+    postings and every doc not present counts as 0 (true for n_docs ≥ k).
+
+    Same cummax segment-sum trick as ``bm25.accumulate_sorted``; pad/dump
+    postings (d == n_docs) and non-group-end positions contribute 0 — a
+    valid "some doc scores ≥ 0" claim, never an overcount. Returns 0.0
+    (prune nothing) when fewer than k postings exist.
+    """
+    d = d.reshape(-1)
+    v = v.reshape(-1)
+    if d.shape[0] < k:
+        return jnp.float32(0.0)
+    order = jnp.argsort(d)
+    d, v = d[order], v[order]
+    c = jnp.cumsum(v)
+    p = c - v
+    is_start = jnp.concatenate([jnp.ones(1, bool), d[1:] != d[:-1]])
+    is_end = jnp.concatenate([d[1:] != d[:-1], jnp.ones(1, bool)])
+    start_p = jax.lax.cummax(jnp.where(is_start, p, -jnp.inf))
+    totals = jnp.where(is_end & (d < n_docs), c - start_p, 0.0)
+    return jax.lax.top_k(totals, k)[0][-1]
+
+
+def block_bounds(ub: jax.Array) -> jax.Array:
+    """(T, M) per-block query ceilings → (T, M) whole-score bounds.
+
+    ub[t, m] = qtf_t · block_max(t, m), zeroed where invalid. Impact
+    ordering makes ub[t, 0] the term-wide ceiling, so a doc in block (t, m)
+    totals at most ub[t, m] + Σ_{t'≠t} ub[t', 0].
+    """
+    first = ub[:, 0]
+    return ub + (jnp.sum(first) - first)[:, None]
+
+
+def _pruned_kernel(tf_ref, dl_ref, docs_ref, iq_ref, ub_ref, valid_ref,
+                   params_ref, vals_ref, ids_ref, touched_ref, *,
+                   T: int, M: int, B: int, k: int, n_docs: int):
+    k1, b, avgdl = params_ref[0], params_ref[1], params_ref[2]
+    tf = tf_ref[...].astype(jnp.float32)               # (R, B), R = T·M
+    dl = dl_ref[...]                                   # (R, B)
+    docs = docs_ref[...]                               # (R, B) i32
+    iq = iq_ref[...]                                   # (R, 1) idf·qtf
+    valid = valid_ref[...][:, 0] > 0                   # (R,)
+
+    # BM25 impacts in VMEM (tf is pre-zeroed on invalid rows ⇒ imp = 0)
+    imp = iq * tf / (tf + k1 * (1.0 - b + b * dl / avgdl))
+    imp = jnp.where(docs < n_docs, imp, 0.0)           # pad/dump lanes
+
+    # pruning schedule: phase-1 θ from each term's first block, then the
+    # bound test decides every remaining block
+    ub = ub_ref[...][:, 0].reshape(T, M)
+    bound = block_bounds(ub)
+    first_rows = jax.lax.broadcasted_iota(jnp.int32, (T, M), 1) == 0
+    d0 = docs.reshape(T, M, B)[:, 0]
+    v0 = imp.reshape(T, M, B)[:, 0]
+    theta = theta_lower_bound(d0, v0, k, n_docs)
+    keep = valid.reshape(T, M) & (
+        first_rows | (bound * PRUNE_SAFETY >= theta))
+    keep_rows = keep.reshape(-1)
+
+    # predicated accumulation: ONE flat scatter-add, the exact op the dense
+    # path issues, with skipped blocks contributing 0.0 (x + 0.0 == x
+    # bitwise for the non-negative sums here) — kept docs' totals are
+    # therefore bit-identical to the dense accumulator, whatever duplicate-
+    # index order the backend's scatter uses, because it is the SAME order.
+    imp = jnp.where(keep_rows[:, None], imp, 0.0)
+    acc = jnp.zeros(n_docs + 1, jnp.float32)
+    acc = acc.at[jnp.minimum(docs, n_docs).reshape(-1)].add(imp.reshape(-1))
+
+    # streaming top-k over the accumulator (dump slot excluded); k rounds of
+    # (max, argmax, mask) — first-occurrence argmax == lax.top_k tie order
+    scores = acc[:n_docs]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n_docs,), 0)
+
+    def select(i, carry):
+        s, = carry
+        m = jnp.max(s)
+        am = jnp.argmax(s).astype(jnp.int32)
+        vals_ref[i] = m
+        ids_ref[i] = am
+        return (jnp.where(idx == am, -jnp.inf, s),)
+
+    jax.lax.fori_loop(0, k, select, (scores,))
+    touched_ref[0] = jnp.sum(keep).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_docs", "interpret"))
+def bm25_pruned_topk(tf, dl, docs, idf_q, ub, valid, k1, b, avgdl, *,
+                     k: int, n_docs: int, interpret: "bool | None" = None):
+    """Fused pruned scoring + top-k for ONE query.
+
+    tf (T,M,B) uint8 — pre-zeroed on invalid blocks; dl (T,M,B) f32;
+    docs (T,M,B) i32 (pad = n_docs); idf_q (T,) f32 = idf·qtf;
+    ub (T,M) f32 = qtf·block_max, zeroed where invalid; valid (T,M) bool.
+    Requires k ≤ n_docs (callers clamp). Returns (vals (k,), ids (k,) i32,
+    touched () i32 — blocks scored, the pruning-accounting numerator).
+    """
+    interpret = resolve_interpret(interpret)
+    T, M, B = tf.shape
+    R = T * M
+    iq_rows = jnp.repeat(idf_q.astype(jnp.float32), M)[:, None]   # (R, 1)
+    params = jnp.stack([jnp.asarray(k1, jnp.float32),
+                        jnp.asarray(b, jnp.float32),
+                        jnp.asarray(avgdl, jnp.float32)])
+    vals, ids, touched = pl.pallas_call(
+        functools.partial(_pruned_kernel, T=T, M=M, B=B, k=k, n_docs=n_docs),
+        out_shape=[jax.ShapeDtypeStruct((k,), jnp.float32),
+                   jax.ShapeDtypeStruct((k,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(tf.reshape(R, B), dl.reshape(R, B), docs.astype(jnp.int32).reshape(R, B),
+      iq_rows, ub.astype(jnp.float32).reshape(R, 1),
+      valid.reshape(R, 1).astype(jnp.int32), params)
+    return vals, ids, touched[0]

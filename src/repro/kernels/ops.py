@@ -1,38 +1,34 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-On this CPU container every kernel runs in ``interpret=True`` (the kernel
-body executes as traced jnp on CPU — bit-accurate semantics, no Mosaic).
-On a real TPU set ``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) to
-lower through Mosaic.
+Interpret-mode selection lives in :mod:`repro.kernels.interpret`: CPU (the
+only backend with no kernel lowering) interprets, TPU/GPU compile, and
+``REPRO_PALLAS_INTERPRET`` overrides both ways. These wrappers just forward
+``interpret=None`` so the kernels resolve the backend default themselves;
+pass ``interpret=`` explicitly to pin a mode.
 """
 
 from __future__ import annotations
 
-import os
-
-import jax
-
 from repro.kernels.bm25_block import bm25_block_scores as _bm25
+from repro.kernels.bm25_pruned import bm25_pruned_topk as _bm25_pruned
 from repro.kernels.dot_topk import dot_topk as _dot_topk
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.interpret import default_interpret as _interpret  # noqa: F401  (compat)
 from repro.kernels.topk import topk as _topk
 
 
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
-
-
 def bm25_block_scores(tf, dl, idf, k1, b, avgdl, **kw):
-    kw.setdefault("interpret", _interpret())
     return _bm25(tf, dl, idf, k1, b, avgdl, **kw)
 
 
+def bm25_pruned_topk(tf, dl, docs, idf_q, ub, valid, k1, b, avgdl, *,
+                     k, n_docs, **kw):
+    return _bm25_pruned(tf, dl, docs, idf_q, ub, valid, k1, b, avgdl,
+                        k=k, n_docs=n_docs, **kw)
+
+
 def topk(scores, k, **kw):
-    kw.setdefault("interpret", _interpret())
     return _topk(scores, k, **kw)
 
 

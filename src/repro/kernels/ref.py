@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -11,6 +13,35 @@ def bm25_block_scores_ref(tf, dl, idf, k1, b, avgdl):
     tff = tf.astype(jnp.float32)
     denom = tff + k1 * (1.0 - b + b * dl / avgdl)
     return idf[:, None, None] * tff / denom
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_docs"))
+def bm25_pruned_topk_ref(tf, dl, docs, idf_q, ub, valid, k1, b, avgdl, *,
+                         k, n_docs):
+    """UNPRUNED oracle for the fused pruned kernel: score every valid block
+    densely, then ``lax.top_k``. The kernel must match this bit-for-bit —
+    pruning is only allowed to skip blocks that cannot affect the top-k.
+    Inputs as in :func:`repro.kernels.bm25_pruned.bm25_pruned_topk`
+    (tf pre-zeroed on invalid blocks). ``touched`` is not modeled here.
+
+    jit'd (unlike the allclose oracles above): bit-parity is only
+    meaningful compiled-vs-compiled — XLA's elementwise rewrites round
+    the BM25 chain differently than eager op-by-op execution.
+    """
+    # f32 scalars up front: python-float k1/b would make (1 - b) an exact
+    # f64 before rounding, a different value than the kernel's f32 params
+    k1 = jnp.asarray(k1, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    avgdl = jnp.asarray(avgdl, jnp.float32)
+    tff = tf.astype(jnp.float32)
+    denom = tff + k1 * (1.0 - b + b * dl / avgdl)
+    imp = idf_q[:, None, None] * tff / denom
+    imp = jnp.where(docs < n_docs, imp, 0.0)
+    acc = jnp.zeros(n_docs + 1, jnp.float32)
+    d = jnp.minimum(docs.reshape(-1), n_docs)
+    acc = acc.at[d].add(imp.reshape(-1))
+    v, i = jax.lax.top_k(acc[:n_docs], k)
+    return v, i.astype(jnp.int32)
 
 
 def topk_ref(scores, k):

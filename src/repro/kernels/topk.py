@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
 
 DEFAULT_CHUNK = 16384    # f32 chunk = 64KB of VMEM
 
 
-def _local_topk_kernel(scores_ref, vals_ref, ids_ref, *, k: int, chunk: int):
+def _local_topk_kernel(scores_ref, vals_ref, ids_ref, *, k: int, chunk: int,
+                       n_live: int):
     ci = pl.program_id(0)
     s = scores_ref[...]                                   # (chunk,)
     base = ci * chunk
@@ -34,7 +36,14 @@ def _local_topk_kernel(scores_ref, vals_ref, ids_ref, *, k: int, chunk: int):
         m = jnp.max(s_cur)
         am = jnp.argmax(s_cur).astype(jnp.int32)
         vals_ref[i] = m
-        ids_ref[i] = base + am
+        # Pad-lane guard: the tail chunk is padded to `chunk` with -inf, so
+        # once a round's max is -inf the chunk has no live element left (a
+        # padded lane, or a short chunk exhausted by k > live rounds) — emit
+        # the sentinel id n_live, never a padded index. A finite max always
+        # points at a live lane (< n_live) because only pads carry -inf at
+        # entry. Legit -inf inputs get the same "absent" treatment, matching
+        # the sorted accumulator's isfinite convention.
+        ids_ref[i] = jnp.where(m == -jnp.inf, n_live, base + am)
         s_cur = jnp.where(idx == am, -jnp.inf, s_cur)
         return (s_cur,)
 
@@ -42,8 +51,15 @@ def _local_topk_kernel(scores_ref, vals_ref, ids_ref, *, k: int, chunk: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
-def topk(scores, k: int, *, chunk: int = DEFAULT_CHUNK, interpret: bool = True):
-    """scores (N,) f32 → (vals (k,), ids (k,) i32), descending order."""
+def topk(scores, k: int, *, chunk: int = DEFAULT_CHUNK,
+         interpret: "bool | None" = None):
+    """scores (N,) f32 → (vals (k,), ids (k,) i32), descending order.
+
+    Slots past the live elements (k > number of finite scores) return
+    (-inf, N) — N is the caller-visible sentinel, the same dump-slot
+    convention the search accumulators use.
+    """
+    interpret = resolve_interpret(interpret)
     (N,) = scores.shape
     chunk = max(chunk, k)   # a chunk must hold at least k survivors
     pad = (-N) % chunk
@@ -52,7 +68,7 @@ def topk(scores, k: int, *, chunk: int = DEFAULT_CHUNK, interpret: bool = True):
     n_chunks = (N + pad) // chunk
 
     vals, ids = pl.pallas_call(
-        functools.partial(_local_topk_kernel, k=k, chunk=chunk),
+        functools.partial(_local_topk_kernel, k=k, chunk=chunk, n_live=N),
         grid=(n_chunks,),
         in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
         out_specs=[pl.BlockSpec((k,), lambda i: (i,)),

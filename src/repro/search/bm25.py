@@ -11,10 +11,18 @@ Fixed-shape, jit-compatible score-at-a-time evaluation:
                    cummax prefix trick — no dense accumulator; memory scales
                    with T·M·B instead of n_docs. TPU-friendly for huge
                    corpora / many concurrent queries.
+    - ``pruned`` : block-max WAND — skip whole blocks whose score ceiling
+                   (``qtf·block_max`` plus every other term's first-block
+                   ceiling) cannot reach a k-th-best lower bound θ taken
+                   from the always-scored first blocks. Fused single-pass
+                   Pallas kernel (``kernels/bm25_pruned.py``) or a pure-JAX
+                   reference with the identical keep mask.
 * top-k over accumulated scores.
 
-Both must agree with :class:`repro.search.oracle.OracleSearcher` whenever
-M·B covers every posting of every query term (tests enforce this).
+All strategies must agree with :class:`repro.search.oracle.OracleSearcher`
+whenever M·B covers every posting of every query term (tests enforce this);
+``pruned`` must be BIT-identical — it only skips blocks provably unable to
+enter the top-k, and ties break exactly like ``lax.top_k``.
 """
 
 from __future__ import annotations
@@ -36,6 +44,7 @@ class SearchState:
     term_offsets: jax.Array   # (V+1,) int32
     block_docs: jax.Array     # (NB, B) int32
     block_tf: jax.Array       # (NB, B) uint8
+    block_max: jax.Array      # (NB,) float32 — per-block max impact
     doc_len: jax.Array        # (n_docs+1,) float32
     idf: jax.Array            # (V,) float32
     avgdl: jax.Array          # () float32
@@ -45,7 +54,8 @@ class SearchState:
 
     def tree_flatten(self):
         leaves = (self.term_offsets, self.block_docs, self.block_tf,
-                  self.doc_len, self.idf, self.avgdl, self.k1, self.b)
+                  self.block_max, self.doc_len, self.idf, self.avgdl,
+                  self.k1, self.b)
         return leaves, self.n_docs
 
     @classmethod
@@ -59,6 +69,7 @@ class SearchState:
             term_offsets=jnp.asarray(idx.term_offsets),
             block_docs=jnp.asarray(idx.block_docs),
             block_tf=jnp.asarray(idx.block_tf),
+            block_max=jnp.asarray(idx.block_max, dtype=jnp.float32),
             doc_len=jnp.asarray(idx.doc_len),
             idf=jnp.asarray(idx.idf),
             avgdl=jnp.float32(m.avgdl),
@@ -72,7 +83,7 @@ def gather_query_blocks(state: SearchState, term_ids: jax.Array, max_blocks: int
     """Gather (T, M) block indices + validity for one query's terms.
 
     term_ids: (T,) int32, -1 = pad. Returns docs (T,M,B) i32, tf (T,M,B) u8,
-    valid (T,M,1) bool.
+    bmax (T,M) f32 (0 where invalid), valid (T,M,1) bool.
     """
     tid = jnp.maximum(term_ids, 0)
     off = state.term_offsets[tid]                        # (T,)
@@ -83,7 +94,8 @@ def gather_query_blocks(state: SearchState, term_ids: jax.Array, max_blocks: int
     blk = jnp.where(valid, blk, 0)
     docs = state.block_docs[blk]                         # (T, M, B)
     tf = state.block_tf[blk]                             # (T, M, B)
-    return docs, tf, valid[..., None]
+    bmax = jnp.where(valid, state.block_max[blk], 0.0)   # (T, M)
+    return docs, tf, bmax, valid[..., None]
 
 
 def bm25_impacts(state: SearchState, term_ids: jax.Array, qtf: jax.Array,
@@ -113,11 +125,69 @@ def score_dense(state: SearchState, term_ids: jax.Array, qtf: jax.Array,
     single-node searcher (`make_search_fn`) and the per-partition body of
     the mesh-level distributed path (`search.distributed._local_search`).
     """
-    docs, tf, valid = gather_query_blocks(state, term_ids, max_blocks)
+    docs, tf, _, valid = gather_query_blocks(state, term_ids, max_blocks)
     docs = docs.astype(jnp.int32)        # block_docs may be uint16 (compact)
     imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid,
                        use_kernel=use_kernel)
     return accumulate_dense(docs, imp, state.n_docs)
+
+
+def pruned_keep(docs: jax.Array, imp: jax.Array, ub: jax.Array,
+                valid: jax.Array, *, k: int, n_docs: int) -> jax.Array:
+    """(T, M) bool keep mask for block-max pruning — the reference twin of
+    the mask computed inside ``kernels/bm25_pruned._pruned_kernel``.
+
+    Shares the kernel's θ / bound helpers so reference and kernel can never
+    disagree on which blocks are skipped. ``ub`` is (T, M) ``qtf·block_max``
+    zeroed where invalid; ``imp`` the full (T,M,B) impacts (only m=0 is
+    read); first blocks are kept unconditionally (they seed θ).
+    """
+    from repro.kernels.bm25_pruned import (PRUNE_SAFETY, block_bounds,
+                                           theta_lower_bound)
+    T, M, _ = docs.shape
+    bound = block_bounds(ub)
+    first = jnp.arange(M, dtype=jnp.int32)[None, :] == 0         # (1, M)
+    theta = theta_lower_bound(docs[:, 0], imp[:, 0], k, n_docs)
+    return valid[..., 0] & (first | (bound * PRUNE_SAFETY >= theta))
+
+
+def score_pruned(state: SearchState, term_ids: jax.Array, qtf: jax.Array,
+                 *, max_blocks: int, k: int, use_kernel: bool = False,
+                 use_topk_kernel: bool = False):
+    """One query's block-max pruned top-k: (vals (k,), ids (k,) i32,
+    touched () i32 = blocks actually scored).
+
+    Requires k ≤ n_docs (``make_search_fn`` clamps). ``use_kernel=True``
+    runs the fused Pallas pass (impacts + pruning + streaming top-k, no
+    (T,M,B) intermediate and no HBM accumulator); otherwise a pure-JAX
+    reference that zeroes skipped blocks' impacts before the dense
+    scatter-add — adding 0.0 is a bitwise no-op for the non-negative sums
+    here, so both are bit-identical to the dense path for every doc whose
+    blocks are all kept, which covers every top-k doc (see the kernel
+    module docstring for the losslessness argument).
+    """
+    docs, tf, bmax, valid = gather_query_blocks(state, term_ids, max_blocks)
+    docs = docs.astype(jnp.int32)
+    tf = jnp.where(valid, tf, jnp.uint8(0))   # invalid rows alias block 0
+    ub = jnp.where(valid[..., 0], qtf[:, None] * bmax, 0.0)      # (T, M)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        tid = jnp.maximum(term_ids, 0)
+        idf_q = state.idf[tid] * qtf                              # (T,)
+        dl = state.doc_len[jnp.minimum(docs, state.n_docs)]
+        return kops.bm25_pruned_topk(
+            tf, dl, docs, idf_q, ub, valid[..., 0],
+            state.k1, state.b, state.avgdl, k=k, n_docs=state.n_docs)
+    imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid)
+    keep = pruned_keep(docs, imp, ub, valid, k=k, n_docs=state.n_docs)
+    acc = accumulate_dense(docs, jnp.where(keep[..., None], imp, 0.0),
+                           state.n_docs)
+    if use_topk_kernel:
+        from repro.kernels import ops as kops
+        vals, ids = kops.topk(acc, k)
+    else:
+        vals, ids = jax.lax.top_k(acc, k)
+    return vals, ids.astype(jnp.int32), jnp.sum(keep).astype(jnp.int32)
 
 
 # -- accumulation strategies ----------------------------------------------------
@@ -190,10 +260,20 @@ def make_search_fn(n_docs: int, *, max_terms: int, max_blocks: int, k: int,
                      jnp.full(k - kk, n_docs, jnp.int32)])
             return vals, ids.astype(jnp.int32)
         elif accumulator == "sorted":
-            docs, tf, valid = gather_query_blocks(state, term_ids, max_blocks)
+            docs, tf, _, valid = gather_query_blocks(state, term_ids, max_blocks)
             imp = bm25_impacts(state, term_ids, qtf, docs, tf, valid,
                                use_kernel=use_kernel)
             return accumulate_sorted(docs, imp, n_docs, k)
+        elif accumulator == "pruned":
+            kk = min(k, n_docs)          # θ needs "missing doc = score 0"
+            vals, ids, _ = score_pruned(
+                state, term_ids, qtf, max_blocks=max_blocks, k=kk,
+                use_kernel=use_kernel, use_topk_kernel=use_topk_kernel)
+            if kk < k:
+                vals = jnp.concatenate([vals, jnp.zeros(k - kk, vals.dtype)])
+                ids = jnp.concatenate(
+                    [ids, jnp.full(k - kk, n_docs, jnp.int32)])
+            return vals, ids
         raise ValueError(f"unknown accumulator {accumulator!r}")
 
     def search(state: SearchState, term_ids: jax.Array, qtf: jax.Array):

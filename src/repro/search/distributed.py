@@ -31,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.partition import local_topk, merge_topk
 from repro.parallel import compat
-from repro.search.bm25 import SearchState, score_dense
+from repro.search.bm25 import SearchState, score_dense, score_pruned
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +46,7 @@ class DistSearchConfig:
     max_terms: int = 16
     max_blocks: int = 32     # impact-ordered truncation per term
     k: int = 100
+    accumulator: str = "dense"  # "dense" | "pruned" (block-max WAND)
     compact_ids: bool = False   # uint16 partition-local doc ids (perf)
     fused_gather: bool = False  # one all-gather over (data,model) vs two
 
@@ -61,6 +62,7 @@ def abstract_dist_state(cfg: DistSearchConfig) -> dict:
         "term_offsets": S((Pn, cfg.vocab + 1), jnp.int32),
         "block_docs": S((Pn, NB, B), did),
         "block_tf": S((Pn, NB, B), jnp.uint8),
+        "block_max": S((Pn, NB), jnp.float32),
         "doc_len": S((Pn, cfg.n_docs_local + 1), jnp.float32),
         "idf": S((cfg.vocab,), jnp.float32),
         "params": S((3,), jnp.float32),          # k1, b, avgdl
@@ -73,6 +75,7 @@ def dist_state_specs(axes: tuple[str, ...]) -> dict:
         "term_offsets": P(part, None),
         "block_docs": P(part, None, None),
         "block_tf": P(part, None, None),
+        "block_max": P(part, None),
         "doc_len": P(part, None),
         "idf": P(None),
         "params": P(None),
@@ -91,6 +94,7 @@ def _local_search(state: dict, term_ids, qtf, cfg: DistSearchConfig,
         term_offsets=state["term_offsets"][0],     # (V+1,)
         block_docs=state["block_docs"][0],         # (NB, B)
         block_tf=state["block_tf"][0],
+        block_max=state["block_max"][0],           # (NB,)
         doc_len=state["doc_len"][0],               # (n_docs_local+1,)
         idf=state["idf"],
         avgdl=state["params"][2],
@@ -98,14 +102,33 @@ def _local_search(state: dict, term_ids, qtf, cfg: DistSearchConfig,
         b=state["params"][1],
         n_docs=cfg.n_docs_local,
     )
-    scores = jax.vmap(
-        lambda t, w: score_dense(local, t, w, max_blocks=cfg.max_blocks)
-    )(term_ids, qtf)                               # (Q, n_docs_local)
     pid = compat.flat_axis_index(axes)             # flattened partition id
     base = (pid * cfg.n_docs_local).astype(jnp.int32)
-    ids = base + jnp.arange(cfg.n_docs_local, dtype=jnp.int32)
-    ids = jnp.broadcast_to(ids[None], scores.shape)
-    lv, li = local_topk(scores, ids, cfg.k)
+    if cfg.accumulator == "pruned":
+        # block-max pruned local scoring: top-k comes straight out of
+        # score_pruned (lax.top_k over the pruned accumulator — same tie
+        # order as local_topk over the dense accumulator, and bit-identical
+        # scores since pruning only skips blocks that cannot enter top-k)
+        kk = min(cfg.k, cfg.n_docs_local)
+        lv, li, _ = jax.vmap(
+            lambda t, w: score_pruned(local, t, w,
+                                      max_blocks=cfg.max_blocks, k=kk)
+        )(term_ids, qtf)                           # (Q, kk) each
+        if kk < cfg.k:                             # pad to the (Q, k) merge
+            q = lv.shape[0]
+            lv = jnp.concatenate(
+                [lv, jnp.zeros((q, cfg.k - kk), lv.dtype)], axis=-1)
+            li = jnp.concatenate(
+                [li, jnp.full((q, cfg.k - kk), cfg.n_docs_local,
+                              jnp.int32)], axis=-1)
+        li = base + li
+    else:
+        scores = jax.vmap(
+            lambda t, w: score_dense(local, t, w, max_blocks=cfg.max_blocks)
+        )(term_ids, qtf)                           # (Q, n_docs_local)
+        ids = base + jnp.arange(cfg.n_docs_local, dtype=jnp.int32)
+        ids = jnp.broadcast_to(ids[None], scores.shape)
+        lv, li = local_topk(scores, ids, cfg.k)
     if cfg.fused_gather:                   # one collective over all axes
         gv = jax.lax.all_gather(lv, axes, axis=-1, tiled=True)
         gi = jax.lax.all_gather(li, axes, axis=-1, tiled=True)
@@ -234,6 +257,11 @@ def stack_partitions(packs: list, n_docs_local: int,
         np.concatenate([
             p.block_tf, np.zeros((NB - p.meta.n_blocks, B), np.uint8)])
         for p in packs])
+    block_max = np.stack([
+        np.concatenate([
+            np.asarray(p.block_max, np.float32),
+            np.zeros(NB - p.meta.n_blocks, np.float32)])
+        for p in packs])
     doc_len = np.ones((len(packs), n_docs_local + 1), np.float32)
     for i, p in enumerate(packs):
         doc_len[i, :p.meta.n_docs] = p.doc_len[:p.meta.n_docs]
@@ -243,6 +271,7 @@ def stack_partitions(packs: list, n_docs_local: int,
         "term_offsets": np.stack([p.term_offsets for p in packs]),
         "block_docs": block_docs,
         "block_tf": block_tf,
+        "block_max": block_max,
         "doc_len": doc_len,
         "idf": packs[0].idf,               # global stats ⇒ identical per part
         "params": np.asarray([meta.k1, meta.b, meta.avgdl], np.float32),
@@ -250,6 +279,7 @@ def stack_partitions(packs: list, n_docs_local: int,
     cfg = DistSearchConfig(
         n_parts=len(packs), n_docs_local=n_docs_local, n_blocks_local=NB,
         vocab=V, block=B, k=hint.get("k", 10),
+        accumulator=hint.get("accumulator", "dense"),
         max_terms=hint.get("max_terms", 16),
         max_blocks=hint.get("max_blocks", 32),
         compact_ids=compact,

@@ -29,7 +29,7 @@ class SearchConfig:
     max_terms: int = 16
     max_blocks: int = 64          # M: impact-ordered truncation per term
     k: int = 10
-    accumulator: str = "dense"
+    accumulator: str = "dense"    # "dense" | "sorted" | "pruned" (block-max)
     use_kernel: bool = False      # Pallas fused BM25 impacts
     use_topk_kernel: bool = False # Pallas streaming top-k
     # device→host transfer + deserialize throughput used to convert index

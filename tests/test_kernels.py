@@ -49,6 +49,105 @@ def test_bm25_block_rows_sweep(block_rows):
                                atol=1e-6)
 
 
+# -- fused block-max pruned scoring + top-k ---------------------------------------
+
+
+def _pruned_args(seed, T, M, n_docs, zipf_a=2.0):
+    from repro.data.corpus import synth_pruned_blocks
+    a = synth_pruned_blocks(seed, n_terms=T, max_blocks=M, n_docs=n_docs,
+                            zipf_a=zipf_a)
+    return tuple(map(jnp.asarray, a))
+
+
+_F32 = (jnp.float32(0.9), jnp.float32(0.4), jnp.float32(12.0))
+
+
+def _assert_bitwise(got, want):
+    gv, gi = np.asarray(got[0]), np.asarray(got[1])
+    wv, wi = np.asarray(want[0]), np.asarray(want[1])
+    assert np.array_equal(gv.view(np.uint32), wv.view(np.uint32)), \
+        f"vals not bit-identical: {gv} vs {wv}"
+    assert np.array_equal(gi, wi), f"ids differ: {gi} vs {wi}"
+
+
+@pytest.mark.parametrize("T,M,n_docs,k", [
+    (1, 1, 200, 10), (4, 6, 900, 10), (8, 4, 2000, 25), (2, 8, 1024, 5),
+    (5, 8, 4000, 50),
+])
+@pytest.mark.parametrize("zipf_a", [1.3, 4.0])
+def test_bm25_pruned_topk_bitwise(T, M, n_docs, k, zipf_a):
+    """Pruned fused kernel == UNPRUNED dense ref, bit-for-bit (losslessness)."""
+    args = _pruned_args(T * 31 + M, T, M, n_docs, zipf_a)
+    gv, gi, _ = ops.bm25_pruned_topk(*args, *_F32, k=k, n_docs=n_docs,
+                                     interpret=True)
+    want = ref.bm25_pruned_topk_ref(*args, *_F32, k=k, n_docs=n_docs)
+    _assert_bitwise((gv, gi), want)
+
+
+def test_bm25_pruned_actually_prunes():
+    """Single-term query over impact-skewed blocks: later blocks' ceilings
+    fall below θ from the first block, so touched < valid — the kernel must
+    skip work, not just match the oracle — while staying bit-identical."""
+    args = _pruned_args(13, 1, 8, 4000, zipf_a=1.3)
+    n_valid = int(np.asarray(args[5]).sum())
+    gv, gi, touched = ops.bm25_pruned_topk(*args, *_F32, k=10, n_docs=4000,
+                                           interpret=True)
+    assert 0 < int(touched) < n_valid
+    want = ref.bm25_pruned_topk_ref(*args, *_F32, k=10, n_docs=4000)
+    _assert_bitwise((gv, gi), want)
+
+
+def test_bm25_pruned_uniform_ties_and_exact_threshold():
+    """Every posting identical → every block's bound EQUALS θ exactly;
+    ties at the k boundary must resolve like lax.top_k (lowest ids), and
+    the >=-keep rule must not drop the boundary blocks."""
+    T, M, B, n_docs, k = 1, 8, 128, 1024, 16
+    docs = np.arange(T * M * B, dtype=np.int32).reshape(T, M, B) % n_docs
+    tf = np.ones((T, M, B), np.uint8)
+    dl = np.full((T, M, B), 12.0, np.float32)    # == avgdl → norm term = 1
+    idf_q = np.ones(T, np.float32)
+    valid = np.ones((T, M), bool)
+    # per-posting impact (f32 math, as the kernel computes it); with a
+    # single term, bound(0, m) == ub == the impact == θ for every block
+    one = np.float32(1.0) / (np.float32(1.0) + np.float32(0.9))
+    ub = np.full((T, M), one, np.float32)    # block_max == the impact
+    args = tuple(map(jnp.asarray, (tf, dl, docs, idf_q, ub, valid)))
+    gv, gi, touched = ops.bm25_pruned_topk(*args, *_F32, k=k, n_docs=n_docs,
+                                           interpret=True)
+    want = ref.bm25_pruned_topk_ref(*args, *_F32, k=k, n_docs=n_docs)
+    _assert_bitwise((gv, gi), want)
+    assert int(touched) == T * M            # equality keeps, never skips
+
+
+def test_bm25_pruned_tombstone_zeroed_blocks():
+    """Blocks whose tf was zeroed (combine_segments tombstones) carry
+    block_max 0 and impact 0 — pruned must stay bit-identical."""
+    tf, dl, docs, idf_q, ub, valid = map(
+        np.asarray, _pruned_args(11, 4, 6, 900, 2.0))
+    tf, ub = tf.copy(), ub.copy()
+    tf[1, 2] = 0                         # tombstone a mid-impact block
+    ub[1, 2] = 0.0
+    tf[3, 0] = 0                         # and a FIRST block (θ seed)
+    ub[3, 0] = 0.0
+    args = tuple(map(jnp.asarray, (tf, dl, docs, idf_q, ub, valid)))
+    gv, gi, _ = ops.bm25_pruned_topk(*args, *_F32, k=10, n_docs=900,
+                                     interpret=True)
+    want = ref.bm25_pruned_topk_ref(*args, *_F32, k=10, n_docs=900)
+    _assert_bitwise((gv, gi), want)
+
+
+def test_bm25_pruned_fewer_postings_than_k():
+    """T·B < k in phase 1 → θ must fall back to 0 (prune nothing) rather
+    than overestimate from an under-full candidate set."""
+    args = _pruned_args(3, 1, 2, 300, 2.0)
+    n_valid = int(np.asarray(args[5]).sum())
+    gv, gi, touched = ops.bm25_pruned_topk(*args, *_F32, k=200, n_docs=300,
+                                           interpret=True)
+    want = ref.bm25_pruned_topk_ref(*args, *_F32, k=200, n_docs=300)
+    _assert_bitwise((gv, gi), want)
+    assert int(touched) == n_valid
+
+
 # -- streaming top-k ------------------------------------------------------------
 
 
@@ -70,6 +169,65 @@ def test_topk_with_ties_and_negatives():
     gv, gi = ops.topk(scores, 30, chunk=64, interpret=True)
     wv, _ = ref.topk_ref(scores, 30)
     np.testing.assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-6)
+
+
+@pytest.mark.parametrize("N,k,chunk", [(13, 6, 8), (5, 8, 4), (100, 40, 64),
+                                       (129, 3, 128)])
+def test_topk_pad_never_leaks(N, k, chunk):
+    """Short final chunk: a padded lane (or an exhausted chunk when
+    k > live elements) must emit the sentinel id N, never a padded index."""
+    scores = jax.random.normal(jax.random.PRNGKey(N * 7 + k), (N,))
+    gv, gi = ops.topk(scores, k, chunk=chunk, interpret=True)
+    gi = np.asarray(gi)
+    gv = np.asarray(gv)
+    live = min(k, N)
+    assert np.all(gi[:live] < N)                  # real hits: real indices
+    wv, _ = ref.topk_ref(scores, live)
+    np.testing.assert_allclose(gv[:live], np.asarray(wv), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(scores)[gi[:live]], gv[:live],
+                               rtol=1e-6)
+    if k > N:                                     # k > live: sentinel tail
+        assert np.all(gi[N:] == N)
+        assert np.all(gv[N:] == -np.inf)
+
+
+def test_topk_k_exceeds_live_with_neg_inf_inputs():
+    """Legit -inf scores count as absent too (the sorted accumulator's
+    isfinite convention): with only 3 finite scores and k=6, slots 3+ are
+    (-inf, N)."""
+    scores = jnp.asarray([-jnp.inf, 2.0, -jnp.inf, 1.0, 3.0, -jnp.inf,
+                          -jnp.inf])
+    gv, gi = ops.topk(scores, 6, chunk=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(gv)[:3], [3.0, 2.0, 1.0])
+    assert list(np.asarray(gi)[:3]) == [4, 1, 3]
+    assert np.all(np.asarray(gi)[3:] == 7)
+    assert np.all(np.asarray(gv)[3:] == -np.inf)
+
+
+# -- interpret-mode selection -----------------------------------------------------
+
+
+def test_interpret_defaults_to_backend():
+    from repro.kernels.interpret import default_interpret, resolve_interpret
+    import os
+    assert jax.default_backend() == "cpu"     # this container
+    assert default_interpret() is True
+    assert resolve_interpret(None) is True
+    assert resolve_interpret(False) is False  # explicit override wins
+    assert resolve_interpret(True) is True
+    old = os.environ.get("REPRO_PALLAS_INTERPRET")
+    try:
+        os.environ["REPRO_PALLAS_INTERPRET"] = "0"
+        assert default_interpret() is False   # env overrides the backend
+        assert resolve_interpret(None) is False
+        assert resolve_interpret(True) is True
+        os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+        assert default_interpret() is True
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_PALLAS_INTERPRET", None)
+        else:
+            os.environ["REPRO_PALLAS_INTERPRET"] = old
 
 
 # -- fused dot + top-k (retrieval) ------------------------------------------------
