@@ -6,7 +6,7 @@
 Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
-with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12
+with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13
 --json BENCH_baseline.json`` whenever a deliberate perf change moves a
 metric).
 
@@ -19,7 +19,12 @@ Gated metrics (lower is better for all of them):
   their absolute floor is 1e-4 ms, not the gateway 0.2 ms)
 * B11 NRT gateway latencies   — fail on a regression > 25%
 * B12 skewed-fleet latencies  — fail on a regression > 25%
-* B7/B11/B12 $/1k-queries     — fail on a regression > 15%
+* B13 cold-start profile      — fail on cold-hydration/cold-latency p50
+  regression > 25% (both the full-hydrate reference and the lazy path:
+  a layout change that quietly re-fattens the partial read set must
+  trip the lazy rows, one that slows eager streaming trips the full
+  rows) or backfill GB·s regression > 15%
+* B7/B11/B12/B13 $-and-GB·s   — fail on a regression > 15%
 
 A tiny absolute floor per metric class absorbs float jitter without hiding
 real regressions (a forgotten merge-cost term or a doubled invocation count
@@ -63,6 +68,14 @@ GATES: list[tuple[str, float, float]] = [
     ("b12_hetero_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b12_hetero_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
     ("b12_uniform_R2_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    # B13 cold-start profile: hydration p50s are the tentpole metric (the
+    # 1/3 ratio itself is asserted in bench-smoke); latency rows catch
+    # end-to-end drift; backfill GB·s is a cost line like $/1k
+    ("b13_full_cold_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b13_lazy_cold_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b13_full_cold_latency_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b13_lazy_cold_latency_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b13_backfill_gb_s", COST_LIMIT, COST_FLOOR),
 ]
 
 

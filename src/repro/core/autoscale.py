@@ -45,8 +45,8 @@ import dataclasses
 import math
 from typing import Any, Callable, Sequence
 
-from repro.core.runtime import FaaSRuntime, Handler
 from repro.core.partition import ScatterGather
+from repro.core.runtime import FaaSRuntime, Handler
 
 
 @dataclasses.dataclass
@@ -83,6 +83,14 @@ class AutoscalePolicy:
     up_ticks_to_scale: int = 1
     up_overhead_s: float | None = None  # queue/cold projection trigger;
     #                                     None → max(provision/2, 2× warm p50)
+    # The MEASURED cold overhead (provision + first-query hydration) the
+    # projection floor derives from. The runtime's ``provision_s`` alone
+    # under-states an eager-hydration fleet's cold cost (~0.47 s vs the
+    # 0.15 s boot) and over-states a lazy-hydration one's (~0.2 s) — B13
+    # measures both profiles; feed its number here so the scale-up trigger
+    # prices cold starts the fleet will ACTUALLY pay. None keeps the PR 3
+    # provision_s/2 floor (bit-identical pre-existing behaviour).
+    cold_overhead_s: float | None = None
     # Little's-law capacity target per group: replicas chase
     # ceil(arrival_rate × warm_p50 / target_utilization), the rule that
     # makes a fleet HETEROGENEOUS under skew — a partition whose vmapped
@@ -220,7 +228,10 @@ class FleetController:
         wp50 = self.runtime.latency_percentiles(
             group, qs=(0.5,), warm_only=True,
             window=self.policy.warm_window)[0.5]
-        floor = self.runtime.config.provision_s / 2
+        cold = (self.policy.cold_overhead_s
+                if self.policy.cold_overhead_s is not None
+                else self.runtime.config.provision_s)
+        floor = cold / 2
         return floor if math.isnan(wp50) else max(floor, 2.0 * wp50)
 
     def _control_group(self, p: int, group: list[str], window: list,

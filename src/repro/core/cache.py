@@ -37,6 +37,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     hydrate_seconds: float = 0.0   # simulated time spent hydrating (cold starts)
+    backfill_seconds: float = 0.0  # partial → full upgrades, off the critical path
 
     @property
     def cold_fraction(self) -> float:
@@ -85,6 +86,30 @@ class HydrationCache:
                 self._bytes += nbytes
                 self._evict_to_fit()
             return self._entries.get(key, (asset, nbytes))[0]
+
+    def note_hydration(self, sim_s: float) -> None:
+        """Account extra on-critical-path hydration for an entry that was a
+        HIT but needed more data (a partially-hydrated asset pulling a new
+        query's term blocks)."""
+        with self._lock:
+            self.stats.hydrate_seconds += float(sim_s)
+
+    def note_backfill(self, name: str, version: str,
+                      sim_s: float, nbytes: int | None = None) -> None:
+        """Account a partial → full upgrade: time goes to the separate
+        ``backfill_seconds`` line (never hydrate_seconds — backfill is off
+        the critical path by contract), and the entry's byte accounting is
+        refreshed since the asset just grew."""
+        with self._lock:
+            self.stats.backfill_seconds += float(sim_s)
+            key = (name, version)
+            hit = self._entries.get(key)
+            if hit is not None:
+                asset, old_nb = hit
+                new_nb = int(nbytes) if nbytes is not None else pytree_nbytes(asset)
+                self._entries[key] = (asset, new_nb)
+                self._bytes += new_nb - old_nb
+                self._evict_to_fit()
 
     def _evict_to_fit(self) -> None:
         while self._bytes > self.capacity_bytes and len(self._entries) > 1:

@@ -30,6 +30,7 @@ class Invocation:
     hedge: bool = False       # a backup leg fired for tail mitigation
     idle: bool = False        # keep-alive ping: standby capacity, not a query
     write: bool = False       # indexing work: delta pack / merge, not a query
+    backfill: bool = False    # partial → full hydration upgrade, not a query
 
 
 @dataclasses.dataclass
@@ -53,6 +54,15 @@ class CostLedger:
     invocation, but answer no query — a $/1k-queries number that silently
     folded indexing into serving would make update-heavy workloads look
     like expensive queries instead of cheap queries plus an indexing bill.
+
+    Backfill charges (``backfill=True``) are the lazy-hydration deferral
+    tax: a cold instance answers its first query from range reads of only
+    the queried terms' blocks, then upgrades partial → full OFF the
+    critical path. That upgrade still runs on the instance and bills
+    GB·s, but it serves no query and adds no latency — folding it into
+    serving would hide exactly the trade lazy hydration makes (cheap
+    first response now, deferred bulk transfer later), so it gets its own
+    line (``backfill_gb_seconds``/``backfill_invocations``).
     """
 
     gb_seconds: float = 0.0
@@ -65,6 +75,8 @@ class CostLedger:
     idle_invocations: int = 0
     write_gb_seconds: float = 0.0
     write_invocations: int = 0
+    backfill_gb_seconds: float = 0.0
+    backfill_invocations: int = 0
 
     def charge(self, inv: Invocation) -> float:
         quantum = LAMBDA_BILLING_QUANTUM_S
@@ -84,6 +96,9 @@ class CostLedger:
         if inv.write:
             self.write_gb_seconds += gbs
             self.write_invocations += 1
+        if inv.backfill:
+            self.backfill_gb_seconds += gbs
+            self.backfill_invocations += 1
         return gbs * PRICE_PER_GB_S
 
     @property
@@ -113,17 +128,24 @@ class CostLedger:
         """The ingestion tax: compute dollars spent packing deltas/merges."""
         return self.write_gb_seconds * PRICE_PER_GB_S
 
+    @property
+    def backfill_dollars(self) -> float:
+        """The deferral tax: compute dollars spent upgrading partial → full."""
+        return self.backfill_gb_seconds * PRICE_PER_GB_S
+
     def attribution(self) -> dict[str, float]:
-        """Compute-dollar breakdown: serving / hedge / idle / write sum to
-        ``compute_dollars`` (the classes are disjoint: a backup leg answers
-        a query, a keep-alive answers none, a writer indexes)."""
+        """Compute-dollar breakdown: serving / hedge / idle / write /
+        backfill sum to ``compute_dollars`` (the classes are disjoint: a
+        backup leg answers a query, a keep-alive answers none, a writer
+        indexes, a backfill moves bytes for queries not yet asked)."""
         hedge, idle = self.hedge_dollars, self.idle_dollars
-        write = self.write_dollars
+        write, backfill = self.write_dollars, self.backfill_dollars
         return {
-            "serving": self.compute_dollars - hedge - idle - write,
+            "serving": self.compute_dollars - hedge - idle - write - backfill,
             "hedge": hedge,
             "idle": idle,
             "write": write,
+            "backfill": backfill,
         }
 
     def queries_per_dollar(self) -> float:

@@ -70,12 +70,18 @@ class NetworkModel:
 
 
 class Backend:
-    """Minimal blob backend interface."""
+    """Minimal blob backend interface.
+
+    ``get`` takes the byte range: the store's ranged reads must move only
+    the requested bytes through the backend (a seek on the filesystem, a
+    slice in memory), so the real bytes moved always match the bytes
+    ``NetworkModel.read_cost_s`` bills for. ``length=None`` reads to EOF.
+    """
 
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
 
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, start: int = 0, length: int | None = None) -> bytes:
         raise NotImplementedError
 
     def delete(self, key: str) -> None:
@@ -101,12 +107,16 @@ class MemoryBackend(Backend):
         with self._lock:
             self._blobs[key] = bytes(data)
 
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, start: int = 0, length: int | None = None) -> bytes:
         with self._lock:
             try:
-                return self._blobs[key]
+                data = self._blobs[key]
             except KeyError:
                 raise NoSuchKey(key) from None
+        if start == 0 and length is None:
+            return data
+        end = len(data) if length is None else start + length
+        return data[start:end]
 
     def delete(self, key: str) -> None:
         with self._lock:
@@ -135,10 +145,14 @@ class FilesystemBackend(Backend):
             f.write(data)
         os.replace(tmp, path)  # atomic publish, like S3 PUT visibility
 
-    def get(self, key: str) -> bytes:
+    def get(self, key: str, start: int = 0, length: int | None = None) -> bytes:
+        # seek-based ranged read: a byte-range GET moves only the requested
+        # bytes off disk, matching what the network model bills for
         try:
             with open(self._path(key), "rb") as f:
-                return f.read()
+                if start:
+                    f.seek(start)
+                return f.read() if length is None else f.read(length)
         except FileNotFoundError:
             raise NoSuchKey(key) from None
 
@@ -209,12 +223,22 @@ class ObjectStore:
         return meta
 
     def get(self, key: str, *, start: int = 0, length: int | None = None) -> bytes:
-        """Byte-range GET (the Directory seam relies on ranged reads)."""
-        data = self.backend.get(key)
-        end = len(data) if length is None else min(start + length, len(data))
-        if start < 0 or start > len(data):
-            raise ObjectStoreError(f"{key}: bad range start={start} size={len(data)}")
-        chunk = data[start:end]
+        """Byte-range GET (the Directory seam relies on ranged reads).
+
+        The range is pushed into the backend (filesystem seek / memory
+        slice), never served by fetching the whole object and slicing: the
+        real bytes moved are exactly the bytes the network model charges
+        ``read_cost_s`` for. Bounds come from the store's own metadata, so
+        an out-of-range start still fails loudly without touching data."""
+        with self._lock:
+            meta = self._meta.get(key)
+        if meta is None:
+            raise NoSuchKey(key)
+        size = meta.size
+        if start < 0 or start > size:
+            raise ObjectStoreError(f"{key}: bad range start={start} size={size}")
+        end = size if length is None else min(start + length, size)
+        chunk = self.backend.get(key, start, max(0, end - start))
         self.stats.gets += 1
         self.stats.bytes_out += len(chunk)
         self.stats.sim_seconds += self.network.read_cost_s(len(chunk))

@@ -26,6 +26,7 @@ Two realizations, same math:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Sequence
 
 import jax
@@ -142,6 +143,32 @@ class HedgePolicy:
     scale: float = 2.0
     min_history: int = 4
     window: int = 256        # most-recent warm records considered
+
+    @classmethod
+    def from_cold_profile(cls, cold_overhead_s: float, warm_p50_s: float,
+                          **kw) -> "HedgePolicy":
+        """Derive ``scale`` from a measured cold profile.
+
+        The 2× default encodes the FULL-hydration regime, where a cold leg
+        costs ~10-20× a warm query and any projected overhead past 2× warm
+        is worth a backup. Lazy hydration shrinks the cold penalty several
+        fold (B13 measures it), which moves the break-even: hedging a leg
+        whose worst case is only a few warm-medians buys little latency for
+        a guaranteed double bill. The rule — backup when projected overhead
+        exceeds about a TENTH of the cold penalty, expressed in warm
+        medians, clamped to [1.25, 4]:
+
+            scale = clamp(1 + cold_overhead_s / (10 × warm_p50_s), 1.25, 4.0)
+
+        Full profile (cold ≈ 0.47 s, warm ≈ 0.025 s) → scale ≈ 2.9; the
+        lazy profile (cold ≈ 0.2 s) → scale ≈ 1.8 — hedging gets MORE eager
+        per warm-median because a backup is now cheap to be wrong about.
+        Defaults stay the full-regime 2.0; fleets opting into lazy
+        hydration re-derive explicitly."""
+        if warm_p50_s <= 0 or math.isnan(warm_p50_s):
+            return cls(**kw)
+        scale = min(4.0, max(1.25, 1.0 + cold_overhead_s / (10.0 * warm_p50_s)))
+        return cls(scale=scale, **kw)
 
     def threshold_s(self, runtime, group: Sequence[str]) -> float | None:
         """The projected-overhead threshold for this group, or None if the

@@ -88,6 +88,11 @@ class InvocationRecord:
     keepalive: bool = False
     # indexing work (delta pack / merge): billed to the ledger's write line
     write: bool = False
+    # partial → full lazy-hydration upgrade run after the response was
+    # computed: billed to the ledger's backfill line, EXCLUDED from
+    # latency_s/hydrate_s (it extends instance busy time, not the caller's
+    # wait) — hedging/autoscaling thus see the PARTIAL cold cost
+    backfill_s: float = 0.0
 
     @property
     def overhead_s(self) -> float:
@@ -362,15 +367,20 @@ class FaaSRuntime:
             raise _InstanceDied()
 
         hyd_before = inst.cache.stats.hydrate_seconds
+        bf_before = inst.cache.stats.backfill_seconds
         result, exec_s = self._handlers[fn](inst.cache, payload)
         hydrate_s = inst.cache.stats.hydrate_seconds - hyd_before
+        backfill_s = inst.cache.stats.backfill_seconds - bf_before
         cold = fresh or hydrate_s > 0
 
+        # backfill (partial → full upgrade after the response) is OFF the
+        # critical path: the caller's duration excludes it, but the instance
+        # stays busy while it streams — and it bills on its own ledger line.
         duration = cold_boot + hydrate_s + exec_s
         # the primary occupies its instance for its FULL execution, win or
         # lose the hedge race — mark it busy now so a backup request can
         # never be "concurrently" placed on this same instance.
-        inst.busy_until = t_start + duration
+        inst.busy_until = t_start + duration + backfill_s
         inst.last_used = inst.busy_until
         inst.invocations += 1
 
@@ -386,18 +396,24 @@ class FaaSRuntime:
             if inst2 is not inst:
                 queue2 = max(0.0, inst2.busy_until - t_hedge)
                 hyd2_before = inst2.cache.stats.hydrate_seconds
+                bf2_before = inst2.cache.stats.backfill_seconds
                 result2, exec2_s = self._handlers[fn](inst2.cache, payload)
                 hyd2 = inst2.cache.stats.hydrate_seconds - hyd2_before
+                bf2 = inst2.cache.stats.backfill_seconds - bf2_before
                 dur2 = (cfg.hedge_after_s + queue2
                         + (cfg.provision_s if fresh2 else 0.0) + hyd2 + exec2_s)
                 if dur2 < result_duration:
                     result, result_duration = result2, dur2
-                inst2.busy_until = t_start + dur2
+                inst2.busy_until = t_start + dur2 + bf2
                 inst2.last_used = inst2.busy_until
                 inst2.invocations += 1
                 self.ledger.charge(
                     Invocation(cfg.memory_bytes, exec2_s + hyd2, fresh2,
                                hedge=True))
+                if bf2 > 0:
+                    self.ledger.charge(
+                        Invocation(cfg.memory_bytes, bf2, False,
+                                   hedge=True, backfill=True))
                 hedged = True
 
         self.clock = max(self.clock, inst.busy_until)
@@ -405,12 +421,19 @@ class FaaSRuntime:
         self.ledger.charge(Invocation(cfg.memory_bytes, exec_s + hydrate_s,
                                       cold, hedge=hedge, idle=keepalive,
                                       write=write))
+        if backfill_s > 0:
+            # the deferred bulk transfer bills as its own invocation-time
+            # line — never folded into the serving charge above, never into
+            # the caller-visible latency below
+            self.ledger.charge(Invocation(cfg.memory_bytes, backfill_s, False,
+                                          hedge=hedge, backfill=True))
         rec = InvocationRecord(
             fn=fn, t_arrival=now, t_done=t_start + result_duration,
             latency_s=queue_wait + result_duration, exec_s=exec_s,
             hydrate_s=hydrate_s, cold=cold, provisioned=fresh,
             instance_id=inst.id,
             retries=attempt, hedged=hedged, keepalive=keepalive, write=write,
+            backfill_s=backfill_s,
         )
         if record:
             self.records.append(rec)

@@ -322,6 +322,88 @@ def _npy_load(data: bytes) -> np.ndarray:
 SEGMENT_FILES = ("term_offsets", "block_docs", "block_tf", "block_max",
                  "doc_len", "idf")
 
+# Lazy-hydration layout (PR 7, Airphant-style): every segment additionally
+# carries a compact HEADER (superindex.bin — meta, vocab, term→block extents
+# via term_offsets, the block_max table, doc lengths, idf) serialized ahead
+# of an interleaved BLOCK PAYLOAD (blocks.bin — row i is block i's B int32
+# doc ids followed by its B uint8 tfs). A cold instance reads the header in
+# ONE ranged GET, then pulls exactly the payload row ranges the query's
+# terms name (term t's rows are [off[t], off[t+1]) — contiguous by
+# construction), instead of streaming the whole segment. The eager *.npy
+# files stay byte-identical so full hydration (read_segment) is unchanged.
+SUPERINDEX_FILE = "superindex.bin"
+PAYLOAD_FILE = "blocks.bin"
+_SUPERINDEX_MAGIC = b"SUPX"
+
+
+def payload_row_bytes(block: int) -> int:
+    """Bytes per payload row: B int32 doc ids + B uint8 tfs, interleaved so
+    one coalesced range read covers both arrays of a term's blocks."""
+    return block * 4 + block
+
+
+def pack_superindex(index: PackedIndex) -> bytes:
+    """The segment header: everything a query-sufficient partial view needs
+    EXCEPT the posting blocks themselves, framed as length-prefixed
+    sections (meta json, vocab json, then term_offsets / block_max /
+    doc_len / idf as npy)."""
+    sections = [
+        index.meta.to_json(),
+        orjson.dumps(index.vocab),
+        _npy_bytes(index.term_offsets),
+        _npy_bytes(index.block_max),
+        _npy_bytes(index.doc_len),
+        _npy_bytes(index.idf),
+    ]
+    out = io.BytesIO()
+    out.write(_SUPERINDEX_MAGIC)
+    for s in sections:
+        out.write(len(s).to_bytes(4, "little"))
+        out.write(s)
+    return out.getvalue()
+
+
+def unpack_superindex(data: bytes) -> tuple[IndexMeta, dict, list[np.ndarray]]:
+    """Inverse of :func:`pack_superindex` →
+    (meta, vocab, [term_offsets, block_max, doc_len, idf])."""
+    if data[:4] != _SUPERINDEX_MAGIC:
+        raise ValueError("not a superindex blob")
+    sections, pos = [], 4
+    for _ in range(6):
+        n = int.from_bytes(data[pos:pos + 4], "little")
+        pos += 4
+        sections.append(data[pos:pos + n])
+        pos += n
+    meta = IndexMeta.from_json(sections[0])
+    vocab = orjson.loads(sections[1])
+    arrays = [_npy_load(s) for s in sections[2:]]
+    return meta, vocab, arrays
+
+
+def pack_payload(index: PackedIndex) -> bytes:
+    """Interleaved block payload: row i = block i's doc ids (B × int32,
+    little-endian) followed by its tfs (B × uint8)."""
+    NB = index.meta.n_blocks
+    if NB == 0:
+        return b""
+    B = index.meta.block
+    rows = np.empty((NB, payload_row_bytes(B)), np.uint8)
+    docs = np.ascontiguousarray(index.block_docs.astype("<i4"))
+    rows[:, :B * 4] = docs.view(np.uint8).reshape(NB, B * 4)
+    rows[:, B * 4:] = index.block_tf.astype(np.uint8)
+    return rows.tobytes()
+
+
+def unpack_payload_rows(chunk: bytes, block: int) -> tuple[np.ndarray, np.ndarray]:
+    """Decode a contiguous payload row range → (docs (n,B) int32,
+    tf (n,B) uint8)."""
+    B = block
+    row = payload_row_bytes(B)
+    n = len(chunk) // row
+    rows = np.frombuffer(chunk, np.uint8, count=n * row).reshape(n, row)
+    docs = rows[:, :B * 4].copy().view("<i4").astype(np.int32, copy=False)
+    return docs.reshape(n, B), rows[:, B * 4:].copy()
+
 
 def write_segment(index: PackedIndex, directory: RamDirectory | None = None) -> RamDirectory:
     """Serialize to Directory files (then publish via AssetCatalog)."""
@@ -330,6 +412,9 @@ def write_segment(index: PackedIndex, directory: RamDirectory | None = None) -> 
     d.write("vocab.json", orjson.dumps(index.vocab))
     for name in SEGMENT_FILES:
         d.write(name + ".npy", _npy_bytes(getattr(index, name)))
+    # lazy-hydration layout: header ahead of the interleaved block payload
+    d.write(SUPERINDEX_FILE, pack_superindex(index))
+    d.write(PAYLOAD_FILE, pack_payload(index))
     return d
 
 

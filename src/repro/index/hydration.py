@@ -1,0 +1,253 @@
+"""Partial (lazy) hydration — cold starts from byte-range reads.
+
+Eager hydration (:func:`repro.index.builder.read_segment`) streams a whole
+segment before the first byte of scoring; at fleet scale that is the ~full
+cold-start cost the paper's serverless bet stumbles on. This layer instead
+answers a cold query from the segment's compact header plus targeted range
+reads (the Airphant move):
+
+1. ONE ranged GET pulls ``superindex.bin`` — meta, vocab, term → block
+   extents (``term_offsets``), the ``block_max`` table, doc lengths, idf.
+2. The query's terms name exact payload row ranges in ``blocks.bin``
+   (term t's blocks are rows ``[off[t], off[t+1])``, contiguous by
+   construction); nearby extents COALESCE when the gap's bandwidth cost is
+   below another GET's first-byte cost, so a multi-term query stays a
+   handful of range reads, not one per term.
+3. The result is a full-shape :class:`~repro.index.builder.PackedIndex`
+   VIEW: hydrated terms carry their true blocks, absent terms' blocks stay
+   masked non-live (doc = pad, tf = 0) — ``gather_query_blocks`` indexes
+   blocks only through ``term_offsets`` of the query's terms, so every
+   accumulator (dense / sorted / pruned) and :func:`~repro.index.builder.
+   combine_segments` NRT fusion rank BIT-identically to full hydration.
+4. ``backfill()`` later upgrades the view partial → full OFF the critical
+   path (the runtime bills it on the ledger's backfill line, never into
+   query latency).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.directory import Directory, DirectoryError, StoreDirectory
+from repro.core.object_store import NoSuchKey
+from repro.index.builder import (PAYLOAD_FILE, SUPERINDEX_FILE, IndexMeta,
+                                 PackedIndex, combine_segments,
+                                 payload_row_bytes, unpack_payload_rows,
+                                 unpack_superindex)
+
+
+class SuperIndexMissing(Exception):
+    """The segment predates the lazy layout (no superindex.bin) — the
+    caller must fall back to eager full hydration."""
+
+
+def _read_full(directory: Directory, name: str) -> bytes:
+    """One whole-object GET, bypassing the StoreDirectory block cache (and
+    its HEAD round-trip) — the header read is the partial path's floor."""
+    if isinstance(directory, StoreDirectory):
+        try:
+            return directory.store.get(directory.prefix + name)
+        except NoSuchKey:
+            raise SuperIndexMissing(name) from None
+    try:
+        return directory.open_input(name).read_all()
+    except DirectoryError:
+        raise SuperIndexMissing(name) from None
+
+
+def _range_reader(directory: Directory, name: str):
+    """(start, n) -> bytes over one file, as raw ranged GETs when store-backed
+    (each call is one billed GET of exactly n bytes)."""
+    if isinstance(directory, StoreDirectory):
+        store, key = directory.store, directory.prefix + name
+        return lambda s, n: store.get(key, start=s, length=n)
+    inp = directory.open_input(name)
+
+    def read(s: int, n: int) -> bytes:
+        inp.seek(s)
+        return inp.read_bytes(n)
+
+    return read
+
+
+def _coalesce_gap_bytes(directory: Directory) -> int:
+    """Merge two extents when reading the gap costs less than a fresh GET:
+    gap < first_byte_s × bandwidth (the network model's own break-even)."""
+    if isinstance(directory, StoreDirectory):
+        nm = directory.store.network
+        return int(nm.first_byte_s * nm.bandwidth_Bps)
+    return 1 << 16
+
+
+def coalesce_extents(extents: list[tuple[int, int]],
+                     gap: int) -> list[tuple[int, int]]:
+    """Merge sorted-or-not [lo, hi) byte extents whose gaps are ≤ ``gap``."""
+    out: list[tuple[int, int]] = []
+    for lo, hi in sorted(e for e in extents if e[1] > e[0]):
+        if out and lo - out[-1][1] <= gap:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+class PartialSegment:
+    """One segment's partial → full hydration state.
+
+    Arrays are allocated FULL-SHAPE up front with non-hydrated blocks
+    masked non-live (doc ids = n_docs pad, tf = 0): the search state built
+    from a partial view has the same shapes as the full one, so jit
+    specializations are shared and ``combine_segments`` works unchanged.
+    """
+
+    def __init__(self, directory: Directory, meta: IndexMeta, vocab: dict,
+                 term_offsets: np.ndarray, block_max: np.ndarray,
+                 doc_len: np.ndarray, idf: np.ndarray,
+                 header_bytes: int) -> None:
+        self.directory = directory
+        self.meta = meta
+        self.vocab = vocab
+        self.term_offsets = term_offsets.astype(np.int32, copy=False)
+        self.block_max = block_max
+        self.doc_len = doc_len
+        self.idf = idf
+        NB, B = meta.n_blocks, meta.block
+        self.block_docs = np.full((NB, B), meta.n_docs, np.int32)
+        self.block_tf = np.zeros((NB, B), np.uint8)
+        self._rows_live = np.zeros(NB, bool)
+        self._reader = None
+        self.bytes_read = header_bytes   # data bytes moved so far (header +
+        #                                  payload ranges) — the deserialize
+        #                                  model charges against this, not
+        #                                  the full-shape array footprint
+
+    @classmethod
+    def open(cls, directory: Directory) -> "PartialSegment":
+        """Read ONLY the header (one GET); no payload rows yet."""
+        blob = _read_full(directory, SUPERINDEX_FILE)
+        meta, vocab, (term_offsets, block_max, doc_len, idf) = \
+            unpack_superindex(blob)
+        return cls(directory, meta, vocab, term_offsets, block_max,
+                   doc_len, idf, header_bytes=len(blob))
+
+    @property
+    def full(self) -> bool:
+        return bool(self._rows_live.all())
+
+    def term_rows(self, term_ids) -> list[tuple[int, int]]:
+        """Payload row ranges for ``term_ids`` (segment-local block index
+        space); out-of-vocab ids are skipped (zero blocks here)."""
+        V = len(self.term_offsets) - 1
+        off = self.term_offsets
+        out = []
+        for t in term_ids:
+            if 0 <= t < V and off[t + 1] > off[t]:
+                out.append((int(off[t]), int(off[t + 1])))
+        return out
+
+    def _fetch_rows(self, rows: list[tuple[int, int]]) -> None:
+        todo = [(lo, hi) for lo, hi in rows
+                if not self._rows_live[lo:hi].all()]
+        if not todo:
+            return
+        if self._reader is None:
+            self._reader = _range_reader(self.directory, PAYLOAD_FILE)
+        row = payload_row_bytes(self.meta.block)
+        gap = _coalesce_gap_bytes(self.directory)
+        spans = coalesce_extents(
+            [(lo * row, hi * row) for lo, hi in todo], gap)
+        for blo, bhi in spans:
+            chunk = self._reader(blo, bhi - blo)
+            self.bytes_read += len(chunk)
+            lo = blo // row
+            docs, tf = unpack_payload_rows(chunk, self.meta.block)
+            self.block_docs[lo:lo + len(docs)] = docs
+            self.block_tf[lo:lo + len(tf)] = tf
+            self._rows_live[lo:lo + len(docs)] = True
+
+    def hydrate_terms(self, term_ids) -> bool:
+        """Pull the payload rows of ``term_ids``; True if anything moved."""
+        before = self.bytes_read
+        self._fetch_rows(self.term_rows(term_ids))
+        return self.bytes_read != before
+
+    def backfill(self) -> bool:
+        """Fetch every still-masked row (coalesced) — partial → full."""
+        if self.full:
+            return False
+        self._fetch_rows([(0, self.meta.n_blocks)])
+        return True
+
+    def to_packed(self) -> PackedIndex:
+        """The current view as a PackedIndex (shares the live arrays)."""
+        return PackedIndex(
+            meta=self.meta, vocab=self.vocab,
+            term_offsets=self.term_offsets, block_docs=self.block_docs,
+            block_tf=self.block_tf, block_max=self.block_max,
+            doc_len=self.doc_len, idf=self.idf)
+
+
+def open_partial_segment(directory: Directory) -> PartialSegment:
+    return PartialSegment.open(directory)
+
+
+class LazyIndex:
+    """A query-sufficient view over one asset version's segment set.
+
+    Plain versions hold one segment; NRT generations hold base + deltas
+    fused under the generation's LIVE stats/vocab. Either way the contract
+    is the same: after ``ensure_terms(terms)``, ``packed()`` ranks those
+    terms' queries bit-identically to the fully-hydrated oracle, and
+    ``backfill()`` upgrades to the full index without touching the
+    critical path.
+    """
+
+    def __init__(self, segments: list[PartialSegment], *,
+                 vocab: dict | None = None, stats: dict | None = None,
+                 tombstones=()) -> None:
+        if not segments:
+            raise ValueError("LazyIndex needs at least one segment")
+        self.segments = segments
+        self._gen_state = (vocab, stats) if stats is not None else None
+        self.tombstones = list(tombstones)
+        self.vocab = vocab if vocab is not None else segments[0].vocab
+
+    @property
+    def state(self) -> str:
+        return "full" if all(s.full for s in self.segments) else "partial"
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(s.bytes_read for s in self.segments)
+
+    def term_ids(self, terms) -> list[int]:
+        return [tid for t in terms
+                if (tid := self.vocab.get(t, -1)) >= 0]
+
+    def ensure_terms(self, terms) -> bool:
+        """Hydrate the posting blocks of ``terms`` (strings, mapped through
+        the live vocab — segment term ids agree because the vocab grows
+        append-only); True if any segment moved bytes."""
+        tids = self.term_ids(terms)
+        changed = False
+        for seg in self.segments:
+            changed |= seg.hydrate_terms(tids)
+        return changed
+
+    def backfill(self) -> bool:
+        changed = False
+        for seg in self.segments:
+            changed |= seg.backfill()
+        return changed
+
+    def packed(self) -> PackedIndex:
+        """The current (partial or full) view, NRT-fused when this version
+        is a generation. Masked blocks carry tf = 0, so the fuse's
+        recomputed impacts and per-term block ordering match full
+        hydration EXACTLY for every hydrated term."""
+        if self._gen_state is None:
+            return self.segments[0].to_packed()
+        vocab, stats = self._gen_state
+        return combine_segments([s.to_packed() for s in self.segments],
+                                vocab=vocab, stats=stats,
+                                tombstones=self.tombstones)

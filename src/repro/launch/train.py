@@ -23,7 +23,6 @@ import time
 import jax
 import numpy as np
 
-from repro.parallel import compat
 from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
 from repro.configs import get_arch
 from repro.core.object_store import FilesystemBackend, ObjectStore
@@ -31,6 +30,7 @@ from repro.data.lm import LMDataConfig, LMTokenStream
 from repro.ft.faults import FailureInjector, StragglerMonitor, run_with_restarts
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.common import init_params
+from repro.parallel import compat
 from repro.parallel.sharding import tree_named
 from repro.train.optim import OptConfig
 from repro.train.steps import init_train_state, make_train_step

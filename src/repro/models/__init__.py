@@ -4,10 +4,10 @@ with logical sharding axes (repro.models.common)."""
 
 from repro.models.common import (ParamDef, abstract_params, count_params,
                                  init_params)
-from repro.models.transformer import LMConfig, MLAConfig
-from repro.models.moe import MoEConfig
 from repro.models.gnn import GNNConfig
+from repro.models.moe import MoEConfig
 from repro.models.recsys import RecsysConfig
+from repro.models.transformer import LMConfig, MLAConfig
 
 __all__ = ["ParamDef", "abstract_params", "count_params", "init_params",
            "LMConfig", "MLAConfig", "MoEConfig", "GNNConfig", "RecsysConfig"]

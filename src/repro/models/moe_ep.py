@@ -29,8 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.moe import MoEConfig, _expert_ffn
 from repro.models.common import dense
+from repro.models.moe import MoEConfig, _expert_ffn
 
 
 def _ep_local(router, wg, wi, wo, shared, x, *, cfg: MoEConfig,

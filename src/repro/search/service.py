@@ -694,7 +694,8 @@ class PartitionedSearchApp:
             result = self._materialize(hits, raw)
         result["partitions"] = [
             {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
-             "latency_s": r.latency_s, "hedged": r.hedged} for r in records]
+             "backfill_s": r.backfill_s, "latency_s": r.latency_s,
+             "hedged": r.hedged} for r in records]
         if "gen" in payload:
             result["generation"] = payload["gen"]
         slowest = max(records, key=lambda r: r.latency_s, default=None) \
@@ -792,7 +793,8 @@ class PartitionedSearchApp:
                 result = self._materialize(hit_lists[0], braw)
             result["partitions"] = [
                 {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
-                 "latency_s": r.latency_s, "hedged": r.hedged}
+                 "backfill_s": r.backfill_s, "latency_s": r.latency_s,
+                 "hedged": r.hedged}
                 for r in recs_by_body[bi]]
             if gen is not None:
                 result["generation"] = gen

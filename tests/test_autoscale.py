@@ -79,7 +79,7 @@ def test_empty_ledger_reports_zero_not_an_error():
     assert led.dollars_per_1k(0) == 0.0
     assert led.total_dollars == 0.0
     att = led.attribution()
-    assert set(att) == {"serving", "hedge", "idle", "write"}
+    assert set(att) == {"serving", "hedge", "idle", "write", "backfill"}
     assert all(v == 0.0 for v in att.values())
     assert led.queries_per_dollar() == float("inf")
     # spend with zero queries stays NaN: no per-query number honestly

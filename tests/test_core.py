@@ -10,7 +10,7 @@ from repro.core.cost import (CostLedger, Invocation,
 from repro.core.directory import RamDirectory, StoreDirectory
 from repro.core.gateway import Gateway
 from repro.core.object_store import (NoSuchKey, ObjectStore,
-                                     PreconditionFailed)
+                                     ObjectStoreError, PreconditionFailed)
 from repro.core.refresh import AssetCatalog, PublishConflict, refresh_fleet
 from repro.core.runtime import FaaSRuntime, RuntimeConfig
 
@@ -294,3 +294,66 @@ def test_refresh_fleet_invalidates_warm_instances():
     refresh_fleet(rt, "index")
     out, rec = rt.invoke("f", None, t_arrival=rt.clock + 0.5)
     assert out == "v2" and rec.hydrate_s > 0   # re-hydrated new version
+
+
+# -- range-read semantics (the lazy-hydration substrate) ----------------------
+
+
+def test_store_range_read_semantics():
+    """The bounds contract partial hydration leans on: zero-length ranges
+    are legal (empty, still a billed GET), open-ended and over-long ranges
+    clamp to EOF, and a start outside [0, size] fails loudly."""
+    s = ObjectStore()
+    s.put("k", b"0123456789")
+    assert s.get("k", start=0, length=0) == b""
+    assert s.get("k", start=10) == b""            # start == size: legal, empty
+    assert s.get("k", start=4) == b"456789"
+    assert s.get("k", start=8, length=100) == b"89"
+    with pytest.raises(ObjectStoreError):
+        s.get("k", start=-1)
+    with pytest.raises(ObjectStoreError):
+        s.get("k", start=11)                      # strictly past EOF
+    with pytest.raises(NoSuchKey):
+        s.get("missing", start=0, length=1)
+
+
+def test_range_reads_bill_exactly_the_bytes_moved():
+    """A ranged GET must move (and bill) ONLY the requested bytes — the
+    whole-file-then-slice shortcut would make `bytes_out` and the modeled
+    `read_cost_s` lie about what lazy hydration saves."""
+    s = ObjectStore()
+    s.put("big", bytes(1_000_000))
+    g0, b0, t0 = s.stats.gets, s.stats.bytes_out, s.stats.sim_seconds
+    chunk = s.get("big", start=123_456, length=100)
+    assert len(chunk) == 100
+    assert s.stats.gets - g0 == 1
+    assert s.stats.bytes_out - b0 == 100
+    assert s.stats.sim_seconds - t0 == pytest.approx(
+        s.network.read_cost_s(100))
+
+
+def test_backends_agree_on_ranges(tmp_path):
+    """MemoryBackend (slice) and FilesystemBackend (seek) must return the
+    same bytes for every range shape — the store's accounting assumes the
+    backends are interchangeable."""
+    from repro.core.object_store import FilesystemBackend, MemoryBackend
+    data = bytes(range(256)) * 17
+    mem, fs = MemoryBackend(), FilesystemBackend(str(tmp_path))
+    mem.put("x/y", data)
+    fs.put("x/y", data)
+    for start, length in [(0, None), (0, 0), (0, len(data)), (5, 10),
+                          (100, None), (len(data) - 1, 5), (len(data), 0),
+                          (4096, 1)]:
+        assert mem.get("x/y", start, length) == fs.get("x/y", start, length), \
+            (start, length)
+
+
+def test_etag_stable_across_range_reads():
+    """Range reads are reads: the object's version identity (etag/size)
+    must not drift however the object is sliced."""
+    s = ObjectStore()
+    m = s.put("k", b"abcdefghij")
+    for start, length in [(0, 3), (3, None), (1, 100), (0, 0)]:
+        s.get("k", start=start, length=length)
+    after = s.head("k")
+    assert after.etag == m.etag and after.size == m.size

@@ -1,0 +1,312 @@
+"""Lazy hydration: the cold-start demolition layer, inside-out.
+
+* layout — superindex/payload serialization round-trips; the eager segment
+  files are untouched (pre-existing readers stay bit-identical).
+* partial views — only queried terms' blocks move; masked blocks stay
+  non-live; incremental hydration never re-reads; extent coalescing obeys
+  the network model's first-byte break-even.
+* billing — the first query pays header + query-term ranges as hydration
+  (critical path), backfill bills on its own ledger line and never touches
+  query latency; the cache's byte accounting grows partial → full.
+* policy re-derivation — HedgePolicy.from_cold_profile and the
+  autoscaler's cold_overhead_s floor track the measured cold profile.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cache import HydrationCache
+from repro.core.kvstore import KVStore
+from repro.core.object_store import ObjectStore
+from repro.core.refresh import AssetCatalog
+from repro.core.runtime import FaaSRuntime, RuntimeConfig
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.index.builder import (PAYLOAD_FILE, SUPERINDEX_FILE, IndexWriter,
+                                 pack_payload, pack_superindex,
+                                 payload_row_bytes, read_segment,
+                                 unpack_payload_rows, unpack_superindex,
+                                 write_segment)
+from repro.index.hydration import (LazyIndex, SuperIndexMissing,
+                                   coalesce_extents, open_partial_segment)
+from repro.index.tokenizer import tokenize
+from repro.search.searcher import (SearchConfig, hydrate_searcher,
+                                   lazy_hydrate_searcher, make_search_handler)
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(400, vocab=600, seed=31)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    return synth_queries(corpus, 10, seed=33)
+
+
+@pytest.fixture(scope="module")
+def packed(corpus):
+    w = IndexWriter()
+    w.add_many(corpus)
+    return w.pack()
+
+
+def _publish(packed, name="idx", version="v1"):
+    store = ObjectStore()
+    cat = AssetCatalog(store)
+    cat.publish(name, version, write_segment(packed))
+    return store, cat
+
+
+# -- layout -------------------------------------------------------------------
+
+
+def test_superindex_roundtrip(packed):
+    meta, vocab, (off, bmax, dlen, idf) = unpack_superindex(
+        pack_superindex(packed))
+    assert meta.n_docs == packed.meta.n_docs
+    assert meta.n_blocks == packed.meta.n_blocks
+    assert vocab == packed.vocab
+    assert np.array_equal(off, np.asarray(packed.term_offsets))
+    assert np.array_equal(bmax, np.asarray(packed.block_max))
+    assert np.array_equal(dlen, np.asarray(packed.doc_len))
+    assert np.array_equal(idf, np.asarray(packed.idf))
+    with pytest.raises(ValueError):
+        unpack_superindex(b"NOPE" + b"\x00" * 16)
+
+
+def test_payload_roundtrip(packed):
+    blob = pack_payload(packed)
+    B = packed.meta.block
+    assert len(blob) == packed.meta.n_blocks * payload_row_bytes(B)
+    docs, tf = unpack_payload_rows(blob, B)
+    assert np.array_equal(docs, np.asarray(packed.block_docs))
+    assert np.array_equal(tf, np.asarray(packed.block_tf))
+    # a row-aligned slice decodes exactly those rows
+    row = payload_row_bytes(B)
+    d2, t2 = unpack_payload_rows(blob[3 * row:7 * row], B)
+    assert np.array_equal(d2, np.asarray(packed.block_docs)[3:7])
+    assert np.array_equal(t2, np.asarray(packed.block_tf)[3:7])
+
+
+def test_eager_segment_files_unchanged(packed):
+    """The lazy layout is ADDITIVE: read_segment's files and bytes are what
+    they were before PR 7, so eager hydration cost stays bit-identical."""
+    d = write_segment(packed)
+    names = set(d.list())
+    assert {SUPERINDEX_FILE, PAYLOAD_FILE} <= names
+    rs = read_segment(d)
+    assert np.array_equal(np.asarray(rs.block_docs),
+                          np.asarray(packed.block_docs))
+    assert np.array_equal(np.asarray(rs.term_offsets),
+                          np.asarray(packed.term_offsets))
+
+
+def test_coalesce_extents_break_even():
+    assert coalesce_extents([], 10) == []
+    assert coalesce_extents([(0, 4), (20, 30)], 10) == [(0, 4), (20, 30)]
+    assert coalesce_extents([(20, 30), (0, 4)], 16) == [(0, 30)]
+    assert coalesce_extents([(0, 4), (2, 9), (9, 12)], 0) == [(0, 12)]
+    assert coalesce_extents([(5, 5), (0, 3)], 0) == [(0, 3)]  # empty dropped
+
+
+# -- partial views ------------------------------------------------------------
+
+
+def test_partial_segment_hydrates_only_queried_terms(packed, queries):
+    store, cat = _publish(packed)
+    seg = open_partial_segment(cat.open("idx", "v1")[1])
+    assert not seg.full
+    tids = [packed.vocab[t] for t in tokenize(queries[0])
+            if t in packed.vocab]
+    before = seg.bytes_read
+    assert seg.hydrate_terms(tids)
+    moved = seg.bytes_read - before
+    off = np.asarray(packed.term_offsets)
+    want_rows = sum(int(off[t + 1] - off[t]) for t in set(tids))
+    # at least the terms' rows moved; coalescing may pull gap rows too,
+    # but never the whole payload
+    assert moved >= want_rows * payload_row_bytes(packed.meta.block)
+    assert moved < len(pack_payload(packed))
+    for t in tids:
+        assert seg._rows_live[off[t]:off[t + 1]].all()
+    # re-hydrating the same terms is free
+    assert not seg.hydrate_terms(tids)
+    assert seg.bytes_read == moved + before
+
+
+def test_partial_view_masks_absent_terms(packed):
+    _, cat = _publish(packed)
+    seg = open_partial_segment(cat.open("idx", "v1")[1])
+    view = seg.to_packed()
+    dead = ~seg._rows_live
+    assert (np.asarray(view.block_docs)[dead] == packed.meta.n_docs).all()
+    assert (np.asarray(view.block_tf)[dead] == 0).all()
+    # header arrays are the TRUE full tables from the superindex
+    assert np.array_equal(np.asarray(view.block_max),
+                          np.asarray(packed.block_max))
+    assert np.array_equal(np.asarray(view.idf), np.asarray(packed.idf))
+
+
+def test_backfill_reaches_full_bit_identical(packed, queries):
+    _, cat = _publish(packed)
+    seg = open_partial_segment(cat.open("idx", "v1")[1])
+    seg.hydrate_terms([packed.vocab[t] for t in tokenize(queries[0])
+                       if t in packed.vocab])
+    assert seg.backfill()
+    assert seg.full
+    assert np.array_equal(seg.block_docs, np.asarray(packed.block_docs))
+    assert np.array_equal(seg.block_tf, np.asarray(packed.block_tf))
+    assert not seg.backfill()          # idempotent once full
+
+
+def test_missing_superindex_raises(packed):
+    store, cat = _publish(packed)
+    _, directory = cat.open("idx", "v1")
+    store.delete(directory.prefix + SUPERINDEX_FILE)
+    with pytest.raises(SuperIndexMissing):
+        open_partial_segment(cat.open("idx", "v1")[1])
+
+
+def test_lazy_cold_get_count_is_constant(packed, queries):
+    """The cold-start win is GET-count, not just bytes: first-byte latency
+    dominates, so the partial path must issue a small constant number of
+    range GETs (superindex + coalesced payload spans), not one per term or
+    per 1MiB block."""
+    store, cat = _publish(packed)
+    cfg = SearchConfig(sim_exec_s=0.002)
+    g0 = store.stats.gets
+    entry, _ = lazy_hydrate_searcher(cat, "idx", cfg, "v1")
+    entry.ensure_queries(list(queries))
+    lazy_gets = store.stats.gets - g0
+    assert lazy_gets <= 4, lazy_gets
+
+
+# -- billing ------------------------------------------------------------------
+
+
+def test_lazy_cold_hydration_beats_full(packed, queries):
+    _, cat = _publish(packed)
+    cfg = SearchConfig(sim_exec_s=0.002)
+    _, full_s = hydrate_searcher(cat, "idx", cfg, "v1")
+    entry, header_s = lazy_hydrate_searcher(cat, "idx", cfg, "v1")
+    _, term_s = entry.ensure_queries([queries[0]])
+    assert header_s + term_s < full_s / 3
+
+
+def test_handler_bills_backfill_off_critical_path(packed, corpus, queries):
+    _, cat = _publish(packed)
+    cfg = SearchConfig(sim_exec_s=0.002, lazy_hydration=True)
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("s", make_search_handler(cat, KVStore(), "idx", cfg))
+    _, rec = rt.invoke("s", {"q": queries[0], "fetch_docs": False})
+    assert rec.cold and rec.hydrate_s > 0 and rec.backfill_s > 0
+    # latency excludes backfill EXACTLY: provision + hydrate + exec only
+    assert rec.latency_s == pytest.approx(
+        rt.config.provision_s + rec.hydrate_s + rec.exec_s, abs=1e-12)
+    assert rt.ledger.backfill_invocations == 1
+    assert rt.ledger.backfill_gb_seconds > 0
+    att = rt.ledger.attribution()
+    assert att["backfill"] > 0
+    assert sum(att.values()) == pytest.approx(rt.ledger.compute_dollars)
+    # the instance stays busy through the backfill (it runs SOMEWHERE)
+    inst = rt._instances[0]
+    assert inst.busy_until == pytest.approx(
+        rec.t_done + rec.backfill_s, abs=1e-12)
+    # invocation 2: full after backfill — warm, no hydration, no backfill
+    _, rec2 = rt.invoke("s", {"q": queries[1], "fetch_docs": False},
+                        t_arrival=rt.clock + 1)
+    assert not rec2.cold and rec2.hydrate_s == 0 and rec2.backfill_s == 0
+    assert rt.ledger.backfill_invocations == 1
+
+
+def test_lazy_results_match_eager_bitwise(packed, queries):
+    _, cat = _publish(packed)
+    eager_cfg = SearchConfig(sim_exec_s=0.002)
+    lazy_cfg = SearchConfig(sim_exec_s=0.002, lazy_hydration=True)
+    rt_e, rt_l = FaaSRuntime(RuntimeConfig()), FaaSRuntime(RuntimeConfig())
+    rt_e.register("s", make_search_handler(cat, KVStore(), "idx", eager_cfg))
+    rt_l.register("s", make_search_handler(cat, KVStore(), "idx", lazy_cfg))
+    for q in queries:
+        re_, _ = rt_e.invoke("s", {"q": q, "fetch_docs": False})
+        rl_, _ = rt_l.invoke("s", {"q": q, "fetch_docs": False})
+        assert re_["ids"] == rl_["ids"]
+        assert [np.float32(s).view(np.uint32) for s in re_["scores"]] == \
+               [np.float32(s).view(np.uint32) for s in rl_["scores"]]
+
+
+def test_handler_falls_back_to_eager_for_old_segments(packed, queries):
+    store, cat = _publish(packed)
+    _, directory = cat.open("idx", "v1")
+    store.delete(directory.prefix + SUPERINDEX_FILE)
+    store.delete(directory.prefix + PAYLOAD_FILE)
+    cfg = SearchConfig(sim_exec_s=0.002, lazy_hydration=True)
+    rt = FaaSRuntime(RuntimeConfig())
+    rt.register("s", make_search_handler(cat, KVStore(), "idx", cfg))
+    res, rec = rt.invoke("s", {"q": queries[0], "fetch_docs": False})
+    assert rec.cold and rec.hydrate_s > 0 and rec.backfill_s == 0
+    assert res["ids"]
+
+
+def test_cache_note_backfill_grows_entry_bytes():
+    cache = HydrationCache(1 << 30)
+
+    class Asset:
+        nbytes = 100
+    a = Asset()
+    cache.get_or_hydrate("x", "v1", lambda: (a, 0.01))
+    assert cache.used_bytes == 100
+    assert cache.stats.hydrate_seconds == pytest.approx(0.01)
+    cache.note_hydration(0.02)
+    assert cache.stats.hydrate_seconds == pytest.approx(0.03)
+    assert cache.stats.backfill_seconds == 0.0
+    a.nbytes = 5000
+    cache.note_backfill("x", "v1", 0.5)
+    assert cache.stats.backfill_seconds == pytest.approx(0.5)
+    assert cache.stats.hydrate_seconds == pytest.approx(0.03)  # untouched
+    assert cache.used_bytes == 5000
+    cache.note_backfill("x", "v1", 0.1, nbytes=7000)   # explicit override
+    assert cache.used_bytes == 7000
+    cache.note_backfill("ghost", "v1", 0.1)            # absent entry: time only
+    assert cache.stats.backfill_seconds == pytest.approx(0.7)
+
+
+# -- policy re-derivation -----------------------------------------------------
+
+
+def test_hedge_policy_from_cold_profile():
+    from repro.core.partition import HedgePolicy
+    # full profile (cold ~0.47s, warm ~25ms) → more conservative than 2.0
+    full = HedgePolicy.from_cold_profile(0.47, 0.025)
+    assert full.scale == pytest.approx(1 + 0.47 / 0.25)
+    # lazy profile (cold ~0.2s) → more eager: backups are cheap to be
+    # wrong about when cold legs are cheap
+    lazy = HedgePolicy.from_cold_profile(0.20, 0.025)
+    assert lazy.scale < full.scale
+    assert HedgePolicy.from_cold_profile(100.0, 0.001).scale == 4.0  # clamp hi
+    assert HedgePolicy.from_cold_profile(0.0, 1.0).scale == 1.25     # clamp lo
+    # degenerate warm history: fall back to defaults
+    assert HedgePolicy.from_cold_profile(0.2, 0.0).scale == 2.0
+    assert HedgePolicy.from_cold_profile(0.2, float("nan")).scale == 2.0
+    # passthrough kwargs survive
+    assert HedgePolicy.from_cold_profile(0.2, 0.025, window=64).window == 64
+
+
+def test_autoscale_floor_tracks_cold_profile():
+    from repro.core.autoscale import AutoscalePolicy, FleetController
+    from repro.core.partition import ScatterGather
+
+    def make(policy):
+        rt = FaaSRuntime(RuntimeConfig())
+        rt.register("p0", lambda cache, payload: (payload, 0.001))
+        sg = ScatterGather(rt, [["p0"]])
+        return FleetController(rt, sg, [lambda: lambda c, p: (p, 0.001)],
+                               policy)
+    default = make(AutoscalePolicy())
+    assert default._overhead_threshold(["p0"]) == pytest.approx(0.150 / 2)
+    lazy = make(AutoscalePolicy(cold_overhead_s=0.2))
+    assert lazy._overhead_threshold(["p0"]) == pytest.approx(0.1)
+    # explicit up_overhead_s still wins over everything
+    fixed = make(AutoscalePolicy(cold_overhead_s=0.2, up_overhead_s=0.03))
+    assert fixed._overhead_threshold(["p0"]) == pytest.approx(0.03)

@@ -356,3 +356,70 @@ def test_long_query_truncation_keeps_high_idf_terms(corpus, packed):
     dropped = [t for t in all_ids if t not in kept]
     assert dropped, "query should overflow max_terms"
     assert min(packed.idf[kept]) >= max(packed.idf[dropped]) - 1e-6
+
+
+@pytest.mark.parametrize("accumulator", ["dense", "pruned"])
+def test_partial_hydration_bit_identical_under_nrt(accumulator):
+    """Lazy partial-hydration views under an NRT generation (base + delta +
+    tombstones): with only the QUERY terms' posting blocks hydrated, the
+    fused view must rank bit-identically to full hydration — masked blocks
+    carry tf=0 and land after the live blocks of their term in
+    ``combine_segments``'s impact re-sort, so query terms' rows sit at
+    identical positions. Backfill then reproduces the full index
+    bit-for-bit."""
+    import numpy as np
+
+    from repro.core.object_store import ObjectStore
+    from repro.core.refresh import AssetCatalog
+    from repro.index.builder import (IndexWriter, combine_segments,
+                                     compute_global_stats, extend_vocab,
+                                     global_vocab, read_segment, update_stats,
+                                     write_segment)
+    from repro.index.hydration import LazyIndex, open_partial_segment
+    from repro.index.tokenizer import tokenize
+
+    docs = synth_corpus(240, vocab=400, seed=5)
+    base_docs, new_docs = docs[:180], docs[180:]
+    deleted = {docs[3][0], docs[100][0], docs[200][0]}
+
+    stats = compute_global_stats(base_docs)
+    vocab = global_vocab(stats)
+    w = IndexWriter(global_stats=stats, vocab=vocab)
+    w.add_many(base_docs)
+    base = w.pack()
+    vocab2 = extend_vocab(vocab, (t for _, txt in new_docs
+                                  for t in tokenize(txt)))
+    delta = IndexWriter.delta(new_docs, stats, vocab=vocab2)
+    live_stats = dict(stats, df=dict(stats["df"]))
+    by_id = dict(docs)
+    for _, t in new_docs:
+        update_stats(live_stats, t, sign=1)
+    for e in deleted:
+        update_stats(live_stats, by_id[e], sign=-1)
+    dead = [i for i, (e, _) in enumerate(base_docs + new_docs)
+            if e in deleted]
+    combined = combine_segments([base, delta], vocab=vocab2,
+                                stats=live_stats, tombstones=dead)
+
+    store = ObjectStore()
+    cat = AssetCatalog(store)
+    cat.publish_segment("idx", "base", write_segment(base))
+    cat.publish_segment("idx", "delta", write_segment(delta))
+    lazy = LazyIndex(
+        [open_partial_segment(cat.open_segment("idx", "base")),
+         open_partial_segment(cat.open_segment("idx", "delta"))],
+        vocab=vocab2, stats=live_stats, tombstones=dead)
+    assert lazy.state == "partial"
+
+    queries = synth_queries(docs, 15, seed=6)
+    lazy.ensure_terms({t for q in queries for t in tokenize(q)})
+    cfg = SearchConfig(max_blocks=64, k=K, accumulator=accumulator)
+    full_s = Searcher(combined, cfg)
+    _bitwise_equal_searches(full_s, Searcher(lazy.packed(), cfg), queries)
+
+    lazy.backfill()
+    assert lazy.state == "full"
+    for seg, eager in zip(lazy.segments, (base, delta)):
+        assert np.array_equal(seg.block_docs, np.asarray(eager.block_docs))
+        assert np.array_equal(seg.block_tf, np.asarray(eager.block_tf))
+    _bitwise_equal_searches(full_s, Searcher(lazy.packed(), cfg), queries)
