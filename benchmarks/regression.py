@@ -6,9 +6,9 @@
 Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
-with ``--fast --det --seed 0 --only b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13
---json BENCH_baseline.json`` whenever a deliberate perf change moves a
-metric).
+with ``--fast --det --seed 0 --only
+b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13,b14 --json BENCH_baseline.json``
+whenever a deliberate perf change moves a metric).
 
 Gated metrics (lower is better for all of them):
 
@@ -24,7 +24,15 @@ Gated metrics (lower is better for all of them):
   a layout change that quietly re-fattens the partial read set must
   trip the lazy rows, one that slows eager streaming trips the full
   rows) or backfill GB·s regression > 15%
-* B7/B11/B12/B13 $-and-GB·s   — fail on a regression > 15%
+* B14 hybrid-fleet latencies  — fail on a per-mode p99 regression > 25%
+  or on the dense-vs-sparse p99 ratio drifting past 25% (the "dense is
+  not a second-class tier" claim)
+* B7/B11/B12/B13/B14 $-and-GB·s — fail on a regression > 15%
+
+B14 also carries three exactness bits (sparse-vs-oracle, dense uint32
+bitwise, hybrid fused-score) gated by PARITY_GATES: the PR value must be
+exactly 1 — parity is pass/fail, a "25% regression" of a bit is
+meaningless.
 
 A tiny absolute floor per metric class absorbs float jitter without hiding
 real regressions (a forgotten merge-cost term or a doubled invocation count
@@ -76,6 +84,23 @@ GATES: list[tuple[str, float, float]] = [
     ("b13_full_cold_latency_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b13_lazy_cold_latency_p50_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b13_backfill_gb_s", COST_LIMIT, COST_FLOOR),
+    # B14 hybrid fleet: per-mode tails + cost, and the cross-tier p99
+    # ratio (dimensionless — floor is a ratio tick, not a ms floor)
+    ("b14_sparse_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b14_dense_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b14_hybrid_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b14_dense_p99_vs_sparse", LATENCY_LIMIT, 0.05),
+    ("b14_sparse_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("b14_dense_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("b14_hybrid_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+]
+
+# exactness bits: the PR value must be exactly 1 (baseline drift is
+# irrelevant — these are correctness claims, not perf metrics)
+PARITY_GATES: list[str] = [
+    "b14_sparse_topk_equals_oracle",
+    "b14_dense_bitwise_equal",
+    "b14_hybrid_topk_equals_oracle",
 ]
 
 
@@ -102,6 +127,19 @@ def compare(baseline: dict[str, float], pr: dict[str, float]
         rows.append({"name": name, "base": base, "pr": cur,
                      "delta_pct": delta_pct, "limit_pct": limit * 100,
                      "status": "FAIL" if bad else "ok"})
+    for name in PARITY_GATES:
+        if name not in pr:
+            rows.append({"name": name, "status": "MISSING",
+                         "base": baseline.get(name), "pr": None,
+                         "delta_pct": None, "limit_pct": 0.0})
+            failed = True
+            continue
+        cur = float(pr[name])
+        bad = cur != 1.0
+        failed = failed or bad
+        rows.append({"name": name, "base": baseline.get(name), "pr": cur,
+                     "delta_pct": None, "limit_pct": 0.0,
+                     "status": "FAIL" if bad else "ok"})
     return rows, failed
 
 
@@ -113,7 +151,10 @@ def render(rows: list[dict], markdown: bool) -> str:
         body.append([r["name"],
                      "—" if r["base"] is None else f"{r['base']:g}",
                      "—" if r["pr"] is None else f"{r['pr']:g}",
-                     dp, f"+{r['limit_pct']:.0f}%", r["status"]])
+                     dp,
+                     "==1" if r["limit_pct"] == 0.0
+                     else f"+{r['limit_pct']:.0f}%",
+                     r["status"]])
     if markdown:
         lines = ["| " + " | ".join(head) + " |",
                  "|" + "---|" * len(head)]

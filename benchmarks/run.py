@@ -36,6 +36,11 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
       off the critical path on its own ledger line) — cold hydration p50s,
       end-to-end cold latency, oracle + bitwise parity, re-derived
       hedge/provision constants (regression-gated under --det)
+  B14 hybrid retrieval: sparse vs dense vs hybrid on ONE skewed fleet
+      (dense-vector tier next to BM25 on the same partitions) — per-mode
+      p50/p99 and $/1k over the identical burst schedule, dense scores
+      uint32-bit-identical to the kernel reference oracle, hybrid RRF
+      fusion equal to the two-oracle fusion (regression-gated)
 
 Determinism: every RNG is seeded per-benchmark from ``--seed`` (so the
 bench-smoke gate and the CI regression diff don't depend on which
@@ -189,6 +194,7 @@ def bench_index_size(n_docs: int) -> None:
 
 def bench_partitions(n_docs: int, n_queries: int) -> None:
     print("\nB6: document partitioning (paper §3 scale-out path)")
+    from repro.core.partition import FleetSpec
     from repro.core.runtime import RuntimeConfig
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.service import build_partitioned_search_app
@@ -196,9 +202,9 @@ def bench_partitions(n_docs: int, n_queries: int) -> None:
     docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
     queries = synth_queries(docs, n_queries, seed=3)
     for p in (1, 2, 4):
-        app = build_partitioned_search_app(
-            docs, n_parts=p, runtime_config=RuntimeConfig(),
-            search_config=_fleet_search_cfg())
+        app = build_partitioned_search_app(docs, FleetSpec(
+            n_parts=p, runtime_config=RuntimeConfig(),
+            search_config=_fleet_search_cfg()))
         lats = []
         for q in queries:
             r = app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
@@ -219,15 +225,16 @@ def bench_batched(n_docs: int, n_queries: int) -> None:
     so per-query cost amortizes invocation + gateway overhead — the knob
     the gateway uses to absorb concurrent traffic."""
     print("\nB6b: batched (Q>1) handler invocations vs one-at-a-time")
+    from repro.core.partition import FleetSpec
     from repro.core.runtime import RuntimeConfig
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.service import build_partitioned_search_app
 
     docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
     queries = synth_queries(docs, n_queries, seed=4)
-    app = build_partitioned_search_app(
-        docs, n_parts=2, runtime_config=RuntimeConfig(),
-        search_config=_fleet_search_cfg())
+    app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=2, runtime_config=RuntimeConfig(),
+        search_config=_fleet_search_cfg()))
     for Q in (1, 8):
         batches = [queries[i:i + Q] for i in range(0, len(queries), Q)]
         batches = [b for b in batches if len(b) == Q]
@@ -269,7 +276,7 @@ def bench_hedged_tail(n_docs: int, n_queries: int) -> None:
     (tiny, warm) backup legs' systematic cost.
     """
     print("\nB7: hedged scatter legs (R=2) vs unhedged (R=1), 1 cold partition")
-    from repro.core.partition import HedgePolicy
+    from repro.core.partition import FleetSpec, HedgePolicy, ReplicationSpec
     from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.oracle import OracleSearcher
@@ -282,10 +289,11 @@ def bench_hedged_tail(n_docs: int, n_queries: int) -> None:
     kill_every = 8
     p99s, results = {}, {}
     for replicas, hedge in ((1, None), (2, HedgePolicy())):
-        app = build_partitioned_search_app(
-            docs, n_parts=4, replicas=replicas, hedge=hedge,
+        app = build_partitioned_search_app(docs, FleetSpec(
+            n_parts=4,
+            replication=ReplicationSpec(replicas=replicas, hedge=hedge),
             runtime_config=RuntimeConfig(),
-            search_config=_fleet_search_cfg())
+            search_config=_fleet_search_cfg()))
         app.warm()
         for q in warmup:                   # unmeasured: hydrate + history
             app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
@@ -355,7 +363,7 @@ def bench_autoscale(n_docs: int, n_queries: int) -> None:
     """
     print("\nB10: autoscaled fleet vs fixed R=1 / R=2, bursty diurnal load")
     from repro.core.autoscale import AutoscalePolicy
-    from repro.core.partition import HedgePolicy
+    from repro.core.partition import FleetSpec, HedgePolicy, ReplicationSpec
     from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.oracle import OracleSearcher
@@ -396,11 +404,12 @@ def bench_autoscale(n_docs: int, n_queries: int) -> None:
     timer_s = 15.0
 
     def run_fleet(replicas: int, hedge, policy):
-        app = build_partitioned_search_app(
-            docs, n_parts=n_parts, replicas=replicas, hedge=hedge,
-            autoscale=policy,
+        app = build_partitioned_search_app(docs, FleetSpec(
+            n_parts=n_parts,
+            replication=ReplicationSpec(replicas=replicas, hedge=hedge,
+                                        autoscale=policy),
             runtime_config=RuntimeConfig(idle_timeout_s=60.0),
-            search_config=_fleet_search_cfg())
+            search_config=_fleet_search_cfg()))
         app.warm()
         # warm-latency history for the policies; 2 q/s stays under the
         # demand trigger so the warmup itself doesn't read as a burst
@@ -544,6 +553,7 @@ def bench_nrt(n_docs: int, n_queries: int) -> None:
     Reproduce: PYTHONPATH=src python -m benchmarks.run --fast --det --only b11
     """
     print("\nB11: NRT indexing — fixed-QPS traffic across delta commits")
+    from repro.core.partition import FleetSpec
     from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.oracle import OracleSearcher
@@ -560,9 +570,9 @@ def bench_nrt(n_docs: int, n_queries: int) -> None:
     warmup, measured = queries[:n_warm], queries[n_warm:]
     probes = queries[:12]                   # parity probes after each commit
 
-    app = build_partitioned_search_app(
-        init, n_parts=2, runtime_config=RuntimeConfig(),
-        search_config=_fleet_search_cfg())
+    app = build_partitioned_search_app(init, FleetSpec(
+        n_parts=2, runtime_config=RuntimeConfig(),
+        search_config=_fleet_search_cfg()))
     app.warm()
     for q in warmup:
         app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
@@ -675,7 +685,8 @@ def bench_skew(n_docs: int, n_queries: int) -> None:
     print("\nB12: skew-aware serving — adaptive window + heterogeneous fleet")
     from repro.core.autoscale import AutoscalePolicy
     from repro.core.gateway import WindowPolicy
-    from repro.core.partition import HedgePolicy
+    from repro.core.partition import (FleetSpec, GatewaySpec, HedgePolicy,
+                                      IndexSpec, ReplicationSpec)
     from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
     from repro.data.corpus import synth_corpus, synth_queries
     from repro.search.oracle import OracleSearcher
@@ -713,11 +724,15 @@ def bench_skew(n_docs: int, n_queries: int) -> None:
         cfg = _dc.replace(cfg, sim_exec_per_kdoc_s=0.1)
 
     def run_fleet(replicas: int, policy: AutoscalePolicy):
-        app = build_partitioned_search_app(
-            init, n_parts=n_parts, replicas=replicas, hedge=HedgePolicy(),
-            autoscale=policy, window=window, partition_weights=weights,
+        app = build_partitioned_search_app(init, FleetSpec(
+            n_parts=n_parts,
+            replication=ReplicationSpec(replicas=replicas,
+                                        hedge=HedgePolicy(),
+                                        autoscale=policy),
+            gateway=GatewaySpec(window=window),
+            index=IndexSpec(partition_weights=weights),
             runtime_config=RuntimeConfig(idle_timeout_s=60.0),
-            search_config=cfg)
+            search_config=cfg))
         app.warm()
         for q in queries[:8]:               # warm-latency history
             app.query(q, k=10, t_arrival=app.runtime.clock + 0.5,
@@ -1105,6 +1120,124 @@ def bench_cold_start(n_docs: int, n_queries: int) -> None:
          "HedgePolicy.from_cold_profile(cold, warm p50)")
 
 
+def bench_hybrid(n_docs: int, n_queries: int) -> None:
+    """B14: hybrid retrieval — sparse vs dense vs hybrid on ONE fleet.
+
+    One skewed fleet (B12's [8,1,1,1] ``partition_weights``) carries a
+    dense-vector tier next to BM25 on the SAME partitions, functions and
+    manifests (``IndexSpec.vector``). The identical burst arrival schedule
+    (~100 QPS through the gateway's adaptive window) is replayed once per
+    ``mode`` — ``sparse``, ``dense``, ``hybrid`` — so the three rows below
+    compare tiers, not fleets: same instances, same skew, same windows.
+
+    Per mode: gateway p50/p99 and $/1k-queries (ledger-snapshot deltas per
+    phase). Gates (regression-rowed under --det):
+
+    * dense fleet scores are uint32-BIT-identical to the full-corpus
+      ``DenseOracleSearcher`` (the jitted ``dot_topk_batch_ref``) — the
+      per-partition Pallas kernel path vs one brute-force scan;
+    * hybrid fused top-k equals ``hybrid_oracle_fuse`` over the two
+      oracles' rankings — ids AND fused RRF scores exactly;
+    * dense p99 ≤ 2× sparse p99 at equal fleet shape (one extra device
+      call per invocation, not a new latency regime).
+
+    Reproduce: PYTHONPATH=src python -m benchmarks.run --fast --det --only b14
+    """
+    print("\nB14: hybrid retrieval — sparse vs dense vs hybrid, one fleet")
+    import dataclasses as _dc
+
+    from repro.core.gateway import WindowPolicy
+    from repro.core.partition import (FleetSpec, GatewaySpec, IndexSpec,
+                                      VectorSpec)
+    from repro.core.runtime import RuntimeConfig, nearest_rank_percentiles
+    from repro.data.corpus import hash_embedder, synth_corpus, synth_queries
+    from repro.search.oracle import (DenseOracleSearcher, OracleSearcher,
+                                     hybrid_oracle_fuse)
+    from repro.search.service import build_partitioned_search_app
+
+    n_parts, dim, k = 4, 16, 10
+    weights = [8.0, 1.0, 1.0, 1.0]          # B12's Zipf-ish head/tail skew
+    docs = synth_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    queries = synth_queries(docs, n_queries, seed=9)
+    embed = hash_embedder(dim)
+
+    cfg = _fleet_search_cfg()
+    if cfg is not None:                     # B12's skew model: eval time
+        cfg = _dc.replace(cfg, sim_exec_per_kdoc_s=0.1)   # ~ partition size
+    window = WindowPolicy(max_window_s=0.08, target_batch=8, sparse_qps=2.0,
+                          p99_budget_s=2.0)
+    app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=n_parts,
+        gateway=GatewaySpec(window=window),
+        index=IndexSpec(partition_weights=weights,
+                        vector=VectorSpec(dim=dim, embedder=embed)),
+        runtime_config=RuntimeConfig(),
+        search_config=cfg))
+    app.warm()                              # warms BOTH tiers (hybrid ping)
+    for q in queries[:4]:                   # per-mode compile + hydrate,
+        for mode in ("sparse", "dense", "hybrid"):   # off the measured clock
+            app.query(q, k=k, mode=mode, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+
+    # the SAME burst offsets replayed per mode (B12's window regime)
+    rng = np.random.default_rng(SEED + 14)
+    n_meas = 3 * len(queries)
+    offsets = np.cumsum(0.01 * rng.uniform(0.9, 1.1, size=n_meas))
+
+    led = app.runtime.ledger
+    p99s, results = {}, {}
+    for mode in ("sparse", "dense", "hybrid"):
+        t0 = app.runtime.clock + 2.0
+        dollars0 = led.total_dollars
+        handles = [app.submit(queries[i % len(queries)], k=k, mode=mode,
+                              t_arrival=t0 + float(off), fetch_docs=False)
+                   for i, off in enumerate(offsets)]
+        app.flush()
+        lats = [h.response.latency_s for h in handles]
+        results[mode] = [(tuple(h.response.body["ext_ids"]),
+                          tuple(h.response.body["scores"]))
+                         for h in handles]
+        p = nearest_rank_percentiles(lats, qs=(0.5, 0.99))
+        p99s[mode] = p[0.99]
+        emit(f"b14_{mode}_gw_p50_ms", round(p[0.5] * 1e3, 1), "ms")
+        emit(f"b14_{mode}_gw_p99_ms", round(p[0.99] * 1e3, 1), "ms",
+             f"{n_meas} queries, same fleet + schedule per mode")
+        emit(f"b14_{mode}_dollars_per_1k_q",
+             round((led.total_dollars - dollars0) / n_meas * 1000.0, 6), "$")
+    emit("b14_dense_p99_vs_sparse", round(p99s["dense"] / p99s["sparse"], 2),
+         "x", "target: <= 2 (one extra device call, same fleet shape)")
+    emit("b14_hybrid_p99_vs_sparse",
+         round(p99s["hybrid"] / p99s["sparse"], 2), "x", "both tiers/query")
+
+    # oracle parity, over the live corpus in fleet partition order
+    corpus = app.indexer.live_corpus()
+    so = OracleSearcher(corpus)
+    do = DenseOracleSearcher(corpus, embed)
+    sparse_ok = dense_bits_ok = hybrid_ok = True
+    for i in range(n_meas):
+        q = queries[i % len(queries)]
+        s_want = so.search(q, k=app.search_k)
+        d_want = do.search(q, k=app.search_k)
+        ids, scores = results["sparse"][i]
+        sparse_ok = sparse_ok and list(ids) == [so.doc_ids[d]
+                                                for d, _ in s_want[:k]]
+        ids, scores = results["dense"][i]
+        dense_bits_ok = dense_bits_ok and (
+            list(ids) == [do.doc_ids[d] for d, _ in d_want[:k]]
+            and [np.float32(s).view(np.uint32) for s in scores]
+            == [np.float32(v).view(np.uint32) for _, v in d_want[:k]])
+        ids, scores = results["hybrid"][i]
+        fused = hybrid_oracle_fuse(s_want, d_want, k)
+        hybrid_ok = hybrid_ok and (
+            list(ids) == [so.doc_ids[d] for d, _ in fused]
+            and list(scores) == [v for _, v in fused])
+    emit("b14_sparse_topk_equals_oracle", int(sparse_ok), "bool")
+    emit("b14_dense_bitwise_equal", int(dense_bits_ok), "bool",
+         "fleet kernel scores == dot_topk_batch_ref oracle, uint32 views")
+    emit("b14_hybrid_topk_equals_oracle", int(hybrid_ok), "bool",
+         "RRF fusion of the two oracles' rankings, ids + fused scores")
+
+
 def main() -> None:
     global DET, SEED
     ap = argparse.ArgumentParser()
@@ -1142,6 +1275,7 @@ def main() -> None:
         "b11": lambda: bench_nrt(min(n_docs, 6_000), min(n_q, 120)),
         "b12": lambda: bench_skew(min(n_docs, 2_000), min(n_q, 100)),
         "b13": lambda: bench_cold_start(min(n_docs, 8_000), min(n_q, 12)),
+        "b14": lambda: bench_hybrid(min(n_docs, 1_500), min(n_q, 48)),
     }
     only = None
     if args.only:

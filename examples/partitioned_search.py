@@ -23,6 +23,7 @@ scoring and packing each have exactly one implementation.
 import jax
 import jax.numpy as jnp
 
+from repro.core.partition import FleetSpec, ReplicationSpec
 from repro.data.corpus import synth_corpus, synth_queries
 from repro.parallel import compat
 from repro.search.bm25 import encode_queries
@@ -37,7 +38,7 @@ oracle = OracleSearcher(docs)
 
 # -- 1. fleet-level scatter-gather ------------------------------------------------
 print(f"== fleet-level: {N_PARTS} Lambda functions, scatter-gather ==")
-app = build_partitioned_search_app(docs, n_parts=N_PARTS)
+app = build_partitioned_search_app(docs, FleetSpec(n_parts=N_PARTS))
 
 for q in queries:
     r = app.query(q, k=10)
@@ -66,8 +67,8 @@ print(f"  fleet={app.runtime.fleet_size}, warm={app.runtime.warm_fraction():.0%}
 print(f"\n== replicated: {N_PARTS} partitions x 2 replicas, hedged legs ==")
 from repro.core.partition import HedgePolicy  # noqa: E402
 
-happ = build_partitioned_search_app(docs, n_parts=N_PARTS, replicas=2,
-                                    hedge=HedgePolicy())
+happ = build_partitioned_search_app(docs, FleetSpec(
+    n_parts=N_PARTS, replication=ReplicationSpec(replicas=2, hedge=HedgePolicy())))
 happ.warm()
 for q in queries:                                 # warm traffic → policy history
     happ.query(q, k=10, t_arrival=happ.runtime.clock + 0.05, fetch_docs=False)

@@ -27,13 +27,21 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Sequence
+from typing import TYPE_CHECKING, Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.runtime import nearest_rank_percentiles
+
+if TYPE_CHECKING:   # type-only: autoscale/gateway/index/search import upward
+    from repro.core.autoscale import AutoscalePolicy
+    from repro.core.gateway import WindowPolicy
+    from repro.core.object_store import Backend
+    from repro.core.runtime import RuntimeConfig
+    from repro.index.builder import MergePolicy
+    from repro.search.searcher import SearchConfig
 
 
 def local_topk(scores: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
@@ -213,6 +221,137 @@ def _merge_hits(per_part: list[dict], k: int) -> list[PartitionHit]:
     return hits[:k]
 
 
+# Reciprocal Rank Fusion constant (Cormack et al. '09's k=60): large enough
+# that a doc ranked ~60 in one tier cannot outvote a doc ranked first in the
+# other, small enough that agreement across tiers still dominates.
+RRF_C = 60.0
+
+
+def rrf_fuse(rankings: Sequence[Sequence[Any]], k: int, *,
+             c: float = RRF_C) -> list[tuple[Any, float]]:
+    """Reciprocal Rank Fusion over ranked key lists →
+    top-k ``[(key, score)]`` with ``score = Σ_tiers 1 / (c + rank)``
+    (rank is 1-based; a key absent from a tier contributes nothing).
+
+    Rank-only fusion is what makes hybrid merge sound across tiers whose
+    scores live on incomparable scales (BM25 impacts vs inner products).
+    Deterministic by construction: ties break ascending on the key, and a
+    key's per-tier contributions accumulate in tier order — the fleet
+    coordinator and the oracle fusion call THIS function with tiers in the
+    same (sparse, dense) order, so their fused floats are bit-identical,
+    not merely close."""
+    scores: dict[Any, float] = {}
+    for ranking in rankings:
+        for rank, key in enumerate(ranking, start=1):
+            scores[key] = scores.get(key, 0.0) + 1.0 / (c + rank)
+    fused = sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
+    return fused[:k]
+
+
+# -- the fleet's typed assembly spec ------------------------------------------
+#
+# ``build_partitioned_search_app`` grew one keyword per PR until it was a
+# 12-kwarg sprawl; these dataclasses are the redesigned surface. Groups
+# mirror the fleet's actual seams — who serves (replication), how requests
+# enter (gateway), what is served (index, including the dense-vector tier),
+# and the runtime/search knobs. Validation happens ONCE at construction
+# (``FleetSpec.__post_init__``), not scattered through assembly code.
+# Imports are type-only (``TYPE_CHECKING``): core.autoscale imports this
+# module, so the spec duck-types its policy fields at runtime.
+
+
+@dataclasses.dataclass
+class ReplicationSpec:
+    """Who serves each partition: pool count, hedging, autoscaling."""
+
+    replicas: int = 1
+    # HedgePolicy, or a float shorthand for a fixed after_s threshold
+    hedge: "HedgePolicy | float | None" = None
+    # AutoscalePolicy, or True for defaults (resolved at assembly — the
+    # policy class lives in core.autoscale, which imports this module)
+    autoscale: "AutoscalePolicy | bool | None" = None
+
+    def __post_init__(self) -> None:
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if isinstance(self.hedge, (int, float)) and not isinstance(
+                self.hedge, bool):
+            self.hedge = HedgePolicy(after_s=float(self.hedge))
+
+
+@dataclasses.dataclass
+class GatewaySpec:
+    """How requests enter: admission window + scatter routing."""
+
+    window: "WindowPolicy | None" = None
+    routing: str | None = None     # None → "aware" iff autoscaling, "static" else
+
+    def __post_init__(self) -> None:
+        if self.routing not in (None, "static", "aware"):
+            raise ValueError("routing must be None, 'static' or 'aware', "
+                             f"got {self.routing!r}")
+
+
+@dataclasses.dataclass
+class VectorSpec:
+    """The dense-vector tier: embedding shape + storage + embedder.
+
+    ``embedder`` maps text → (dim,) f32; None resolves to the deterministic
+    ``repro.data.corpus.hash_embedder(dim)`` at assembly. The same embedder
+    derives doc vectors at indexing time and query vectors at the
+    coordinator, so a text query needs no client-side vector."""
+
+    dim: int = 16
+    dtype: str = "float32"         # "float32" | "int8" (scalar-quantized)
+    embedder: "Callable[[str], Any] | None" = None
+
+    def __post_init__(self) -> None:
+        if self.dim < 1:
+            raise ValueError(f"vector dim must be >= 1, got {self.dim}")
+        if self.dtype not in ("float32", "int8"):
+            raise ValueError("vector dtype must be 'float32' or 'int8', "
+                             f"got {self.dtype!r}")
+
+
+@dataclasses.dataclass
+class IndexSpec:
+    """What is served: the document split, compaction policy, dense tier."""
+
+    partition_weights: "list[float] | None" = None
+    merge_policy: "MergePolicy | None" = None
+    vector: VectorSpec | None = None
+    asset_prefix: str = "index"
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """The whole fleet, validated at construction.
+
+    ``build_partitioned_search_app(docs, FleetSpec(...))`` replaces the
+    legacy kwarg sprawl (which still works through a deprecation shim)."""
+
+    n_parts: int = 4
+    replication: ReplicationSpec = dataclasses.field(
+        default_factory=ReplicationSpec)
+    gateway: GatewaySpec = dataclasses.field(default_factory=GatewaySpec)
+    index: IndexSpec = dataclasses.field(default_factory=IndexSpec)
+    runtime_config: "RuntimeConfig | None" = None
+    search_config: "SearchConfig | None" = None
+    backend: "Backend | None" = None
+
+    def __post_init__(self) -> None:
+        if self.n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {self.n_parts}")
+        w = self.index.partition_weights
+        if w is not None:
+            if len(w) != self.n_parts:
+                raise ValueError(
+                    f"partition_weights has {len(w)} entries for "
+                    f"{self.n_parts} partitions")
+            if any(x <= 0 for x in w):
+                raise ValueError("partition_weights must be positive")
+
+
 class ScatterGather:
     """Fan a query out to one FaaS function per partition and merge hits.
 
@@ -342,15 +481,25 @@ class ScatterGather:
 
     def _check_generations(self, results: list) -> None:
         """Every leg that reports an index version must report the SAME one
-        — hedged replicas and freshly-scaled pools included. See
+        — hedged replicas and freshly-scaled pools included, and BOTH tiers
+        of a hybrid leg (``vec_version`` is the dense tier's): a sparse
+        tier at generation N fused with a dense tier at N+1 would rank
+        under two different tombstone sets in one result. See
         :class:`GenerationMismatch`."""
-        versions = {r["version"] for r in results
-                    if isinstance(r, dict) and "version" in r}
+        versions = set()
+        for r in results:
+            if not isinstance(r, dict):
+                continue
+            if "version" in r:
+                versions.add(r["version"])
+            if "vec_version" in r:
+                versions.add(r["vec_version"])
         self.last_versions = sorted(versions)
         if len(versions) > 1:
             raise GenerationMismatch(
                 f"scatter legs answered from {sorted(versions)} — a query "
-                "may never merge hits across index generations")
+                "may never merge hits across index generations (nor across "
+                "tiers of different generations)")
 
     def search(self, payload: Any, k: int, *, t_arrival: float | None = None):
         """Single-query scatter-gather: merged top-k hits."""

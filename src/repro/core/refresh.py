@@ -95,6 +95,12 @@ class GenerationManifest:
     stats: dict | None = None      # inline live {"n_docs", "avgdl", "df"}
     vocab: dict | None = None      # inline frozen append-only term -> id map
     stats_ref: list | None = None  # OR shared: [asset, segment] in the catalog
+    # dense-vector tier (hybrid retrieval): the SAME base+delta shape as the
+    # BM25 tier, row positions aligned with it doc-for-doc, so ONE tombstone
+    # list and ONE generation number govern both tiers. None = no dense tier
+    # (pre-hybrid manifests parse unchanged).
+    vec_base: str | None = None
+    vec_deltas: list = dataclasses.field(default_factory=list)
 
     def to_json(self) -> bytes:
         return orjson.dumps(dataclasses.asdict(self))
@@ -106,6 +112,13 @@ class GenerationManifest:
     @property
     def segments(self) -> list[str]:
         return [self.base] + list(self.deltas)
+
+    @property
+    def vec_segments(self) -> list[str]:
+        """Dense-tier segment ids, base first ([] when no dense tier)."""
+        if self.vec_base is None:
+            return []
+        return [self.vec_base] + list(self.vec_deltas)
 
 
 class AssetCatalog:
@@ -182,7 +195,9 @@ class AssetCatalog:
             if GENERATION_FILE not in d.list():
                 continue
             saw_generation = True
-            live.update(self.read_generation(name, v).segments)
+            m = self.read_generation(name, v)
+            live.update(m.segments)
+            live.update(m.vec_segments)
         if not saw_generation:
             return []
         return self.sweep_unreferenced(name, live)

@@ -8,6 +8,8 @@ query has matches, like MS MARCO's passage-sourced queries).
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 # pronounceable fake terms: cheap bijection id -> string
@@ -85,6 +87,23 @@ def synth_pruned_blocks(seed: int, *, n_terms: int, max_blocks: int,
     ub = np.where(valid, qtf[:, None] * bmax, 0.0).astype(np.float32)
     tf = np.where(valid[..., None], tf, 0).astype(np.uint8)
     return tf, dl_g, docs, idf_q, ub, valid
+
+
+def hash_embedder(dim: int = 16):
+    """Deterministic text → unit-norm f32 embedding (no model weights ship
+    with the container, so the dense tier embeds with a content-hash-seeded
+    Gaussian — the OpenAI-embeddings stand-in). The CRC32 seed depends only
+    on the text bytes, so every process, commit, and rebuild derives the
+    IDENTICAL vector for a doc — the property the delta-vs-rebuild dense
+    parity tests lean on."""
+    def embed(text: str) -> np.ndarray:
+        rng = np.random.default_rng(zlib.crc32(text.encode("utf-8")))
+        v = rng.standard_normal(dim).astype(np.float32)
+        n = float(np.linalg.norm(v))
+        return (v / np.float32(n)) if n else v
+
+    embed.dim = dim
+    return embed
 
 
 def synth_queries(docs: list[tuple[str, str]], n_queries: int, *,

@@ -546,6 +546,176 @@ def combine_segments(packs: list[PackedIndex], *, vocab: dict[str, int],
         doc_len=doc_len, idf=idf)
 
 
+# -- dense-vector tier (hybrid retrieval) -----------------------------------------
+#
+# "Vector Search with OpenAI Embeddings: Lucene Is All You Need" — a dense
+# tier rides the exact same segment machinery as the BM25 tier: immutable
+# base + delta segments referenced from the generation manifest, tombstoned
+# at query time, served eagerly OR through the same header+range-readable
+# twin layout the lazy cold path reads. Row-major (doc, dim) embeddings:
+# scoring is one matvec per query (kernels/dot_topk.py), and row r of the
+# payload is doc r's vector, so partial hydration can pull exactly the LIVE
+# rows of a tombstone-carrying segment with coalesced range reads.
+
+VECTOR_META_FILE = "vec_meta.json"
+VECTOR_NPY_FILE = "vectors.npy"
+VECTOR_SUPERINDEX_FILE = "vec_superindex.bin"
+VECTOR_ROWS_FILE = "vec_rows.bin"
+_VECTOR_SUPERINDEX_MAGIC = b"SUPV"
+VECTOR_DTYPES = ("float32", "int8")
+
+
+@dataclasses.dataclass
+class VectorMeta:
+    n_docs: int
+    dim: int
+    dtype: str                  # "float32" | "int8" (scale-dequantized)
+    scale: float                # f32 value = int8 code × scale (1.0 for f32)
+    doc_ids: list[str]          # external ids, position = internal id
+
+    def to_json(self) -> bytes:
+        return orjson.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, data: bytes) -> "VectorMeta":
+        return cls(**orjson.loads(data))
+
+
+@dataclasses.dataclass
+class PackedVectors:
+    """The hydrated, array-form dense tier of one segment."""
+
+    meta: VectorMeta
+    vectors: np.ndarray         # (n_docs, dim) in the STORED dtype
+
+    def as_f32(self) -> np.ndarray:
+        if self.meta.dtype == "float32":
+            return self.vectors.astype(np.float32, copy=False)
+        return (self.vectors.astype(np.float32)
+                * np.float32(self.meta.scale))
+
+    @property
+    def nbytes(self) -> int:
+        return self.vectors.nbytes
+
+
+def pack_vectors(embeddings: np.ndarray, doc_ids: list[str], *,
+                 dtype: str = "float32") -> PackedVectors:
+    """Pack (n_docs, dim) f32 embeddings as a dense segment tier.
+
+    ``dtype="int8"`` scalar-quantizes symmetrically (scale = max|v|/127),
+    trading recall for 4× smaller segments; the dequantized f32 values are
+    what the scorer sees, so delta-vs-rebuild parity holds per stored
+    representation."""
+    emb = np.asarray(embeddings, dtype=np.float32)
+    if emb.ndim != 2 or emb.shape[0] != len(doc_ids):
+        raise ValueError(f"embeddings {emb.shape} do not match "
+                         f"{len(doc_ids)} doc ids")
+    if dtype not in VECTOR_DTYPES:
+        raise ValueError(f"vector dtype must be one of {VECTOR_DTYPES}, "
+                         f"got {dtype!r}")
+    if dtype == "int8":
+        amax = float(np.abs(emb).max(initial=0.0))
+        scale = amax / 127.0 if amax else 1.0
+        codes = np.clip(np.round(emb / scale), -127, 127).astype(np.int8)
+        meta = VectorMeta(n_docs=len(doc_ids), dim=emb.shape[1],
+                          dtype="int8", scale=scale, doc_ids=list(doc_ids))
+        return PackedVectors(meta=meta, vectors=codes)
+    meta = VectorMeta(n_docs=len(doc_ids), dim=emb.shape[1],
+                      dtype="float32", scale=1.0, doc_ids=list(doc_ids))
+    return PackedVectors(meta=meta, vectors=emb)
+
+
+def vector_row_bytes(dim: int, dtype: str) -> int:
+    """Bytes per payload row: one doc's ``dim`` elements in the stored
+    dtype — the range-read unit of the dense tier's lazy layout."""
+    return dim * (4 if dtype == "float32" else 1)
+
+
+def pack_vector_superindex(pv: PackedVectors) -> bytes:
+    """The dense tier's header: just the meta (ids, shape, dtype, scale) —
+    everything a partial view needs except the rows themselves."""
+    blob = pv.meta.to_json()
+    out = io.BytesIO()
+    out.write(_VECTOR_SUPERINDEX_MAGIC)
+    out.write(len(blob).to_bytes(4, "little"))
+    out.write(blob)
+    return out.getvalue()
+
+
+def unpack_vector_superindex(data: bytes) -> VectorMeta:
+    if data[:4] != _VECTOR_SUPERINDEX_MAGIC:
+        raise ValueError("not a vector superindex blob")
+    n = int.from_bytes(data[4:8], "little")
+    return VectorMeta.from_json(data[8:8 + n])
+
+
+def pack_vector_rows(pv: PackedVectors) -> bytes:
+    """Row-major payload: row r = doc r's vector, little-endian stored
+    dtype — contiguous row ranges are one coalesced ranged GET each."""
+    dt = "<f4" if pv.meta.dtype == "float32" else "i1"
+    return np.ascontiguousarray(pv.vectors.astype(dt)).tobytes()
+
+
+def unpack_vector_rows(chunk: bytes, dim: int, dtype: str) -> np.ndarray:
+    dt = "<f4" if dtype == "float32" else "i1"
+    row = vector_row_bytes(dim, dtype)
+    n = len(chunk) // row
+    arr = np.frombuffer(chunk, dtype=dt, count=n * dim).reshape(n, dim)
+    return arr.astype(np.float32 if dtype == "float32" else np.int8)
+
+
+def write_vector_segment(pv: PackedVectors,
+                         directory: RamDirectory | None = None) -> RamDirectory:
+    """Serialize the dense tier: eager npy + the same header/range-readable
+    twin layout the BM25 tier carries, so PR 7's lazy cold hydration
+    applies to vectors unchanged."""
+    d = directory if directory is not None else RamDirectory()
+    d.write(VECTOR_META_FILE, pv.meta.to_json())
+    d.write(VECTOR_NPY_FILE, _npy_bytes(pv.vectors))
+    d.write(VECTOR_SUPERINDEX_FILE, pack_vector_superindex(pv))
+    d.write(VECTOR_ROWS_FILE, pack_vector_rows(pv))
+    return d
+
+
+def read_vector_segment(directory: Directory) -> PackedVectors:
+    """Eager (full) hydration of one dense-tier segment."""
+    meta = VectorMeta.from_json(
+        directory.open_input(VECTOR_META_FILE).read_all())
+    vectors = _npy_load(directory.open_input(VECTOR_NPY_FILE).read_all())
+    return PackedVectors(meta=meta, vectors=vectors)
+
+
+def combine_vector_segments(packs: list[PackedVectors],
+                            tombstones: Iterable[int] = ()
+                            ) -> tuple[np.ndarray, list[str], np.ndarray]:
+    """Fuse base + ordered delta vector segments into one row-major view.
+
+    Returns (vectors (n_docs, dim) f32, doc_ids, live (n_docs,) bool).
+    Row positions concatenate in segment order — the SAME internal id
+    space the BM25 tier's :func:`combine_segments` builds, so one
+    tombstone list kills a doc in both tiers. Dead rows stay in place
+    (ids must not shift) but are flagged ``live=False``; the dense scorer
+    excludes them BEFORE its top-k, the dense analogue of
+    subtraction-before-top-k (dense scores are legitimately negative, so
+    zeroing a dead doc's score would not remove it from the ranking)."""
+    if not packs:
+        raise ValueError("combine_vector_segments needs at least a base")
+    dim = packs[0].meta.dim
+    for p in packs[1:]:
+        if p.meta.dim != dim:
+            raise ValueError("vector segments disagree on dim")
+    vectors = np.concatenate([p.as_f32() for p in packs], axis=0)
+    doc_ids: list[str] = []
+    for p in packs:
+        doc_ids.extend(p.meta.doc_ids)
+    live = np.ones(len(doc_ids), dtype=bool)
+    ts = np.asarray(sorted(tombstones), dtype=np.int64)
+    if ts.size:
+        live[ts] = False
+    return vectors, doc_ids, live
+
+
 @dataclasses.dataclass
 class MergePolicy:
     """Size-tiered delta compaction: when does the delta tier fold back

@@ -30,10 +30,13 @@ import numpy as np
 
 from repro.core.directory import Directory, DirectoryError, StoreDirectory
 from repro.core.object_store import NoSuchKey
-from repro.index.builder import (PAYLOAD_FILE, SUPERINDEX_FILE, IndexMeta,
-                                 PackedIndex, combine_segments,
-                                 payload_row_bytes, unpack_payload_rows,
-                                 unpack_superindex)
+from repro.index.builder import (PAYLOAD_FILE, SUPERINDEX_FILE,
+                                 VECTOR_ROWS_FILE, VECTOR_SUPERINDEX_FILE,
+                                 IndexMeta, PackedIndex, VectorMeta,
+                                 combine_segments, payload_row_bytes,
+                                 unpack_payload_rows, unpack_superindex,
+                                 unpack_vector_rows, unpack_vector_superindex,
+                                 vector_row_bytes)
 
 
 class SuperIndexMissing(Exception):
@@ -191,6 +194,134 @@ def open_partial_segment(directory: Directory) -> PartialSegment:
     return PartialSegment.open(directory)
 
 
+class PartialVectorSegment:
+    """One dense-tier segment's partial hydration state (PR 7's move,
+    applied to vectors): ONE ranged GET pulls the tiny header
+    (``vec_superindex.bin`` — meta only), then row ranges of
+    ``vec_rows.bin`` stream in on demand. Row r is doc r's vector, so a
+    tombstone-carrying segment hydrates exactly its LIVE rows — the dense
+    tier's equivalent of reading only the queried terms' blocks."""
+
+    def __init__(self, directory: Directory, meta: VectorMeta,
+                 header_bytes: int) -> None:
+        self.directory = directory
+        self.meta = meta
+        dt = np.float32 if meta.dtype == "float32" else np.int8
+        self.vectors = np.zeros((meta.n_docs, meta.dim), dt)
+        self._rows_live = np.zeros(meta.n_docs, bool)
+        self._reader = None
+        self.bytes_read = header_bytes
+
+    @classmethod
+    def open(cls, directory: Directory) -> "PartialVectorSegment":
+        blob = _read_full(directory, VECTOR_SUPERINDEX_FILE)
+        return cls(directory, unpack_vector_superindex(blob),
+                   header_bytes=len(blob))
+
+    @property
+    def full(self) -> bool:
+        return bool(self._rows_live.all())
+
+    def hydrate_rows(self, rows: list[tuple[int, int]]) -> bool:
+        """Pull the [lo, hi) row ranges (coalesced); True if bytes moved."""
+        todo = [(lo, hi) for lo, hi in rows
+                if hi > lo and not self._rows_live[lo:hi].all()]
+        if not todo:
+            return False
+        if self._reader is None:
+            self._reader = _range_reader(self.directory, VECTOR_ROWS_FILE)
+        row = vector_row_bytes(self.meta.dim, self.meta.dtype)
+        gap = _coalesce_gap_bytes(self.directory)
+        before = self.bytes_read
+        for blo, bhi in coalesce_extents(
+                [(lo * row, hi * row) for lo, hi in todo], gap):
+            chunk = self._reader(blo, bhi - blo)
+            self.bytes_read += len(chunk)
+            lo = blo // row
+            vecs = unpack_vector_rows(chunk, self.meta.dim, self.meta.dtype)
+            self.vectors[lo:lo + len(vecs)] = vecs
+            self._rows_live[lo:lo + len(vecs)] = True
+        return self.bytes_read != before
+
+    def backfill(self) -> bool:
+        if self.full:
+            return False
+        return self.hydrate_rows([(0, self.meta.n_docs)])
+
+    def as_f32(self) -> np.ndarray:
+        if self.meta.dtype == "float32":
+            return self.vectors
+        return self.vectors.astype(np.float32) * np.float32(self.meta.scale)
+
+
+def open_partial_vector_segment(directory: Directory) -> PartialVectorSegment:
+    return PartialVectorSegment.open(directory)
+
+
+class LazyVectors:
+    """The dense tier's lazy view over one generation's vector segments.
+
+    Unlike the sparse tier there is no query-dependent subset: EVERY live
+    row participates in every matvec, so ``ensure_live`` IS the critical-
+    path hydration — it pulls exactly the non-tombstoned rows of each
+    segment (coalesced ranges) and nothing else. There is no backfill
+    stage: dead rows are never needed for this generation, so a "full"
+    upgrade would stream bytes no query can ever read."""
+
+    def __init__(self, segments: list[PartialVectorSegment],
+                 tombstones=()) -> None:
+        if not segments:
+            raise ValueError("LazyVectors needs at least one segment")
+        self.segments = segments
+        self.tombstones = sorted(tombstones)
+
+    @property
+    def bytes_read(self) -> int:
+        return sum(s.bytes_read for s in self.segments)
+
+    def _live_ranges(self) -> list[list[tuple[int, int]]]:
+        """Per segment, the [lo, hi) LOCAL row ranges of live docs."""
+        out = []
+        offset = 0
+        ts = np.asarray(self.tombstones, np.int64)
+        for seg in self.segments:
+            n = seg.meta.n_docs
+            dead = np.zeros(n, bool)
+            local = ts[(ts >= offset) & (ts < offset + n)] - offset
+            dead[local] = True
+            ranges, lo = [], None
+            for i in range(n + 1):
+                alive = i < n and not dead[i]
+                if alive and lo is None:
+                    lo = i
+                elif not alive and lo is not None:
+                    ranges.append((lo, i))
+                    lo = None
+            out.append(ranges)
+            offset += n
+        return out
+
+    def ensure_live(self) -> bool:
+        changed = False
+        for seg, ranges in zip(self.segments, self._live_ranges()):
+            changed |= seg.hydrate_rows(ranges)
+        return changed
+
+    def combined(self) -> tuple[np.ndarray, list[str], np.ndarray]:
+        """(vectors f32, doc_ids, live) over base + deltas — the same
+        row space :func:`~repro.index.builder.combine_vector_segments`
+        builds eagerly; hydrated live rows are byte-exact (raw little-
+        endian roundtrip), so lazy dense scores are bit-identical."""
+        vectors = np.concatenate([s.as_f32() for s in self.segments], axis=0)
+        doc_ids: list[str] = []
+        for s in self.segments:
+            doc_ids.extend(s.meta.doc_ids)
+        live = np.ones(len(doc_ids), bool)
+        if self.tombstones:
+            live[np.asarray(self.tombstones, np.int64)] = False
+        return vectors, doc_ids, live
+
+
 class LazyIndex:
     """A query-sufficient view over one asset version's segment set.
 
@@ -223,6 +354,22 @@ class LazyIndex:
     def term_ids(self, terms) -> list[int]:
         return [tid for t in terms
                 if (tid := self.vocab.get(t, -1)) >= 0]
+
+    def top_terms(self, n: int) -> list[str]:
+        """The ``n`` highest-document-frequency terms of this view — the
+        rollover-prewarm ranking: under Zipfian traffic the head terms
+        cover most of the next queries' posting bytes, so prewarming just
+        them approaches a full backfill's warm-hit rate at a fraction of
+        the GET bytes. Deterministic (df desc, then term asc). Plain
+        (non-generation) versions rank by ascending idf — the same order,
+        since idf is monotone-decreasing in df."""
+        if self._gen_state is not None:
+            _, stats = self._gen_state
+            ranked = sorted(stats["df"].items(), key=lambda kv: (-kv[1], kv[0]))
+            return [t for t, _ in ranked[:n]]
+        seg = self.segments[0]
+        terms = sorted(self.vocab, key=lambda t: (seg.idf[self.vocab[t]], t))
+        return terms[:n]
 
     def ensure_terms(self, terms) -> bool:
         """Hydrate the posting blocks of ``terms`` (strings, mapped through

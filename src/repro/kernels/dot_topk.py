@@ -49,9 +49,17 @@ def _dot_topk_kernel(q_ref, c_ref, vals_ref, ids_ref, *, k: int, chunk: int,
 @functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
 def dot_topk(query, cands, k: int, *, chunk: int = DEFAULT_CHUNK,
              interpret: bool = True):
-    """query (D,), cands (N,D) → (vals (k,), ids (k,) i32)."""
+    """query (D,), cands (N,D) → (vals (k,), ids (k,) i32).
+
+    ``chunk`` is NEVER shrunk to N: every grid step scores a full
+    (chunk, D) block (short inputs pad with masked rows), so the matvec's
+    shape — and therefore its f32 accumulation bit pattern, which on CPU
+    XLA depends on the row count's alignment — is canonical for any N.
+    A 53-row partition and a 207-row full corpus score a shared row to
+    IDENTICAL bits, which is what lets a fleet of uneven partitions be
+    checked uint32-bitwise against one full-corpus reference."""
     N, D = cands.shape
-    chunk = max(min(chunk, N), k)
+    chunk = max(chunk, k)
     pad = (-N) % chunk
     if pad:
         cands = jnp.pad(cands, ((0, pad), (0, 0)))
@@ -77,3 +85,27 @@ def dot_topk(query, cands, k: int, *, chunk: int = DEFAULT_CHUNK,
     vals = jnp.where(valid, vals, -jnp.inf)
     mv, mi = jax.lax.top_k(vals, k)
     return mv, ids[mi]
+
+
+def dot_topk_batch(queries, cands, k: int, *, chunk: int = DEFAULT_CHUNK,
+                   interpret: bool = True):
+    """queries (Q, D), cands (N, D) → (vals (Q, k), ids (Q, k) i32).
+
+    The fleet's dense micro-batch path. Q-invariant BY CONSTRUCTION: each
+    query dispatches as its own single-query ``dot_topk`` executable
+    (shape-cached, so all Q dispatches reuse one compiled program), never
+    traced together into a batched graph. Any whole-batch program — vmap,
+    ``lax.map``, an unrolled loop under one jit — lets XLA fuse across or
+    around the query axis, and the (chunk, D) matvec's f32 accumulation
+    bits then differ (~1 ulp) from the standalone single-query lowering,
+    making a query's scores depend on how many neighbours shared its
+    micro-batch window. Per-program dispatch is what lets windowed fleet
+    results be checked uint32-bitwise against the one-query-at-a-time
+    reference oracle."""
+    if len(queries) == 0:
+        return (jnp.zeros((0, k), jnp.float32),
+                jnp.zeros((0, k), jnp.int32))
+    out = [dot_topk(q, cands, k, chunk=chunk, interpret=interpret)
+           for q in queries]
+    return (jnp.stack([v for v, _ in out]),
+            jnp.stack([i for _, i in out]))

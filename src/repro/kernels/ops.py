@@ -12,6 +12,7 @@ from __future__ import annotations
 from repro.kernels.bm25_block import bm25_block_scores as _bm25
 from repro.kernels.bm25_pruned import bm25_pruned_topk as _bm25_pruned
 from repro.kernels.dot_topk import dot_topk as _dot_topk
+from repro.kernels.dot_topk import dot_topk_batch as _dot_topk_batch
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.interpret import default_interpret as _interpret  # noqa: F401  (compat)
@@ -35,6 +36,11 @@ def topk(scores, k, **kw):
 def dot_topk(query, cands, k, **kw):
     kw.setdefault("interpret", _interpret())
     return _dot_topk(query, cands, k, **kw)
+
+
+def dot_topk_batch(queries, cands, k, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _dot_topk_batch(queries, cands, k, **kw)
 
 
 def flash_attention(q, k, v, **kw):

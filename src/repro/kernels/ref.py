@@ -56,6 +56,55 @@ def dot_topk_ref(query, cands, k):
     return topk_ref(scores, k)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def _dot_topk_one_ref(query, cands, k, *, chunk: int = 1024):
+    """Single-query pure-JAX twin of ``dot_topk`` — see batch docstring."""
+    N, D = cands.shape
+    chunk = max(chunk, k)
+    pad = (-N) % chunk
+    cp = jnp.pad(cands, ((0, pad), (0, 0))) if pad else cands
+    n_chunks = (N + pad) // chunk
+    parts = []
+    for ci in range(n_chunks):
+        c = jax.lax.dynamic_slice_in_dim(cp, ci * chunk, chunk)
+        parts.append(jax.lax.dot_general(
+            c.astype(jnp.float32), query.astype(jnp.float32)[None, :],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0])
+    scores = jnp.concatenate(parts)[:N]
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32)
+
+
+def dot_topk_batch_ref(queries, cands, k, *, chunk: int = 1024):
+    """queries (Q, D), cands (N, D) → (vals (Q, k), ids (Q, k) i32).
+
+    Pure-JAX twin of ``dot_topk_batch`` and the dense tier's
+    uint32-bit-parity target. It reproduces the kernel's DOCUMENTED
+    reduction structure — per query, per candidate chunk, one
+    (chunk, D) × (D,) f32 dot — because f32 dot accumulation is
+    shape-dependent on CPU XLA: a fused (N, D) @ (D, Q) matmul (or a
+    vmapped matvec, which rebatches into one) reassociates the sum and
+    is only an allclose oracle. ``chunk`` must match the kernel call's
+    (both default to 1024).
+
+    Like the kernel, ``chunk`` is never shrunk to N — short inputs pad up
+    to one full (chunk, D) block, keeping the matvec shape (and its f32
+    bit pattern) canonical for any N, so this full-corpus reference bit-
+    matches per-partition kernel calls over uneven partition sizes. And
+    like the kernel, each query dispatches as its own jit'd single-query
+    program (NOT vmap/``lax.map``/one whole-batch jit): XLA's fusion
+    around the query axis is context-dependent at the ~1-ulp level when
+    N fits one chunk, so only per-program dispatch makes a query's bits
+    independent of its batch neighbours."""
+    if len(queries) == 0:
+        return (jnp.zeros((0, k), jnp.float32),
+                jnp.zeros((0, k), jnp.int32))
+    out = [_dot_topk_one_ref(q, cands, k, chunk=chunk) for q in queries]
+    return (jnp.stack([v for v, _ in out]),
+            jnp.stack([i for _, i in out]))
+
+
 def embedding_bag_ref(table, idx, weights):
     """table (V,D), idx (B,L) i32 (pad<0), weights (B,L) → (B,D) f32 sums."""
     safe = jnp.maximum(idx, 0)

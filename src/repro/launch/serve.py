@@ -65,7 +65,7 @@ def run_single(args) -> dict:
 
 
 def run_partitioned(args) -> dict:
-    from repro.core.partition import HedgePolicy
+    from repro.core.partition import FleetSpec, HedgePolicy, ReplicationSpec
     from repro.search.service import build_partitioned_search_app
 
     docs = synth_corpus(args.docs, vocab=args.vocab, seed=0)
@@ -73,11 +73,11 @@ def run_partitioned(args) -> dict:
     hedge = None
     if args.replicas > 1:
         hedge = HedgePolicy(after_s=args.hedge or None)
-    app = build_partitioned_search_app(
-        docs, n_parts=args.partitions,
-        replicas=args.replicas, hedge=hedge,
+    app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=args.partitions,
+        replication=ReplicationSpec(replicas=args.replicas, hedge=hedge),
         runtime_config=RuntimeConfig(memory_bytes=args.memory_gb << 30),
-        search_config=SearchConfig(k=args.k))
+        search_config=SearchConfig(k=args.k)))
     if args.replicas > 1:
         app.warm()           # replica pools see no traffic until a hedge fires
 

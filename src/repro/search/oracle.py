@@ -1,16 +1,29 @@
-"""Exact, dict-based BM25 — the correctness oracle for the JAX searcher.
+"""Exact reference searchers — the correctness oracles for the fleet.
 
-Implements the same Lucene BM25 variant as the builder (no (k1+1) numerator),
-with the same uint8 tf clamp, so the blocked JAX path must match to float
-tolerance whenever block truncation (M) does not drop postings.
+:class:`OracleSearcher` is dict-based BM25: the same Lucene variant as the
+builder (no (k1+1) numerator), with the same uint8 tf clamp, so the blocked
+JAX path must match to float tolerance whenever block truncation (M) does
+not drop postings.
+
+:class:`DenseOracleSearcher` is the dense tier's twin: brute-force inner
+products over the full corpus via the kernel's bitwise-matching pure-JAX
+reference (``dot_topk_batch_ref``), so per-partition fleet scores must be
+uint32-BIT-identical, not merely close. ``hybrid_oracle_fuse`` runs the
+same Reciprocal Rank Fusion the coordinator runs, over the two oracles'
+rankings — the hybrid tier's end-to-end pin.
 """
 
 from __future__ import annotations
 
 import math
 from collections import Counter
+from typing import Any, Callable, Sequence
 
+import numpy as np
+
+from repro.core.partition import rrf_fuse
 from repro.index.tokenizer import tokenize
+from repro.kernels.ref import dot_topk_batch_ref
 
 
 class OracleSearcher:
@@ -44,3 +57,50 @@ class OracleSearcher:
                 scores[doc] = scores.get(doc, 0.0) + qtf * idf * tf / denom
         ranked = sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))
         return ranked[:k]
+
+
+class DenseOracleSearcher:
+    """Exact dense ranking over the FULL corpus, scored by the kernel's
+    bitwise reference.
+
+    Index ``docs`` in the fleet's ``live_corpus()`` order: global index i
+    here is then (partition, internal id) in ascending order, so the
+    fleet's cross-partition (-score, partition, doc_id) merge and this
+    oracle's (-score, index) ranking share tie-breaks exactly.
+    """
+
+    def __init__(self, docs: list[tuple[str, str]],
+                 embedder: "Callable[[str], Any]") -> None:
+        self.doc_ids = [d for d, _ in docs]
+        self.embedder = embedder
+        if docs:
+            self.vectors = np.stack([embedder(t) for _, t in docs]
+                                    ).astype(np.float32)
+        else:
+            self.vectors = np.zeros((0, 1), dtype=np.float32)
+
+    def search(self, query: "str | Sequence[float]",
+               k: int = 10) -> list[tuple[int, float]]:
+        """Top-k (global index, score); ``query`` is text (embedded here,
+        exactly as the coordinator embeds) or a pre-computed vector."""
+        n = self.vectors.shape[0]
+        if n == 0:
+            return []
+        qv = (self.embedder(query) if isinstance(query, str)
+              else np.asarray(query, dtype=np.float32))
+        kk = min(k, n)
+        vals, ids = dot_topk_batch_ref(qv[None, :].astype(np.float32),
+                                       self.vectors, kk)
+        return [(int(i), float(v))
+                for v, i in zip(np.asarray(vals)[0], np.asarray(ids)[0])]
+
+
+def hybrid_oracle_fuse(sparse_ranked: Sequence[tuple[int, float]],
+                       dense_ranked: Sequence[tuple[int, float]],
+                       k: int) -> list[tuple[int, float]]:
+    """RRF-fuse the two oracles' (global index, score) rankings with the
+    SAME ``rrf_fuse`` call the fleet coordinator makes, in the same
+    (sparse, dense) tier order — fused scores are bit-identical to the
+    fleet's, and the keys are global doc indices."""
+    return rrf_fuse([[d for d, _ in sparse_ranked],
+                     [d for d, _ in dense_ranked]], k)

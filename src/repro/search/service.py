@@ -19,31 +19,58 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable
+import warnings
+from typing import Callable, Iterable
+
+import numpy as np
 
 from repro.core.autoscale import AutoscalePolicy, FleetController
 from repro.core.gateway import (BadRequest, Gateway, PendingResponse,
                                 WindowPolicy)
 from repro.core.kvstore import KVStore
 from repro.core.object_store import Backend, ObjectStore
-from repro.core.partition import HedgePolicy, PartitionHit, ScatterGather
+from repro.core.partition import (FleetSpec, GatewaySpec, HedgePolicy,
+                                  IndexSpec, PartitionHit, ReplicationSpec,
+                                  ScatterGather, _merge_hits, rrf_fuse)
 from repro.core.refresh import (AssetCatalog, GenerationManifest,
                                 parse_generation, rollover_fleet)
 from repro.core.runtime import FaaSRuntime, InvocationRecord, RuntimeConfig
+from repro.data.corpus import hash_embedder
 from repro.index.builder import (IndexWriter, MergePolicy,
                                  compute_global_stats, extend_vocab,
-                                 global_vocab, update_stats, write_segment)
+                                 global_vocab, pack_vectors, update_stats,
+                                 write_segment, write_vector_segment)
 from repro.index.tokenizer import token_counts
 from repro.search.distributed import partition_corpus
-from repro.search.searcher import SearchConfig, make_search_handler
+from repro.search.searcher import (PREWARM_TOP_TERMS, SearchConfig,
+                                   make_search_handler)
+
+SEARCH_MODES = ("sparse", "dense", "hybrid")
 
 
-def _search_body(q: "str | list[str]", k: int, fetch_docs: bool) -> dict:
+def _search_body(q: "str | list[str] | None", k: int, fetch_docs: bool,
+                 mode: str = "sparse", vector=None) -> dict:
     body = {"k": k, "fetch_docs": fetch_docs}
-    if isinstance(q, str):
-        body["q"] = q
+    if mode != "sparse":
+        body["mode"] = mode
+    # batch shape follows the text queries when given, else the vectors:
+    # a flat number sequence is ONE query vector, a sequence of sequences
+    # is a micro-batch of them
+    if q is not None:
+        batch = not isinstance(q, str)
     else:
-        body["queries"] = list(q)         # micro-batch: one invocation
+        batch = (vector is not None and len(vector) > 0
+                 and hasattr(vector[0], "__len__"))
+    if q is not None:
+        if batch:
+            body["queries"] = list(q)     # micro-batch: one invocation
+        else:
+            body["q"] = q
+    if vector is not None:
+        if batch:
+            body["qvs"] = [[float(x) for x in v] for v in vector]
+        else:
+            body["qv"] = [float(x) for x in vector]
     return body
 
 
@@ -122,6 +149,11 @@ class _PartitionState:
     base_docs: int
     delta_docs: int
     staged_docs: list = dataclasses.field(default_factory=list)
+    # dense tier twins (None/[] on sparse-only fleets): row r of the vector
+    # segments is doc r of the sparse segments — one internal-id space, one
+    # tombstone list, one generation number governs both tiers
+    vec_base: "str | None" = None
+    vec_deltas: list = dataclasses.field(default_factory=list)
 
     def live_docs(self) -> list:
         return [d for pos, d in enumerate(self.seg_docs)
@@ -158,7 +190,9 @@ class FleetIndexer:
                  merge_policy: MergePolicy | None = None,
                  sim_write_s: float | None = None,
                  sim_write_per_doc_s: float = 2e-5,
-                 stats_asset: str = "index-stats") -> None:
+                 stats_asset: str = "index-stats",
+                 embedder: "Callable | None" = None,
+                 vec_dim: int = 16, vec_dtype: str = "float32") -> None:
         self.catalog = catalog
         self.doc_store = doc_store
         self.runtime = runtime
@@ -167,6 +201,12 @@ class FleetIndexer:
         self.merge_policy = merge_policy or MergePolicy()
         self.sim_write_s = sim_write_s
         self.sim_write_per_doc_s = sim_write_per_doc_s
+        # dense tier (optional): the SAME writer invocation that packs a
+        # sparse delta/base also embeds + packs its vector twin, so both
+        # tiers always publish under one generation and one CAS flip
+        self.embedder = embedder
+        self.vec_dim = vec_dim
+        self.vec_dtype = vec_dtype
         self.stats_asset = stats_asset    # shared per-generation stats/vocab
         self._stats_ref: list | None = None
         self.gen = 0
@@ -206,6 +246,10 @@ class FleetIndexer:
         st = _PartitionState(asset=asset, seg_docs=list(docs),
                              tombstones=set(), base_seg=base_seg,
                              deltas=[], base_docs=len(docs), delta_docs=0)
+        if self.embedder is not None:
+            st.vec_base = f"g{self.gen:06d}-vecbase"
+            self.catalog.publish_segment(
+                asset, st.vec_base, write_vector_segment(self._pack_vecs(docs)))
         self.parts.append(st)
         self.catalog.publish_generation(asset, self._manifest(st))
         self.runtime.register(f"indexer-p{i}", self._make_indexer_handler(i))
@@ -216,7 +260,19 @@ class FleetIndexer:
     def _manifest(self, st: _PartitionState) -> GenerationManifest:
         return GenerationManifest(
             gen=self.gen, base=st.base_seg, deltas=list(st.deltas),
-            tombstones=sorted(st.tombstones), stats_ref=self._stats_ref)
+            tombstones=sorted(st.tombstones), stats_ref=self._stats_ref,
+            vec_base=st.vec_base, vec_deltas=list(st.vec_deltas))
+
+    def _pack_vecs(self, docs: list):
+        """Embed + pack one segment's docs as its dense twin (row r of the
+        vector segment IS doc r of the sparse segment)."""
+        if docs:
+            vecs = np.stack([self.embedder(text) for _, text in docs]
+                            ).astype(np.float32)
+        else:   # a merge can empty a partition; the tier stays well-formed
+            vecs = np.zeros((0, self.vec_dim), dtype=np.float32)
+        return pack_vectors(vecs, [ext for ext, _ in docs],
+                            dtype=self.vec_dtype)
 
     # -- staging ---------------------------------------------------------------
 
@@ -276,11 +332,21 @@ class FleetIndexer:
             else:
                 raise ValueError(f"unknown indexer op {op!r}")
             self.catalog.publish_segment(st.asset, seg, write_segment(packed))
+            vec_seg = None
+            if self.embedder is not None:
+                # the dense twin packs in the SAME invocation over the SAME
+                # doc list: rows stay doc-for-doc aligned with the sparse
+                # segment, and both tiers flip together at publish
+                kind = "vecbase" if op == "merge" else "vecdelta"
+                vec_seg = f"g{gen:06d}-{kind}-{self._seg_seq:04d}"
+                self.catalog.publish_segment(
+                    st.asset, vec_seg,
+                    write_vector_segment(self._pack_vecs(docs)))
             if self.sim_write_s is not None:
                 exec_s = self.sim_write_s + self.sim_write_per_doc_s * len(docs)
             else:
                 exec_s = time.perf_counter() - t0
-            return {"op": op, "seg": seg, "gen": gen,
+            return {"op": op, "seg": seg, "gen": gen, "vec_seg": vec_seg,
                     "n_docs": packed.meta.n_docs}, exec_s
 
         return handler
@@ -304,7 +370,8 @@ class FleetIndexer:
             "gen": self.gen,
             "stats_ref": self._stats_ref,
             "parts": [(list(st.seg_docs), set(st.tombstones), st.base_seg,
-                       list(st.deltas), st.base_docs, st.delta_docs)
+                       list(st.deltas), st.base_docs, st.delta_docs,
+                       st.vec_base, list(st.vec_deltas))
                       for st in self.parts],
         }
 
@@ -316,9 +383,11 @@ class FleetIndexer:
         self.pending_deletes = cp["pending_deletes"]
         self._rr, self.gen = cp["rr"], cp["gen"]
         self._stats_ref = cp["stats_ref"]
-        for st, (sd, tb, bs, dl, bd, dd) in zip(self.parts, cp["parts"]):
+        for st, (sd, tb, bs, dl, bd, dd, vb, vd) in zip(self.parts,
+                                                        cp["parts"]):
             st.seg_docs, st.tombstones, st.base_seg = sd, tb, bs
             st.deltas, st.base_docs, st.delta_docs = dl, bd, dd
+            st.vec_base, st.vec_deltas = vb, vd
             st.staged_docs = []
 
     def _published_gen(self) -> int:
@@ -463,6 +532,8 @@ class FleetIndexer:
                 st.base_seg, st.deltas = out["seg"], []
                 st.base_docs, st.delta_docs = len(st.seg_docs), 0
                 st.tombstones = set()
+                if out.get("vec_seg"):
+                    st.vec_base, st.vec_deltas = out["vec_seg"], []
                 # a merge renumbers the partition's internal positions
                 for pos, (ext, text) in enumerate(st.seg_docs):
                     self._ext_index[ext] = (i, pos, text)
@@ -471,6 +542,8 @@ class FleetIndexer:
                 st.seg_docs = st.seg_docs + st.staged_docs
                 st.deltas = st.deltas + [out["seg"]]
                 st.delta_docs += len(st.staged_docs)
+                if out.get("vec_seg"):
+                    st.vec_deltas = st.vec_deltas + [out["vec_seg"]]
             st.staged_docs = []
         self.gen = next_gen
         # ONE shared stats/vocab segment per generation; every partition's
@@ -536,22 +609,33 @@ class PartitionedSearchApp:
     replicas: int = 1
     controller: FleetController | None = None
     indexer: FleetIndexer | None = None
+    # text → (dim,) f32 query embedder; non-None iff the fleet serves a
+    # dense-vector tier (FleetSpec.index.vector)
+    embedder: "Callable | None" = None
 
-    def query(self, q: "str | list[str]", k: int = 10, *,
-              t_arrival: float | None = None, fetch_docs: bool = True):
+    def query(self, q: "str | list[str] | None", k: int = 10, *,
+              t_arrival: float | None = None, fetch_docs: bool = True,
+              mode: str = "sparse", vector=None):
         """One query (str) or a micro-batch (list of str) through the
         gateway; batches evaluate as ONE invocation per partition.
+
+        ``mode`` selects the tier(s): ``"sparse"`` (BM25), ``"dense"``
+        (embedding inner product), or ``"hybrid"`` (both, fused with
+        Reciprocal Rank Fusion). ``vector`` optionally supplies the query
+        embedding(s) — one (dim,) sequence per query — otherwise the
+        fleet's embedder derives them from the text; dense-mode callers
+        may pass ``q=None`` with ``vector`` alone.
 
         ``k`` is capped at the per-partition ``SearchConfig.k``: each
         partition's jitted fn returns its top ``search_k`` candidates, so
         merged ranks beyond that are not sound and are never returned."""
         return self.gateway.request(
-            "GET", "/search", _search_body(q, k, fetch_docs),
+            "GET", "/search", _search_body(q, k, fetch_docs, mode, vector),
             t_arrival=t_arrival)
 
-    def submit(self, q: "str | list[str]", k: int = 10, *,
-               t_arrival: float | None = None,
-               fetch_docs: bool = True) -> PendingResponse:
+    def submit(self, q: "str | list[str] | None", k: int = 10, *,
+               t_arrival: float | None = None, fetch_docs: bool = True,
+               mode: str = "sparse", vector=None) -> PendingResponse:
         """Admit a query to the gateway's adaptive micro-batch window:
         concurrent arrivals inside one window coalesce into ONE
         ``ScatterGather.search_batch`` dispatch — one vmapped invocation
@@ -560,9 +644,11 @@ class PartitionedSearchApp:
         latency :meth:`query` would have charged. The serving generation is
         pinned per query AT ADMISSION: a commit landing while the window is
         open splits the flush into per-generation dispatches instead of
-        moving an admitted query to an index it didn't arrive under."""
+        moving an admitted query to an index it didn't arrive under.
+        ``mode``/``vector`` as in :meth:`query`; a window groups dispatches
+        by (generation, mode), so mixed-mode traffic coalesces per mode."""
         return self.gateway.submit(
-            "GET", "/search", _search_body(q, k, fetch_docs),
+            "GET", "/search", _search_body(q, k, fetch_docs, mode, vector),
             t_arrival=t_arrival)
 
     def flush(self, now: float | None = None) -> int:
@@ -579,12 +665,17 @@ class PartitionedSearchApp:
         capacity maintenance, not queries: they bill to the ledger's idle
         line and stay out of latency percentiles and controller signals."""
         t0 = self.runtime.clock if t_arrival is None else t_arrival
+        payload = {"q": "", "k": 1, "fetch_docs": False}
+        if self.embedder is not None:
+            # warm BOTH tiers on hybrid fleets: a dense leg landing on a
+            # pool that only ever saw sparse pings would hydrate cold
+            payload["mode"] = "hybrid"
+            payload["qv"] = [float(x) for x in self.embedder("")]
         recs = []
         for group in self.fn_groups:
             for fn in group:
-                _, rec = self.runtime.invoke(
-                    fn, {"q": "", "k": 1, "fetch_docs": False}, t_arrival=t0,
-                    keepalive=True)
+                _, rec = self.runtime.invoke(fn, dict(payload), t_arrival=t0,
+                                             keepalive=True)
                 recs.append(rec)
         return recs
 
@@ -623,9 +714,18 @@ class PartitionedSearchApp:
             n = ix.stage_delete(body["ids"])
             return {"staged": True, "pending_deletes": n}, ENQUEUE_COST_S, None
         if op == "commit":
+            # rollover prewarm: partial, term-frequency-ranked — each ping
+            # hydrates the new generation's superindex + the top-df terms'
+            # blocks (and the dense tier's live rows, when one exists)
+            # instead of backfilling the whole partition; the cold tail
+            # still lazy-loads on demand. Eager fleets hydrate fully, as
+            # before.
+            ping = {"q": "", "k": 1, "fetch_docs": False,
+                    "prewarm_terms": PREWARM_TOP_TERMS}
+            if self.embedder is not None:
+                ping["prewarm_dense"] = True
             result, lat = ix.commit(
-                self.fn_groups, t_arrival=t_arrival,
-                ping_payload={"q": "", "k": 1, "fetch_docs": False})
+                self.fn_groups, t_arrival=t_arrival, ping_payload=ping)
             return result, lat, None
         raise ValueError(f"unknown /index op {op!r}")
 
@@ -658,40 +758,137 @@ class PartitionedSearchApp:
             "docs": [raw.get(e) for e in ext_ids] if raw else [],
         }
 
+    def _query_plan(self, body: dict) -> tuple[str, bool, "list | None",
+                                               "list | None"]:
+        """Validate a /search body and resolve its tiers' inputs:
+        (mode, batched, texts, vectors). Texts is None for a vector-only
+        dense query; vectors is None for sparse. Embeds text queries at
+        the COORDINATOR when the client sent no vectors — every scatter
+        leg (and the oracle) then scores identical floats. Raises
+        :class:`BadRequest` for anything the fleet cannot serve."""
+        mode = body.get("mode", "sparse")
+        if mode not in SEARCH_MODES:
+            raise BadRequest(f"mode must be one of {SEARCH_MODES}, "
+                             f"got {mode!r}")
+        batched = "queries" in body or "qvs" in body
+        if "queries" in body:
+            texts = list(body["queries"])
+        elif "q" in body:
+            texts = [body["q"]]
+        else:
+            texts = None
+        if mode == "sparse":
+            if texts is None:
+                raise BadRequest("sparse search needs q/queries text")
+            if batched and not texts:
+                # reject BEFORE anything dispatches: an empty micro-batch
+                # has nothing to scatter, and invoking the fleet for it
+                # would bill every partition for zero queries (the gateway
+                # maps this to a 400 — the client's error, not a 502)
+                raise BadRequest("queries=[] — an empty micro-batch has "
+                                 "nothing to dispatch")
+            return mode, batched, texts, None
+        if self.embedder is None:
+            raise BadRequest("this fleet serves no dense-vector tier "
+                             "(build it with FleetSpec(index=IndexSpec("
+                             "vector=VectorSpec(...))))")
+        if mode == "hybrid" and texts is None:
+            raise BadRequest("hybrid search needs q/queries text for its "
+                             "sparse tier")
+        if "qvs" in body:
+            vecs = [list(v) for v in body["qvs"]]
+        elif "qv" in body:
+            vecs = [list(body["qv"])]
+        else:
+            vecs = None
+        if vecs is None:
+            if texts is None:
+                raise BadRequest(f"{mode} search needs text or qv/qvs "
+                                 "query vectors")
+            vecs = [[float(x) for x in self.embedder(q)] for q in texts]
+        if texts is not None and len(vecs) != len(texts):
+            raise BadRequest(f"{len(vecs)} query vectors for "
+                             f"{len(texts)} text queries")
+        if batched and not vecs:
+            raise BadRequest("qvs=[] — an empty micro-batch has nothing "
+                             "to dispatch")
+        return mode, batched, texts, vecs
+
+    def _merged_hitlists(self, results: list, n_q: int, batched: bool,
+                         mode: str, k: int) -> list[list[PartitionHit]]:
+        """Coordinator-side gather: per-query global top-k hit lists from
+        the scatter's raw per-partition results.
+
+        Sparse/dense merge exactly like the pre-hybrid path (the handler
+        puts the selected tier's hits in the primary result fields).
+        Hybrid fuses with Reciprocal Rank Fusion: each tier merges to the
+        full per-partition depth (``search_k`` — the deepest sound
+        ranking), then ``rrf_fuse`` combines the two rankings by rank
+        alone, in fixed (sparse, dense) tier order — the same call the
+        oracle fusion makes, so fused scores are bit-identical to it."""
+        def tier(qi: int, sub: str | None) -> list[dict]:
+            per_part = []
+            for r in results:
+                rr = r["results"][qi] if batched else r
+                per_part.append(rr[sub] if sub else rr)
+            return per_part
+
+        if mode != "hybrid":
+            return [_merge_hits(tier(qi, None), k) for qi in range(n_q)]
+        out = []
+        for qi in range(n_q):
+            sparse = _merge_hits(tier(qi, None), self.search_k)
+            dense = _merge_hits(tier(qi, "dense"), self.search_k)
+            bykey = {(h.partition, h.doc_id): h for h in dense}
+            bykey.update({(h.partition, h.doc_id): h for h in sparse})
+            fused = rrf_fuse([[(h.partition, h.doc_id) for h in sparse],
+                              [(h.partition, h.doc_id) for h in dense]], k)
+            out.append([PartitionHit(key[1], score, key[0],
+                                     bykey[key].ext_id)
+                        for key, score in fused])
+        return out
+
     def _search_route(self, body: dict, t_arrival: float | None
                       ) -> tuple[dict, float, InvocationRecord | None]:
         # a partition only surfaces its top search_k candidates — a merged
         # rank past that could silently miss docs, so clamp rather than lie
         k = min(int(body.get("k", self.search_k)), self.search_k)
         fetch_docs = body.get("fetch_docs", True)
-        batched = "queries" in body
-        if batched and not body["queries"]:
-            # reject BEFORE anything dispatches: an empty micro-batch has
-            # nothing to scatter, and invoking the fleet for it would bill
-            # every partition for zero queries (the gateway maps this to a
-            # 400 — the client's error, not a 502 fleet failure)
-            raise BadRequest("queries=[] — an empty micro-batch has nothing "
-                             "to dispatch")
-        payload = {"k": k, "fetch_docs": False}
+        mode, batched, texts, vecs = self._query_plan(body)
+        n_q = len(texts) if texts is not None else len(vecs)
+        # hybrid legs return their full search_k per tier — RRF ranks are
+        # only sound at the deepest per-tier depth; the fused list then
+        # truncates to the caller's k
+        payload = {"k": self.search_k if mode == "hybrid" else k,
+                   "fetch_docs": False}
+        if mode != "sparse":
+            payload["mode"] = mode
         if self.indexer is not None:
             # pin ONE generation for every leg of this query — primaries,
             # hedged backups, freshly-scaled replicas — so a commit's
             # rollover landing mid-scatter can never tear the merge across
-            # generations (ScatterGather additionally asserts this)
+            # generations (ScatterGather additionally asserts this, across
+            # BOTH tiers of a hybrid result)
             payload["gen"] = self.indexer.gen
         if batched:
-            payload["queries"] = list(body["queries"])
-            merged, lat, records = self.scatter.search_batch(
-                payload, k, t_arrival=t_arrival)
-            raw, fetch_s = self._fetch_raw(merged, fetch_docs)
+            if texts is not None:
+                payload["queries"] = texts
+            if vecs is not None:
+                payload["qvs"] = vecs
+        else:
+            if texts is not None:
+                payload["q"] = texts[0]
+            if vecs is not None:
+                payload["qv"] = vecs[0]
+        results, lat, records = self.scatter.scatter(
+            payload, t_arrival=t_arrival)
+        merged = self._merged_hitlists(results, n_q, batched, mode, k)
+        raw, fetch_s = self._fetch_raw(merged, fetch_docs)
+        if batched:
             result: dict = {"results": [self._materialize(hits, raw)
                                         for hits in merged]}
         else:
-            payload["q"] = body["q"]
-            hits, lat, records = self.scatter.search(
-                payload, k, t_arrival=t_arrival)
-            raw, fetch_s = self._fetch_raw([hits], fetch_docs)
-            result = self._materialize(hits, raw)
+            result = self._materialize(merged[0], raw)
         result["partitions"] = [
             {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
              "backfill_s": r.backfill_s, "latency_s": r.latency_s,
@@ -720,12 +917,13 @@ class PartitionedSearchApp:
         the window is still open can never retroactively move an admitted
         query onto an index it didn't arrive under (the flush then splits
         into one scatter per pinned generation; every one of them still
-        merges hits from exactly one generation)."""
-        if "queries" in body and not body["queries"]:
-            raise BadRequest("queries=[] — an empty micro-batch has nothing "
-                             "to dispatch")
+        merges hits from exactly one generation). Dense/hybrid bodies also
+        resolve their query vectors here (embedding the text when the
+        client sent none), so a flush never has to reject."""
+        mode, _, texts, vecs = self._query_plan(body)
+        body = dict(body)
+        body["_texts"], body["_vecs"], body["_mode"] = texts, vecs, mode
         if self.indexer is not None:
-            body = dict(body)
             body["_gen"] = self.indexer.gen
         return body
 
@@ -740,50 +938,73 @@ class PartitionedSearchApp:
         that merge). Duplicate query strings across (or within) bodies are
         NOT coalesced: every admitted query gets its own slot in the batch
         and its own full result."""
-        per_body = []      # (batched, queries, k, fetch_docs, gen) per body
+        # (batched, texts, vecs, mode, n_q, k, fetch_docs, gen) per body —
+        # _admit_search already validated and resolved _texts/_vecs/_mode
+        per_body = []
         for body in bodies:
-            batched = "queries" in body
+            texts, vecs = body["_texts"], body["_vecs"]
+            mode = body["_mode"]
             per_body.append((
-                batched,
-                list(body["queries"]) if batched else [body["q"]],
+                "queries" in body or "qvs" in body,
+                texts, vecs, mode,
+                len(texts) if texts is not None else len(vecs),
                 min(int(body.get("k", self.search_k)), self.search_k),
                 body.get("fetch_docs", True),
                 body.get("_gen")))
-        # one scatter per pinned generation, in admission order — normally
-        # exactly one; two when a commit landed inside the open window
-        gen_order: list = []
-        gen_members: dict = {}
-        for bi, (_, _, _, _, gen) in enumerate(per_body):
-            if gen not in gen_members:
-                gen_order.append(gen)
-                gen_members[gen] = []
-            gen_members[gen].append(bi)
+        # one scatter per (pinned generation, mode), in admission order —
+        # normally exactly one; more when a commit landed inside the open
+        # window or modes mix (tiers hydrate per leg, so a mode is part of
+        # the dispatch identity, not a per-query flag inside one payload)
+        group_order: list = []
+        group_members: dict = {}
+        for bi, (_, _, _, mode, _, _, _, gen) in enumerate(per_body):
+            gkey = (gen, mode)
+            if gkey not in group_members:
+                group_order.append(gkey)
+                group_members[gkey] = []
+            group_members[gkey].append(bi)
         merged_by_body: dict[int, list] = {}
         lat_by_body: dict[int, float] = {}
         recs_by_body: dict[int, list] = {}
-        for gen in gen_order:
-            idxs = gen_members[gen]
-            flat = [q for bi in idxs for q in per_body[bi][1]]
-            payload: dict = {"queries": flat, "k": self.search_k,
-                             "fetch_docs": False}
+        for gkey in group_order:
+            gen, mode = gkey
+            idxs = group_members[gkey]
+            payload: dict = {"k": self.search_k, "fetch_docs": False}
+            if mode != "sparse":
+                payload["mode"] = mode
+                payload["qvs"] = [v for bi in idxs
+                                  for v in per_body[bi][2]]
+            if mode != "dense":
+                payload["queries"] = [q for bi in idxs
+                                      for q in per_body[bi][1]]
+            elif any(per_body[bi][1] is not None for bi in idxs):
+                # text-less dense bodies leave queries out entirely; mixed
+                # groups substitute "" so counts stay aligned for handlers
+                payload["queries"] = [q for bi in idxs for q in
+                                      (per_body[bi][1] or
+                                       [""] * per_body[bi][4])]
             if gen is not None:
                 payload["gen"] = gen
-            merged, lat, records = self.scatter.search_batch(
-                payload, self.search_k, t_arrival=t_dispatch)
+            results, lat, records = self.scatter.scatter(
+                payload, t_arrival=t_dispatch)
+            n_flat = sum(per_body[bi][4] for bi in idxs)
+            merged = self._merged_hitlists(results, n_flat, True, mode,
+                                           self.search_k)
             at = 0
             for bi in idxs:
-                n = len(per_body[bi][1])
+                n = per_body[bi][4]
                 merged_by_body[bi] = merged[at: at + n]
                 at += n
                 lat_by_body[bi] = lat
                 recs_by_body[bi] = records
         # ONE batched KV fetch for the union of every doc-requesting
         # body's hits — the same amortization the handler-side batch does
-        need = [hits for bi, (_, _, _, fetch, _) in enumerate(per_body)
-                if fetch for hits in merged_by_body[bi]]
+        need = [hits for bi, pb in enumerate(per_body)
+                if pb[6] for hits in merged_by_body[bi]]
         raw, fetch_s = self._fetch_raw(need, True) if need else ({}, 0.0)
         out = []
-        for bi, (batched, queries, k, fetch_docs, gen) in enumerate(per_body):
+        for bi, (batched, texts, vecs, mode, n_q, k,
+                 fetch_docs, gen) in enumerate(per_body):
             braw = raw if fetch_docs else {}
             hit_lists = [hits[:k] for hits in merged_by_body[bi]]
             if batched:
@@ -810,9 +1031,10 @@ class PartitionedSearchApp:
 
 def build_partitioned_search_app(
     docs: Iterable[tuple[str, str]],
-    n_parts: int = 4,
+    spec: "FleetSpec | int | None" = None,
     *,
-    replicas: int = 1,
+    n_parts: int | None = None,
+    replicas: int | None = None,
     hedge: "HedgePolicy | float | None" = None,
     autoscale: "AutoscalePolicy | bool | None" = None,
     routing: str | None = None,
@@ -822,11 +1044,25 @@ def build_partitioned_search_app(
     runtime_config: RuntimeConfig | None = None,
     search_config: SearchConfig | None = None,
     backend: Backend | None = None,
-    asset_prefix: str = "index",
+    asset_prefix: str | None = None,
 ) -> PartitionedSearchApp:
     """Assemble the partitioned fleet: one segment per partition, ``replicas``
     Lambda functions serving it, global BM25 stats, scatter-gather behind
     ``/search``.
+
+    The configuration surface is :class:`~repro.core.partition.FleetSpec`::
+
+        app = build_partitioned_search_app(docs, FleetSpec(
+            n_parts=4,
+            replication=ReplicationSpec(replicas=2, hedge=0.05),
+            index=IndexSpec(vector=VectorSpec(dim=16)),   # dense tier
+        ))
+
+    DEPRECATED: the pre-FleetSpec keyword sprawl (``n_parts=...,
+    replicas=..., hedge=..., ...``) still assembles identically through a
+    shim — each legacy kwarg maps onto the corresponding spec field, and a
+    bare int second positional is ``n_parts`` — but new call sites should
+    pass a ``FleetSpec``; mixing both surfaces in one call is an error.
 
     Every partition's segment is packed with ``compute_global_stats`` over
     the FULL corpus — the distributed-IR invariant that makes the merged
@@ -866,66 +1102,121 @@ def build_partitioned_search_app(
     fleets: a hot head partition, a cold tail) — global BM25 stats keep
     the merged ranking exact regardless of the split.
     """
-    if replicas < 1:
-        raise ValueError(f"replicas must be >= 1, got {replicas}")
-    if isinstance(hedge, (int, float)):
-        hedge = HedgePolicy(after_s=float(hedge))
-    if autoscale is True:
-        autoscale = AutoscalePolicy()
-    if routing is None:
-        routing = "aware" if autoscale else "static"
+    # keyword sprawl = the flattened fleet shape that FleetSpec replaced.
+    # runtime_config / search_config / backend are verbatim FleetSpec
+    # fields, fine to pass alongside the bare-int n_parts shorthand.
+    sprawl = {k: v for k, v in dict(
+        n_parts=n_parts, replicas=replicas, hedge=hedge, autoscale=autoscale,
+        routing=routing, window=window, partition_weights=partition_weights,
+        merge_policy=merge_policy, asset_prefix=asset_prefix).items()
+        if v is not None}
+    legacy = dict(sprawl)
+    for k, v in dict(runtime_config=runtime_config,
+                     search_config=search_config, backend=backend).items():
+        if v is not None:
+            legacy[k] = v
+    if isinstance(spec, FleetSpec):
+        if legacy:
+            raise TypeError(
+                "pass configuration on the FleetSpec, not as legacy "
+                f"kwargs: {sorted(legacy)}")
+    else:
+        if spec is not None:       # positional n_parts shorthand, not sprawl
+            legacy.setdefault("n_parts", int(spec))
+        if sprawl:
+            warnings.warn(
+                "build_partitioned_search_app's keyword sprawl is "
+                "deprecated; pass a FleetSpec instead",
+                DeprecationWarning, stacklevel=2)
+        spec = FleetSpec(
+            n_parts=legacy.get("n_parts", 4),
+            replication=ReplicationSpec(
+                replicas=legacy.get("replicas", 1),
+                hedge=legacy.get("hedge"),
+                autoscale=legacy.get("autoscale")),
+            gateway=GatewaySpec(window=legacy.get("window"),
+                                routing=legacy.get("routing")),
+            index=IndexSpec(
+                partition_weights=legacy.get("partition_weights"),
+                merge_policy=legacy.get("merge_policy"),
+                asset_prefix=legacy.get("asset_prefix", "index")),
+            runtime_config=legacy.get("runtime_config"),
+            search_config=legacy.get("search_config"),
+            backend=legacy.get("backend"))
+
+    rep, gw, ix = spec.replication, spec.gateway, spec.index
+    autoscale_policy = rep.autoscale
+    if autoscale_policy is True:
+        autoscale_policy = AutoscalePolicy()
+    resolved_routing = gw.routing or ("aware" if autoscale_policy
+                                      else "static")
+    embedder = None
+    if ix.vector is not None:
+        embedder = ix.vector.embedder or hash_embedder(ix.vector.dim)
+    scfg = spec.search_config or SearchConfig()
+    if scfg.lazy_hydration is None:
+        # the fleet default since PR 8: cold legs answer from range reads
+        # of the superindex + the queried terms' blocks (PR 7's layout),
+        # backfilling off the critical path. Pass lazy_hydration=False to
+        # pin the historical eager profile.
+        scfg = dataclasses.replace(scfg, lazy_hydration=True)
+
     docs = list(docs)
-    store = ObjectStore(backend)
+    store = ObjectStore(spec.backend)
     doc_store = KVStore()
     catalog = AssetCatalog(store)
-    runtime = FaaSRuntime(runtime_config)
+    runtime = FaaSRuntime(spec.runtime_config)
     gstats = compute_global_stats(docs)
     # every partition packs against the corpus-global vocab: queries then
     # encode (and idf-truncate, for > max_terms) identically per partition
     gvocab = global_vocab(gstats)
-    parts, per = partition_corpus(docs, n_parts, weights=partition_weights)
-    scfg = search_config or SearchConfig()
+    parts, per = partition_corpus(docs, spec.n_parts,
+                                  weights=ix.partition_weights)
     indexer = FleetIndexer(
         catalog, doc_store, runtime, stats=gstats, vocab=gvocab,
-        merge_policy=merge_policy, sim_write_s=scfg.sim_write_s,
+        merge_policy=ix.merge_policy, sim_write_s=scfg.sim_write_s,
         sim_write_per_doc_s=scfg.sim_write_per_doc_s,
-        stats_asset=f"{asset_prefix}-stats")
+        stats_asset=f"{ix.asset_prefix}-stats",
+        embedder=embedder,
+        vec_dim=ix.vector.dim if ix.vector else 16,
+        vec_dtype=ix.vector.dtype if ix.vector else "float32")
     assets, fn_groups = [], []
     for p, pdocs in enumerate(parts):
         if not pdocs:        # corpus didn't fill the last partition(s)
             continue
-        asset = f"{asset_prefix}-p{p}"
+        asset = f"{ix.asset_prefix}-p{p}"
         indexer.add_partition(asset, pdocs)
         group = []
-        for r in range(replicas):
+        for r in range(rep.replicas):
             fn = f"search-p{p}" if r == 0 else f"search-p{p}r{r}"
             runtime.register(fn, make_search_handler(
-                catalog, doc_store, asset, search_config))
+                catalog, doc_store, asset, scfg))
             group.append(fn)
         assets.append(asset)
         fn_groups.append(group)
-    scatter = ScatterGather(runtime, fn_groups, hedge=hedge, routing=routing)
+    scatter = ScatterGather(runtime, fn_groups, hedge=rep.hedge,
+                            routing=resolved_routing)
     gateway = Gateway(runtime)
     controller = None
-    if autoscale:
+    if autoscale_policy:
         # one factory per partition: a scale-up registers a fresh handler
         # over the SAME published asset — no re-publish, no new segment
         factories = [
             (lambda a=asset_name: make_search_handler(
-                catalog, doc_store, a, search_config))
+                catalog, doc_store, a, scfg))
             for asset_name in assets]
         controller = FleetController(
-            runtime, scatter, factories, autoscale,
+            runtime, scatter, factories, autoscale_policy,
             ping_payload={"q": "", "k": 1, "fetch_docs": False})
     app = PartitionedSearchApp(
         store=store, catalog=catalog, doc_store=doc_store, runtime=runtime,
         gateway=gateway, scatter=scatter, assets=assets,
-        fn_names=scatter.fn_names, n_parts=n_parts, n_docs_local=per,
+        fn_names=scatter.fn_names, n_parts=spec.n_parts, n_docs_local=per,
         search_k=scfg.k,
-        fn_groups=scatter.groups, replicas=replicas, controller=controller,
-        indexer=indexer)
+        fn_groups=scatter.groups, replicas=rep.replicas,
+        controller=controller, indexer=indexer, embedder=embedder)
     gateway.route("GET", "/search", app._search_route)
     gateway.route_batched("GET", "/search", app._search_route_batch,
-                          policy=window, admit=app._admit_search)
+                          policy=gw.window, admit=app._admit_search)
     gateway.route("POST", "/index", app._index_route)
     return app

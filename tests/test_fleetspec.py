@@ -1,0 +1,190 @@
+"""FleetSpec — the one typed fleet surface — and the rollover prewarm.
+
+Covers the API-redesign contract: spec validation at construction, the
+legacy-kwarg deprecation shim (same fleet, same results, one warning),
+mixing both surfaces is an error, lazy hydration is the fleet default,
+and the prewarm ping moved from full backfill to term-frequency-ranked
+partial hydration without changing a single post-rollover bit.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.partition import (FleetSpec, GatewaySpec, HedgePolicy,
+                                  IndexSpec, ReplicationSpec, VectorSpec)
+from repro.core.runtime import RuntimeConfig
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_partitioned_search_app
+
+CFG = SearchConfig(sim_exec_s=0.002, sim_write_s=0.02)
+
+
+# -- validation at construction -------------------------------------------------
+
+
+def test_spec_validates_fields():
+    with pytest.raises(ValueError):
+        FleetSpec(n_parts=0)
+    with pytest.raises(ValueError):
+        ReplicationSpec(replicas=0)
+    with pytest.raises(ValueError):
+        GatewaySpec(routing="clever")
+    with pytest.raises(ValueError):
+        VectorSpec(dim=0)
+    with pytest.raises(ValueError):
+        VectorSpec(dtype="float64")
+    with pytest.raises(ValueError):
+        FleetSpec(n_parts=3, index=IndexSpec(partition_weights=[1.0, 2.0]))
+    with pytest.raises(ValueError):
+        FleetSpec(n_parts=2, index=IndexSpec(partition_weights=[1.0, -1.0]))
+
+
+def test_hedge_float_shorthand_resolves_to_policy():
+    spec = ReplicationSpec(replicas=2, hedge=0.25)
+    assert isinstance(spec.hedge, HedgePolicy)
+    assert spec.hedge.after_s == 0.25
+
+
+# -- the deprecation shim -------------------------------------------------------
+
+
+def test_legacy_kwargs_warn_and_build_the_same_fleet():
+    docs = synth_corpus(80, vocab=150, seed=0)
+    q = synth_queries(docs, 1, seed=1)[0]
+    spec_app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=2, replication=ReplicationSpec(replicas=2,
+                                               hedge=HedgePolicy()),
+        runtime_config=RuntimeConfig(), search_config=CFG))
+    with pytest.warns(DeprecationWarning):
+        legacy_app = build_partitioned_search_app(
+            docs, n_parts=2, replicas=2, hedge=HedgePolicy(),
+            runtime_config=RuntimeConfig(), search_config=CFG)
+    r1 = spec_app.query(q, k=10, fetch_docs=False)
+    r2 = legacy_app.query(q, k=10, fetch_docs=False)
+    assert r1.body["ext_ids"] == r2.body["ext_ids"]
+    assert list(r1.body["scores"]) == list(r2.body["scores"])
+
+
+def test_bare_int_positional_is_legacy_n_parts():
+    docs = synth_corpus(40, vocab=100, seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # an int spec is NOT deprecated
+        app = build_partitioned_search_app(docs, 3, search_config=CFG)
+    assert app.n_parts == 3
+
+
+def test_mixing_spec_and_legacy_kwargs_is_an_error():
+    docs = synth_corpus(40, vocab=100, seed=3)
+    with pytest.raises(TypeError):
+        build_partitioned_search_app(docs, FleetSpec(n_parts=2), replicas=2)
+
+
+# -- lazy hydration is the fleet default ----------------------------------------
+
+
+def test_fleet_defaults_to_lazy_hydration():
+    docs = synth_corpus(60, vocab=150, seed=4)
+    app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=2, runtime_config=RuntimeConfig(), search_config=CFG))
+    q = synth_queries(docs, 1, seed=5)[0]
+    r = app.query(q, k=10, fetch_docs=False)
+    assert r.ok
+    # the lazy cold path bills backfill (the off-critical-path upgrade) —
+    # an eager fleet never touches that ledger line
+    assert app.runtime.ledger.backfill_gb_seconds > 0
+    eager = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=2, runtime_config=RuntimeConfig(),
+        search_config=dataclasses.replace(CFG, lazy_hydration=False)))
+    r2 = eager.query(q, k=10, fetch_docs=False)
+    assert eager.runtime.ledger.backfill_gb_seconds == 0
+    # and lazy vs eager results are bit-identical
+    assert r.body["ext_ids"] == r2.body["ext_ids"]
+    assert ([np.float32(s).view(np.uint32) for s in r.body["scores"]]
+            == [np.float32(s).view(np.uint32) for s in r2.body["scores"]])
+
+
+# -- rollover prewarm: ranked partial hydration, not full backfill ---------------
+
+
+def _churn_and_commit(app, docs, t_gap=0.01):
+    app.add_documents(docs, t_arrival=app.runtime.clock + t_gap)
+    app.delete_documents([d for d, _ in app.indexer.live_corpus()[::37]],
+                         t_arrival=app.runtime.clock + t_gap)
+    r = app.commit(t_arrival=app.runtime.clock + t_gap)
+    assert r.ok, r.body
+    return r
+
+
+def test_prewarm_reads_fewer_bytes_than_full_backfill_ping():
+    """The rollover ping on a lazy fleet hydrates the superindex plus the
+    TOP-DOCUMENT-FREQUENCY terms' blocks (and the dense tier's live rows)
+    instead of streaming whole segments — strictly fewer object-store GET
+    bytes than the eager fleet's full re-hydration ping, while every
+    post-rollover response stays bit-identical between the two fleets."""
+    docs = synth_corpus(240, vocab=400, seed=6)
+    queries = synth_queries(docs, 6, seed=7)
+
+    def build(lazy):
+        cfg = CFG if lazy else dataclasses.replace(CFG,
+                                                   lazy_hydration=False)
+        app = build_partitioned_search_app(docs[:200], FleetSpec(
+            n_parts=2, index=IndexSpec(vector=VectorSpec(dim=16)),
+            runtime_config=RuntimeConfig(), search_config=cfg))
+        app.warm()
+        for q in queries:               # steady state before the commit
+            app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+        return app
+
+    lazy_app, eager_app = build(True), build(False)
+    ping_bytes = {}
+    for tag, app in (("lazy", lazy_app), ("eager", eager_app)):
+        before = app.store.stats.bytes_out
+        _churn_and_commit(app, docs[200:])
+        ping_bytes[tag] = app.store.stats.bytes_out - before
+    assert ping_bytes["lazy"] < ping_bytes["eager"], ping_bytes
+
+    # bit-identical post-rollover serving, both tiers
+    for q in queries:
+        for mode in ("sparse", "dense", "hybrid"):
+            rl = lazy_app.query(q, k=10, mode=mode,
+                                t_arrival=lazy_app.runtime.clock + 0.05,
+                                fetch_docs=False)
+            re_ = eager_app.query(q, k=10, mode=mode,
+                                  t_arrival=eager_app.runtime.clock + 0.05,
+                                  fetch_docs=False)
+            assert rl.body["ext_ids"] == re_.body["ext_ids"], (q, mode)
+            assert ([np.float32(s).view(np.uint32)
+                     for s in rl.body["scores"]]
+                    == [np.float32(s).view(np.uint32)
+                        for s in re_.body["scores"]]), (q, mode)
+
+
+def test_prewarm_ping_keeps_rollover_queries_off_the_hydration_path():
+    """After a commit's prewarm pings, the first query against the new
+    generation finds its terms already hydrated when they rank in the
+    prewarmed top-df set — the rollover window's whole point."""
+    docs = synth_corpus(160, vocab=200, seed=8)
+    app = build_partitioned_search_app(docs[:140], FleetSpec(
+        n_parts=2, runtime_config=RuntimeConfig(), search_config=CFG))
+    app.warm()
+    queries = synth_queries(docs, 4, seed=9)
+    for q in queries:
+        app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    _churn_and_commit(app, docs[140:])
+    # rollover queries: no cold record, and results match a fresh oracle
+    from repro.search.oracle import OracleSearcher
+    corpus = app.indexer.live_corpus()
+    oracle = OracleSearcher(corpus)
+    n0 = len(app.runtime.records)
+    for q in queries:
+        r = app.query(q, k=10, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+        want = [oracle.doc_ids[i] for i, _ in oracle.search(q, k=10)]
+        assert r.body["ext_ids"] == want
+    assert not any(rec.cold for rec in app.runtime.records[n0:])
