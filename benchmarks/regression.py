@@ -7,7 +7,7 @@ Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
 with ``--fast --det --seed 0 --only
-b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13,b14 --json BENCH_baseline.json``
+b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13,b14,b15 --json BENCH_baseline.json``
 whenever a deliberate perf change moves a metric).
 
 Gated metrics (lower is better for all of them):
@@ -27,12 +27,14 @@ Gated metrics (lower is better for all of them):
 * B14 hybrid-fleet latencies  — fail on a per-mode p99 regression > 25%
   or on the dense-vs-sparse p99 ratio drifting past 25% (the "dense is
   not a second-class tier" claim)
-* B7/B11/B12/B13/B14 $-and-GB·s — fail on a regression > 15%
+* B15 overload survival      — fail on an admitted-under-burst p99 or
+  staggered-rollover ratio regression > 25%
+* B7/B11/B12/B13/B14/B15 $-and-GB·s — fail on a regression > 15%
 
-B14 also carries three exactness bits (sparse-vs-oracle, dense uint32
-bitwise, hybrid fused-score) gated by PARITY_GATES: the PR value must be
-exactly 1 — parity is pass/fail, a "25% regression" of a bit is
-meaningless.
+B14 and B15 also carry exactness bits (sparse-vs-oracle, dense uint32
+bitwise, hybrid fused-score, race-vs-serialized-oracle, shed-billed-zero,
+retry-storm-free) gated by PARITY_GATES: the PR value must be exactly 1 —
+parity is pass/fail, a "25% regression" of a bit is meaningless.
 
 A tiny absolute floor per metric class absorbs float jitter without hiding
 real regressions (a forgotten merge-cost term or a doubled invocation count
@@ -93,6 +95,13 @@ GATES: list[tuple[str, float, float]] = [
     ("b14_sparse_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
     ("b14_dense_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
     ("b14_hybrid_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    # B15 overload survival: the admitted tail under burst + shedding, the
+    # staggered-rollover ratio (dimensionless floor), and the all-phase
+    # bill; shed-rate bounds and retry-storm-freedom are hard-asserted in
+    # bench-smoke (they're pass/fail claims, not drifting metrics)
+    ("b15_admitted_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b15_rollover_p99_vs_steady", LATENCY_LIMIT, 0.05),
+    ("b15_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
 ]
 
 # exactness bits: the PR value must be exactly 1 (baseline drift is
@@ -101,6 +110,9 @@ PARITY_GATES: list[str] = [
     "b14_sparse_topk_equals_oracle",
     "b14_dense_bitwise_equal",
     "b14_hybrid_topk_equals_oracle",
+    "b15_race_topk_equals_serialized_oracle",
+    "b15_shed_billed_zero",
+    "b15_retry_storm_free",
 ]
 
 

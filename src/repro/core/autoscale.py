@@ -154,6 +154,14 @@ class FleetController:
                        for g in scatter.groups]
         self.events: list[dict] = []     # scale_up / retire, with reasons
         self.pings = 0
+        # admission sheds the gateway reported (Gateway.route_batched's
+        # on_shed hook): refused demand never reaches a pool, so none of
+        # the record-derived signals can see it — without this counter a
+        # fleet in deep overload looks QUIET to the controller (sheds
+        # suppress arrivals) and would never buy the capacity that ends
+        # the shedding
+        self.sheds_seen = 0              # cumulative (introspection)
+        self._sheds = 0                  # since the last tick (the signal)
         self._last_tick = -math.inf
         self._rec_ptr = 0                # window start into runtime.records
         self._kill_ptr = 0               # interrupt: unseen kill_log entries
@@ -174,6 +182,13 @@ class FleetController:
             return True
         return False
 
+    def note_shed(self, t: float) -> None:
+        """One admission-shed arrival (gateway backpressure). Counted as
+        scale-up pressure at the next tick — the only demand signal a shed
+        leaves, since the request is refused before any invocation."""
+        self.sheds_seen += 1
+        self._sheds += 1
+
     def tick(self, now: float | None = None) -> None:
         t = self.runtime.clock if now is None else now
         pol = self.policy
@@ -189,8 +204,10 @@ class FleetController:
                        for k in spend}
         self._last_spend = spend
 
+        sheds, self._sheds = self._sheds, 0
         for p, group in enumerate(self.scatter.groups):
-            self._control_group(p, group, window, spend_delta, t)
+            self._control_group(p, group, window, spend_delta, t,
+                                sheds=sheds)
         if pol.keepalive:
             self._keepalive(t)
 
@@ -235,7 +252,8 @@ class FleetController:
         return floor if math.isnan(wp50) else max(floor, 2.0 * wp50)
 
     def _control_group(self, p: int, group: list[str], window: list,
-                       spend_delta: dict, now: float) -> None:
+                       spend_delta: dict, now: float, *,
+                       sheds: int = 0) -> None:
         """Steer partition ``p``'s group toward ITS OWN replica target.
 
         Every signal here is per-group — this group's trailing arrival
@@ -278,6 +296,12 @@ class FleetController:
         if rate / len(group) > pol.up_qps_per_replica:
             target = len(group) + 1
             up_reason = f"demand: {rate:.1f} q/s over {len(group)} pool(s)"
+        elif sheds:
+            # NOT gated on `active`: shed arrivals never become records,
+            # so deep overload reads as a LOW arrival rate here — the shed
+            # count is the only trace the refused demand leaves
+            target = len(group) + 1
+            up_reason = f"backpressure: {sheds} shed arrival(s) since last tick"
         elif active and hedges:
             target = len(group) + 1
             up_reason = (f"hedge tax: {hedges} backup leg(s), "
@@ -418,5 +442,6 @@ class FleetController:
             "scale_ups": sum(e["action"] == "scale_up" for e in self.events),
             "retires": sum(e["action"] == "retire" for e in self.events),
             "pings": self.pings,
+            "sheds_seen": self.sheds_seen,
             "spend": led.attribution(),
         }

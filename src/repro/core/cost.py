@@ -77,6 +77,12 @@ class CostLedger:
     write_invocations: int = 0
     backfill_gb_seconds: float = 0.0
     backfill_invocations: int = 0
+    # Admission-shed arrivals: rejected at the gateway with 429 before any
+    # dispatch, so they bill NOTHING — the GB·s line exists only to pin that
+    # claim (it must stay 0.0 forever; a nonzero value means a shed request
+    # leaked into the fleet).
+    shed_requests: int = 0
+    shed_gb_seconds: float = 0.0
 
     def charge(self, inv: Invocation) -> float:
         quantum = LAMBDA_BILLING_QUANTUM_S
@@ -100,6 +106,11 @@ class CostLedger:
             self.backfill_gb_seconds += gbs
             self.backfill_invocations += 1
         return gbs * PRICE_PER_GB_S
+
+    def record_shed(self) -> None:
+        """Count an admission-shed arrival. Sheds never dispatch, so no
+        ``Invocation`` exists to charge — the count is the whole bill."""
+        self.shed_requests += 1
 
     @property
     def compute_dollars(self) -> float:

@@ -26,10 +26,46 @@ import math
 from typing import Any, Callable
 
 from repro.core.runtime import (FaaSRuntime, InvocationRecord,
-                                nearest_rank_percentiles)
+                                RetriesExhausted, nearest_rank_percentiles)
 
 
 GATEWAY_OVERHEAD_S = 0.010   # API-Gateway proxy+auth overhead (~10 ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackpressurePolicy:
+    """Admission backpressure for a batched route.
+
+    A window that closes at ``max_batch`` (a HARD flush) means the arrival
+    process outran the widest batch the route may dispatch. One hard flush
+    is a burst; ``consecutive_hard_flushes`` of them in a row is overload,
+    and from then on new arrivals are SHED: resolved immediately with a 429
+    and a ``Retry-After`` derived from the trailing drain rate (the seconds
+    the fleet needs to dispatch one more ``max_batch`` at its observed
+    throughput). Shed requests never dispatch and bill nothing — they are
+    counted on :class:`~repro.core.cost.CostLedger`'s ``shed_*`` line so an
+    operator can see refused demand next to the spend it did not cause."""
+
+    consecutive_hard_flushes: int = 3
+    drain_window_s: float = 1.0        # trailing window for the drain rate
+    min_retry_after_s: float = 0.050
+    max_retry_after_s: float = 2.0
+
+    def __post_init__(self) -> None:
+        if self.consecutive_hard_flushes < 1:
+            raise ValueError("consecutive_hard_flushes must be >= 1")
+        if self.drain_window_s <= 0:
+            raise ValueError("drain_window_s must be > 0")
+        if not 0 <= self.min_retry_after_s <= self.max_retry_after_s:
+            raise ValueError("need 0 <= min_retry_after_s <= max_retry_after_s")
+
+    def retry_after_s(self, batch: int, drain_qps: float) -> float:
+        """Seconds until the fleet should have drained one more ``batch``
+        requests at the trailing rate — the honest Retry-After."""
+        if drain_qps <= 0.0:
+            return self.max_retry_after_s
+        return min(self.max_retry_after_s,
+                   max(self.min_retry_after_s, batch / drain_qps))
 
 
 class RouteError(Exception):
@@ -107,6 +143,7 @@ class WindowPolicy:
     p99_budget_s: float | None = 0.300
     p99_window: int = 64               # trailing requests for the budget clamp
     max_batch: int = 64                # hard flush at this many queued
+    backpressure: BackpressurePolicy | None = None   # None -> never shed
 
     def window_s(self, rate_qps: float, route_p99_s: float) -> float:
         if rate_qps < self.sparse_qps:
@@ -140,11 +177,26 @@ class _AdmissionQueue:
         self.arrivals: list[float] = []     # trailing-rate history
         self.waits: list[float] = []        # per-request t_dispatch - t_arrival
         self.batch_sizes: list[int] = []    # per-flush, for introspection
+        # backpressure state: consecutive max_batch flushes, the trailing
+        # drain history (t_dispatch, batch size), shed arrivals, and the
+        # horizon new arrivals are shed until once the threshold trips
+        self.hard_flushes = 0
+        self.flushes: list[tuple[float, int]] = []
+        self.sheds: list[float] = []
+        self.shed_until = 0.0
 
     def rate(self, now: float) -> float:
         cutoff = now - self.policy.rate_window_s
         self.arrivals = [t for t in self.arrivals if t > cutoff]
         return len(self.arrivals) / self.policy.rate_window_s
+
+    def drain_qps(self, now: float, window_s: float) -> float:
+        """Requests DISPATCHED per second over the trailing window — the
+        throughput the fleet is actually sustaining, as opposed to the
+        arrival rate the clients are offering."""
+        cutoff = now - window_s
+        self.flushes = [(t, n) for t, n in self.flushes if t > cutoff]
+        return sum(n for _, n in self.flushes) / window_s
 
 
 class Gateway:
@@ -155,6 +207,9 @@ class Gateway:
         self._batched: dict[tuple[str, str],
                             tuple[BatchCoordinator, "Callable | None"]] = {}
         self._queues: dict[tuple[str, str], _AdmissionQueue] = {}
+        # shed-notification hooks (e.g. the autoscaler counting refused
+        # demand it would otherwise never see in the invocation records)
+        self._on_shed: dict[tuple[str, str], Callable[[float], None]] = {}
         # end-to-end latency log per route (what "the browser" saw) — the
         # runtime's records are per-invocation, so a hedged or fanned-out
         # request has no single record to read percentiles from
@@ -168,7 +223,8 @@ class Gateway:
     def route_batched(self, method: str, path: str,
                       coordinator: BatchCoordinator, *,
                       policy: WindowPolicy | None = None,
-                      admit: "Callable[[Any, float], Any] | None" = None
+                      admit: "Callable[[Any, float], Any] | None" = None,
+                      on_shed: "Callable[[float], None] | None" = None
                       ) -> None:
         """Register a route whose :meth:`submit` arrivals coalesce through
         the adaptive micro-batch window into single batch dispatches.
@@ -182,6 +238,8 @@ class Gateway:
         key = (method.upper(), path)
         self._batched[key] = (coordinator, admit)
         self._queues[key] = _AdmissionQueue(policy or WindowPolicy())
+        if on_shed is not None:
+            self._on_shed[key] = on_shed
 
     def request(self, method: str, path: str, body: Any = None,
                 *, t_arrival: float | None = None) -> Response:
@@ -198,6 +256,8 @@ class Gateway:
                 lat = rec.latency_s
         except BadRequest as e:  # malformed body → 400, nothing dispatched
             return Response(400, {"error": str(e)}, GATEWAY_OVERHEAD_S)
+        except RetriesExhausted as e:   # bounded retries ran out → typed 503
+            return Response(503, {"error": str(e)}, GATEWAY_OVERHEAD_S)
         except Exception as e:  # Lambda error → 502 from the gateway
             return Response(502, {"error": str(e)}, GATEWAY_OVERHEAD_S)
         self.latencies.setdefault(key, []).append(lat + GATEWAY_OVERHEAD_S)
@@ -229,6 +289,21 @@ class Gateway:
 
         coordinator, admit = self._batched[key]
         handle = PendingResponse(t0)
+        # admission backpressure: past the consecutive-hard-flush threshold
+        # the route sheds — a 429 the client can retry after the fleet has
+        # had time to drain, billed to NOTHING (no dispatch, no charge; the
+        # ledger's shed line is a count, not GB·s)
+        if t0 < q.shed_until:
+            retry_after = q.shed_until - t0
+            self.runtime.ledger.record_shed()
+            q.sheds.append(t0)
+            hook = self._on_shed.get(key)
+            if hook is not None:
+                hook(t0)
+            handle._resolve(Response(
+                429, {"error": "admission backpressure: route overloaded",
+                      "retry_after_s": retry_after}, GATEWAY_OVERHEAD_S))
+            return handle
         if admit is not None:
             try:
                 annotated = admit(body, t0)
@@ -249,7 +324,7 @@ class Gateway:
             q.window_close = t0 + w
         q.pending.append((body, handle))
         if len(q.pending) >= q.policy.max_batch:
-            self._flush_queue(key, t0)  # hard cap: dispatch now
+            self._flush_queue(key, t0, hard=True)  # hard cap: dispatch now
         return handle
 
     def flush(self, now: float | None = None) -> int:
@@ -273,10 +348,34 @@ class Gateway:
         return nearest_rank_percentiles(
             lats[-q.policy.p99_window:], qs=(0.99,))[0.99]
 
-    def _flush_queue(self, key: tuple[str, str], t_dispatch: float) -> None:
+    def _flush_queue(self, key: tuple[str, str], t_dispatch: float,
+                     *, hard: bool = False) -> None:
         q = self._queues[key]
         batch, q.pending = q.pending, []
         q.batch_sizes.append(len(batch))
+        q.flushes.append((t_dispatch, len(batch)))
+        if hard:
+            # A max_batch flush dispatches the batch ONCE, right now. The
+            # burst that filled it must not leak into the NEXT window's
+            # sizing: those arrivals were already absorbed, and leaving them
+            # in the trailing-rate history would make the reopened window
+            # collapse toward zero (rate spike -> tiny window -> instant
+            # re-flush), amplifying the very overload it should absorb.
+            # Reseed with the dispatch instant rather than clearing outright:
+            # an empty history would make the NEXT overload arrival read as
+            # sparse traffic and dispatch solo — a soft flush that resets
+            # the hard streak, so sustained overload would alternate
+            # hard/solo forever and backpressure could never trip.
+            q.arrivals[:] = [t_dispatch]
+            q.hard_flushes += 1
+            bp = q.policy.backpressure
+            if bp is not None and q.hard_flushes >= bp.consecutive_hard_flushes:
+                drain = q.drain_qps(t_dispatch, bp.drain_window_s)
+                q.shed_until = max(
+                    q.shed_until,
+                    t_dispatch + bp.retry_after_s(len(batch), drain))
+        else:
+            q.hard_flushes = 0          # the arrival process fit its window
         coordinator, _ = self._batched[key]
         bodies = [b for b, _ in batch]
         arrivals = [h.t_arrival for _, h in batch]
@@ -286,6 +385,11 @@ class Gateway:
             for _, handle in batch:
                 handle._resolve(
                     Response(400, {"error": str(e)}, GATEWAY_OVERHEAD_S))
+            return
+        except RetriesExhausted as e:   # retries ran out → typed 503 each
+            for _, handle in batch:
+                handle._resolve(
+                    Response(503, {"error": str(e)}, GATEWAY_OVERHEAD_S))
             return
         except Exception as e:          # whole-flight failure → 502 each
             for _, handle in batch:
@@ -306,13 +410,15 @@ class Gateway:
         q = self._queues.get((method.upper(), path))
         if q is None:
             return {"batches": 0, "mean_batch": 0.0, "max_wait_s": 0.0,
-                    "waits": []}
+                    "waits": [], "sheds": 0, "hard_flushes": 0}
         return {
             "batches": len(q.batch_sizes),
             "mean_batch": (sum(q.batch_sizes) / len(q.batch_sizes)
                            if q.batch_sizes else 0.0),
             "max_wait_s": max(q.waits, default=0.0),
             "waits": list(q.waits),
+            "sheds": len(q.sheds),
+            "hard_flushes": q.hard_flushes,
         }
 
     def latency_percentiles(self, method: str, path: str,

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.runtime import nearest_rank_percentiles
+from repro.core.runtime import RetriesExhausted, nearest_rank_percentiles
 
 if TYPE_CHECKING:   # type-only: autoscale/gateway/index/search import upward
     from repro.core.autoscale import AutoscalePolicy
@@ -270,6 +270,10 @@ class ReplicationSpec:
     # AutoscalePolicy, or True for defaults (resolved at assembly — the
     # policy class lives in core.autoscale, which imports this module)
     autoscale: "AutoscalePolicy | bool | None" = None
+    # when a partition leg exhausts its retries: True merges the surviving
+    # partitions' hits (a degraded but fast answer, flagged in the result);
+    # False (default) surfaces the typed 503 — correctness over availability
+    degraded_ok: bool = False
 
     def __post_init__(self) -> None:
         if self.replicas < 1:
@@ -385,7 +389,8 @@ class ScatterGather:
                  hedge: "HedgePolicy | None" = None,
                  merge_cost_s: float = MERGE_COST_S,
                  routing: str = "static",
-                 kill_window_s: float = 30.0) -> None:
+                 kill_window_s: float = 30.0,
+                 degraded_ok: bool = False) -> None:
         if routing not in ("static", "aware"):
             raise ValueError(f"routing must be 'static' or 'aware', got {routing!r}")
         self.runtime = runtime
@@ -396,7 +401,9 @@ class ScatterGather:
         self.merge_cost_s = merge_cost_s
         self.routing = routing
         self.kill_window_s = kill_window_s
+        self.degraded_ok = degraded_ok
         self.last_versions: list[str] = []   # index versions of the last scatter
+        self.last_degraded: list[int] = []   # partitions dropped (degraded_ok)
 
     # -- mutable replica groups (the autoscaler's levers) ---------------------
 
@@ -468,16 +475,51 @@ class ScatterGather:
         shared virtual clock advances only after the whole scatter — and
         end-to-end latency is the max over partitions plus the gather/merge
         term ``merge_cost_s`` (charged identically on the single-query and
-        batched paths). Returns (per-partition results, latency_s, records)."""
+        batched paths). Returns (per-partition results, latency_s, records).
+
+        A leg whose retries run out (:class:`~repro.core.runtime.
+        RetriesExhausted`) either aborts the whole scatter (``degraded_ok=
+        False`` — the gateway maps it to a typed 503) or, with
+        ``degraded_ok=True``, is replaced by an EMPTY result so the
+        surviving partitions still merge: a degraded answer, recorded in
+        ``last_degraded``, never a silently-partial one masquerading as
+        complete. If every leg dies there is nothing to degrade TO, and the
+        first leg's error propagates."""
         t0 = self.runtime.clock if t_arrival is None else t_arrival
         results, records = [], []
-        for group in self.groups:
-            result, rec = self._invoke_leg(group, payload, t0)
+        self.last_degraded = []
+        first_err: RetriesExhausted | None = None
+        for p, group in enumerate(self.groups):
+            try:
+                result, rec = self._invoke_leg(group, payload, t0)
+            except RetriesExhausted as e:
+                if not self.degraded_ok:
+                    raise
+                first_err = first_err or e
+                self.last_degraded.append(p)
+                results.append(self._degraded_result(payload))
+                continue
             results.append(result)
             records.append(rec)
+        if first_err is not None and not records:
+            raise first_err             # nothing survived to answer from
         self._check_generations(results)
         lat = max((r.latency_s for r in records), default=0.0)
         return results, lat + self.merge_cost_s, records
+
+    @staticmethod
+    def _empty_hits() -> dict:
+        return {"ids": [], "scores": [], "ext_ids": [],
+                "dense": {"ids": [], "scores": [], "ext_ids": []}}
+
+    def _degraded_result(self, payload: Any) -> dict:
+        """A well-formed empty stand-in for a dead leg: contributes no hits
+        to the merge and no version to the generation check (the dead leg
+        answered from NO generation)."""
+        if isinstance(payload, dict) and "queries" in payload:
+            return {"results": [self._empty_hits()
+                                for _ in payload["queries"]]}
+        return self._empty_hits()
 
     def _check_generations(self, results: list) -> None:
         """Every leg that reports an index version must report the SAME one

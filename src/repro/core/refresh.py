@@ -308,16 +308,36 @@ class AssetCatalog:
         return self.read_generation(name)
 
     def publish_generation_state(self, name: str, gen: int, stats: dict,
-                                 vocab: dict) -> list:
+                                 vocab: dict,
+                                 writer: dict | None = None) -> list:
         """Publish one generation's SHARED scoring state (live stats +
         vocab) as a segment; returns the ``stats_ref`` the partition
         manifests should carry. One copy per generation, however many
-        partitions reference it."""
+        partitions reference it.
+
+        ``writer`` optionally rides along as ``writer.json`` — coordinator
+        bookkeeping (e.g. the round-robin placement cursor) a SECOND writer
+        must adopt when it rebases on this generation, so a raced commit
+        converges on the same document placement a serialized pair of
+        commits would have produced."""
         seg = f"g{gen:06d}-state"
-        self.publish_segment(name, seg, RamDirectory({
-            "stats.json": orjson.dumps(stats),
-            "vocab.json": orjson.dumps(vocab)}))
+        files = {"stats.json": orjson.dumps(stats),
+                 "vocab.json": orjson.dumps(vocab)}
+        if writer is not None:
+            files["writer.json"] = orjson.dumps(writer)
+        self.publish_segment(name, seg, RamDirectory(files))
         return [name, seg]
+
+    def resolve_generation_writer(self, manifest: GenerationManifest) -> dict:
+        """The coordinator bookkeeping published with a generation's shared
+        state ({} for inline-state or pre-writer-state generations)."""
+        if manifest.stats_ref is None:
+            return {}
+        asset, seg = manifest.stats_ref
+        d = self.open_segment(asset, seg)
+        if "writer.json" not in d.list():
+            return {}
+        return orjson.loads(d.open_input("writer.json").read_all())
 
     def resolve_generation_state(self,
                                  manifest: GenerationManifest) -> tuple[dict, dict]:
@@ -359,13 +379,26 @@ def refresh_fleet(runtime, asset_name: str) -> int:
 
 def rollover_fleet(runtime, fn_groups, gen: int, *,
                    ping_payload: dict | None = None,
-                   t_arrival: float | None = None) -> list:
+                   t_arrival: float | None = None,
+                   stagger: bool = True) -> list:
     """Swap every pool of every replica group to generation ``gen`` with
     zero downtime: ping each function ONCE with the new generation pinned
     in the payload (keepalive — billed to the idle line, excluded from
-    latency percentiles and policy history), all at the same arrival
-    instant, so every pool hydrates — and jit-specializes on — the new
-    generation OFF the query path.
+    latency percentiles and policy history), so every pool hydrates — and
+    jit-specializes on — the new generation OFF the query path.
+
+    Pools within one replica group roll over STAGGERED (``stagger=True``,
+    the default): pool *r+1*'s pings dispatch at the instant pool *r*'s
+    pings complete, so at most ONE of a group's pools is ever busy
+    hydrating — a query landing mid-rollover always finds the group's
+    other pools idle (already re-warmed, or still warm on the old
+    generation, which stays readable until gc), instead of every pool
+    going busy at the same instant and forcing the query to queue behind
+    a hydration or cold-boot a fresh instance. Replica groups themselves
+    roll in parallel at ``t_arrival`` — a query fans out to EVERY
+    partition, so serializing across groups would stretch the rollover
+    without sheltering anyone. A single-pool group (R=1) has nothing to
+    stagger; its behaviour is bit-identical either way.
 
     In-flight queries are never dropped: a query dispatched before the
     swap carries its own pinned generation and any instance can still
@@ -387,13 +420,18 @@ def rollover_fleet(runtime, fn_groups, gen: int, *,
     payload["gen"] = gen
     recs = []
     for group in fn_groups:
+        t_pool = t0
         for fn in (group if isinstance(group, (list, tuple)) else [group]):
             if not runtime.registered(fn):
                 continue
             idle = sum(1 for i in runtime._instances
-                       if i.fn == fn and i.alive and i.busy_until <= t0)
+                       if i.fn == fn and i.alive and i.busy_until <= t_pool)
+            pool_recs = []
             for _ in range(max(1, idle)):
-                _, rec = runtime.invoke(fn, dict(payload), t_arrival=t0,
+                _, rec = runtime.invoke(fn, dict(payload), t_arrival=t_pool,
                                         keepalive=True)
-                recs.append(rec)
+                pool_recs.append(rec)
+            recs.extend(pool_recs)
+            if stagger and pool_recs:
+                t_pool = max(r.t_done for r in pool_recs)
     return recs

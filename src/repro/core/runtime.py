@@ -32,6 +32,18 @@ class RuntimeError_(Exception):
     pass
 
 
+class RetriesExhausted(RuntimeError_):
+    """A function's client-side retries ran out: every attempt landed on an
+    instance that died before the handler ran. Subclasses ``RuntimeError_``
+    so pre-existing broad handlers still catch it, but carries enough for a
+    gateway to map it to a typed 503 instead of a generic 502."""
+
+    def __init__(self, fn: str, attempts: int) -> None:
+        super().__init__(f"{fn}: instance died {attempts} times")
+        self.fn = fn
+        self.attempts = attempts
+
+
 # A handler receives (instance_cache, payload) and returns
 # (result, exec_seconds). exec_seconds is the simulated compute time for the
 # request *excluding* hydration (the cache accounts hydration separately).
@@ -48,6 +60,43 @@ def nearest_rank_percentiles(lats, qs=(0.5, 0.9, 0.99)) -> dict[float, float]:
     return {q: lats[min(len(lats) - 1, int(q * len(lats)))] for q in qs}
 
 
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded client-side retries for instance death.
+
+    ``max_attempts`` counts TOTAL tries (first attempt included); backoff
+    before retry *n* is ``base_backoff_s * multiplier**(n-1)`` capped at
+    ``max_backoff_s``, stretched by up to ``jitter`` (a fraction, drawn from
+    the runtime's seeded RNG so a retry schedule is reproducible per seed).
+    The zero-backoff default reproduces the historical immediate-retry
+    behaviour exactly — including the RNG draw sequence, since jitter only
+    consumes a draw when both jitter and the backoff are nonzero."""
+
+    max_attempts: int = 3
+    base_backoff_s: float = 0.0
+    multiplier: float = 2.0
+    max_backoff_s: float = 2.0
+    jitter: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.base_backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff seconds must be >= 0")
+        if self.multiplier < 1.0:
+            raise ValueError("multiplier must be >= 1")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError("jitter must be in [0, 1]")
+
+    def backoff_s(self, attempt: int, rng) -> float:
+        """Virtual-clock delay before retry ``attempt`` (1-based)."""
+        delay = min(self.base_backoff_s * self.multiplier ** (attempt - 1),
+                    self.max_backoff_s)
+        if delay > 0.0 and self.jitter > 0.0:
+            delay *= 1.0 + self.jitter * rng.random()
+        return delay
+
+
 @dataclasses.dataclass
 class RuntimeConfig:
     memory_bytes: int = 2 << 30          # the paper's "generous 2GB instance"
@@ -56,8 +105,15 @@ class RuntimeConfig:
     max_instances: int = 1000            # account concurrency limit
     hedge_after_s: float | None = None   # straggler mitigation threshold
     failure_rate: float = 0.0            # per-invocation instance-death prob
-    max_retries: int = 2
+    max_retries: int = 2                 # legacy knob; ignored when retry set
+    retry: RetryPolicy | None = None     # None -> immediate retries, bounded
+                                         # by max_retries (legacy behaviour)
     seed: int = 0
+
+    def retry_policy(self) -> RetryPolicy:
+        if self.retry is not None:
+            return self.retry
+        return RetryPolicy(max_attempts=self.max_retries + 1)
 
 
 @dataclasses.dataclass
@@ -326,11 +382,30 @@ class FaaSRuntime:
                 raise RuntimeError_(f"function {name!r} is retired (draining)")
         now = self.clock if t_arrival is None else max(t_arrival, 0.0)
         self.clock = max(self.clock, now)
-        res_a, rec_a = self._invoke_retrying(fn, payload, now, record=False)
-        res_b, rec_b = self._invoke_retrying(backup_fn, payload, now,
-                                             record=False, hedge=True)
+        # Each leg retries independently; a leg whose retries run out must
+        # not sink the call when its sibling succeeded — that is the whole
+        # point of sending two. Retried legs keep their attribution flag, so
+        # a dying-then-retried backup still bills on the hedge line.
+        legs: list[tuple[Any, InvocationRecord]] = []
+        first_err: RetriesExhausted | None = None
+        for name, is_hedge in ((fn, False), (backup_fn, True)):
+            try:
+                legs.append(self._invoke_retrying(name, payload, now,
+                                                  record=False, hedge=is_hedge))
+            except RetriesExhausted as e:
+                first_err = first_err or e
+        if not legs:
+            raise first_err
+        if len(legs) == 1:
+            (res, win), = legs
+            dead = backup_fn if win.fn == fn else fn
+            rec = dataclasses.replace(
+                win, hedged=True, backup_fn=dead,
+                loser_latency_s=float("inf"))   # the dead leg never finished
+            self.records.append(rec)
+            return res, rec
         (res, win), (_, lose) = sorted(
-            [(res_a, rec_a), (res_b, rec_b)], key=lambda p: p[1].latency_s)
+            legs, key=lambda p: p[1].latency_s)
         rec = dataclasses.replace(
             win, hedged=True, backup_fn=lose.fn, loser_latency_s=lose.latency_s)
         self.records.append(rec)
@@ -339,6 +414,7 @@ class FaaSRuntime:
     def _invoke_retrying(self, fn: str, payload: Any, now: float, *,
                          record: bool = True, hedge: bool = False,
                          keepalive: bool = False, write: bool = False):
+        policy = self.config.retry_policy()
         attempt = 0
         while True:
             try:
@@ -347,9 +423,16 @@ class FaaSRuntime:
                                          keepalive=keepalive, write=write)
             except _InstanceDied:
                 attempt += 1
-                if attempt > self.config.max_retries:
-                    raise RuntimeError_(f"{fn}: instance died {attempt} times") from None
-                # retry immediately on another instance (client-side retry)
+                if attempt >= policy.max_attempts:
+                    raise RetriesExhausted(fn, attempt) from None
+                # client-side retry on another instance, after an exponential
+                # backoff on the virtual clock (0 under the legacy default).
+                # A dead attempt billed nothing: failure injection fires
+                # before the handler runs and before any ledger charge, so
+                # the retry's invocation carries the SAME attribution flags
+                # (a hedged leg's retry stays on the hedge line).
+                now += policy.backoff_s(attempt, self._rng)
+                self.clock = max(self.clock, now)
 
     def _invoke_once(self, fn: str, payload: Any, now: float, attempt: int, *,
                      record: bool = True, hedge: bool = False,

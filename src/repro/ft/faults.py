@@ -102,6 +102,9 @@ def reshard_state(state: Any, shardings: Any) -> Any:
 class StragglerMonitor:
     factor: float = 3.0
     window: int = 50
+    warmup: int = 5      # min samples before flagging (floored at 2: the
+                         # first step's median is ITSELF, so any factor < 1
+                         # would flag a run's very first step)
 
     def __post_init__(self):
         self._times: list[float] = []
@@ -112,7 +115,10 @@ class StragglerMonitor:
         if len(self._times) > self.window:
             self._times.pop(0)
         med = float(np.median(self._times))
-        slow = len(self._times) >= 5 and seconds > self.factor * med
+        # warmup is clamped into [2, window]: a window smaller than the
+        # warmup must still be able to flag once it is full
+        need = max(2, min(self.warmup, self.window))
+        slow = len(self._times) >= need and seconds > self.factor * med
         if slow:
             self.flagged.append(step)
         return slow

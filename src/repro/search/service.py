@@ -33,13 +33,15 @@ from repro.core.partition import (FleetSpec, GatewaySpec, HedgePolicy,
                                   IndexSpec, PartitionHit, ReplicationSpec,
                                   ScatterGather, _merge_hits, rrf_fuse)
 from repro.core.refresh import (AssetCatalog, GenerationManifest,
-                                parse_generation, rollover_fleet)
+                                PublishConflict, parse_generation,
+                                rollover_fleet)
 from repro.core.runtime import FaaSRuntime, InvocationRecord, RuntimeConfig
 from repro.data.corpus import hash_embedder
 from repro.index.builder import (IndexWriter, MergePolicy,
                                  compute_global_stats, extend_vocab,
-                                 global_vocab, pack_vectors, update_stats,
-                                 write_segment, write_vector_segment)
+                                 global_vocab, pack_vectors, read_segment,
+                                 update_stats, write_segment,
+                                 write_vector_segment)
 from repro.index.tokenizer import token_counts
 from repro.search.distributed import partition_corpus
 from repro.search.searcher import (PREWARM_TOP_TERMS, SearchConfig,
@@ -226,6 +228,11 @@ class FleetIndexer:
         # must keep advancing past the failed attempt's ids.
         self._seg_seq = 0
         self.commits: list[dict] = []     # commit log (gen, merged, counts)
+        # multi-writer identity: 0 is the primary; ``fork`` mints clones
+        # with nonzero ids (distinct handler names + segment-id tags so two
+        # writers racing one generation never collide before the CAS).
+        self.writer_id = 0
+        self._forked = False    # once True, commits publish writer.json
 
     # -- bootstrap (the offline batch build, now generation-shaped) ------------
 
@@ -252,7 +259,8 @@ class FleetIndexer:
                 asset, st.vec_base, write_vector_segment(self._pack_vecs(docs)))
         self.parts.append(st)
         self.catalog.publish_generation(asset, self._manifest(st))
-        self.runtime.register(f"indexer-p{i}", self._make_indexer_handler(i))
+        self.runtime.register(self._writer_fn(i),
+                              self._make_indexer_handler(i))
         for pos, (ext, text) in enumerate(docs):
             self.doc_store.put(ext, {"id": ext, "contents": text})
             self._ext_index[ext] = (i, pos, text)
@@ -306,6 +314,22 @@ class FleetIndexer:
 
     # -- the writer Lambda body -------------------------------------------------
 
+    def _writer_fn(self, i: int) -> str:
+        """Handler name for partition ``i``'s writer Lambda. Forked writers
+        own distinct pools — two writers racing a commit must not share
+        warm instances (their staged inputs differ)."""
+        if self.writer_id:
+            return f"indexer-w{self.writer_id}-p{i}"
+        return f"indexer-p{i}"
+
+    def _seg_tag(self) -> str:
+        """Segment-id tag keeping forked writers' same-generation uploads
+        disjoint: the create-once segment publish would otherwise conflict
+        on BYTES before the manifest CAS even picks a winner. Empty for the
+        primary, so single-writer segment ids are bit-identical to the
+        pre-fork layout."""
+        return f"w{self.writer_id}-" if self.writer_id else ""
+
     def _make_indexer_handler(self, i: int):
         """Handler for ``indexer-p{i}``: pack this partition's staged docs
         as a delta (or re-pack its live docs as a fresh base, for a merge)
@@ -319,16 +343,17 @@ class FleetIndexer:
             op, gen = payload["op"], payload["gen"]
             t0 = time.perf_counter()
             self._seg_seq += 1
+            tag = self._seg_tag()
             if op == "delta":
                 docs = list(st.staged_docs)
                 packed = IndexWriter.delta(docs, self.stats, vocab=self.vocab)
-                seg = f"g{gen:06d}-delta-{self._seg_seq:04d}"
+                seg = f"g{gen:06d}-delta-{tag}{self._seg_seq:04d}"
             elif op == "merge":
                 docs = st.live_docs() + list(st.staged_docs)
                 writer = IndexWriter(global_stats=self.stats, vocab=self.vocab)
                 writer.add_many(docs)
                 packed = writer.pack()
-                seg = f"g{gen:06d}-base-{self._seg_seq:04d}"
+                seg = f"g{gen:06d}-base-{tag}{self._seg_seq:04d}"
             else:
                 raise ValueError(f"unknown indexer op {op!r}")
             self.catalog.publish_segment(st.asset, seg, write_segment(packed))
@@ -338,7 +363,7 @@ class FleetIndexer:
                 # doc list: rows stay doc-for-doc aligned with the sparse
                 # segment, and both tiers flip together at publish
                 kind = "vecbase" if op == "merge" else "vecdelta"
-                vec_seg = f"g{gen:06d}-{kind}-{self._seg_seq:04d}"
+                vec_seg = f"g{gen:06d}-{kind}-{tag}{self._seg_seq:04d}"
                 self.catalog.publish_segment(
                     st.asset, vec_seg,
                     write_vector_segment(self._pack_vecs(docs)))
@@ -376,18 +401,23 @@ class FleetIndexer:
         }
 
     def _restore(self, cp: dict) -> None:
-        self.stats, self.vocab = cp["stats"], cp["vocab"]
-        self._ext_index = cp["ext_index"]
-        self.pending_adds = cp["pending_adds"]
-        self._pending_ids = cp["pending_ids"]
-        self.pending_deletes = cp["pending_deletes"]
+        # every restored container is a COPY: ``commit``'s conflict-retry
+        # loop restores the same checkpoint repeatedly, and handing out
+        # the checkpoint's own objects would let attempt N's mutations
+        # corrupt what attempt N+1 restores
+        self.stats = dict(cp["stats"], df=dict(cp["stats"]["df"]))
+        self.vocab = cp["vocab"]        # rebound by extend_vocab, never mutated
+        self._ext_index = dict(cp["ext_index"])
+        self.pending_adds = list(cp["pending_adds"])
+        self._pending_ids = set(cp["pending_ids"])
+        self.pending_deletes = set(cp["pending_deletes"])
         self._rr, self.gen = cp["rr"], cp["gen"]
         self._stats_ref = cp["stats_ref"]
         for st, (sd, tb, bs, dl, bd, dd, vb, vd) in zip(self.parts,
                                                         cp["parts"]):
-            st.seg_docs, st.tombstones, st.base_seg = sd, tb, bs
-            st.deltas, st.base_docs, st.delta_docs = dl, bd, dd
-            st.vec_base, st.vec_deltas = vb, vd
+            st.seg_docs, st.tombstones, st.base_seg = list(sd), set(tb), bs
+            st.deltas, st.base_docs, st.delta_docs = list(dl), bd, dd
+            st.vec_base, st.vec_deltas = vb, list(vd)
             st.staged_docs = []
 
     def _published_gen(self) -> int:
@@ -401,8 +431,147 @@ class FleetIndexer:
                 for st in self.parts)
         return max((g for g in gens if g is not None), default=0)
 
+    def _foreign_gen(self) -> int | None:
+        """The generation a COMPLETE foreign commit published, if EVERY
+        partition has moved past this writer's view (a racing writer won
+        the whole flip). ``None`` while any partition still serves
+        ``self.gen`` or older — that is this writer's OWN partial flip,
+        which ``commit``'s max()+1 leapfrog retry handles instead (a
+        rebase there would adopt a half-published generation)."""
+        gens = [parse_generation(self.catalog.current_version(st.asset))
+                for st in self.parts]
+        if gens and all(g is not None and g > self.gen for g in gens):
+            return min(gens)
+        return None
+
+    def _rebase(self) -> int:
+        """Adopt the state a racing writer published past this writer's
+        view, keeping the staged batch pending on top of it.
+
+        Without this, a stale writer's commit would CAS-publish a
+        generation built WITHOUT the winner's documents — the stale-base
+        check only orders generation numbers, it cannot see content, so
+        the winner's docs would vanish silently (the classic lost update).
+
+        Rebuilds every partition's tier view from the published manifests
+        (segment doc ids re-read from the store, texts from the doc KV —
+        tombstoned rows keep an empty placeholder, nothing reads them),
+        adopts the winner's live stats/vocab AND its round-robin cursor
+        (``writer.json``), so the rebased commit places documents exactly
+        where a serialized pair of commits would have. The staged batch is
+        revalidated against the new view: deletes of ids the winner
+        already removed drop out (delete-of-unknown is a no-op, same as
+        ``stage_delete``); an add whose id the winner also added is a
+        conflict the caller must resolve — loud error, batch preserved."""
+        gen = self._foreign_gen()
+        if gen is None:
+            return self.gen
+        manifests = [self.catalog.read_generation(st.asset)
+                     for st in self.parts]
+        stats, vocab = self.catalog.resolve_generation_state(manifests[0])
+        self.stats = dict(stats, df=dict(stats["df"]))
+        self.vocab = dict(vocab)
+        self._ext_index = {}
+        for i, (st, m) in enumerate(zip(self.parts, manifests)):
+            tombs = set(m.tombstones)
+            seg_docs: list[tuple[str, str]] = []
+            base_docs = 0
+            for seg_i, seg in enumerate(m.segments):
+                pack = read_segment(self.catalog.open_segment(st.asset, seg))
+                if seg_i == 0:
+                    base_docs = len(pack.meta.doc_ids)
+                for ext in pack.meta.doc_ids:
+                    pos = len(seg_docs)
+                    if pos in tombs:
+                        # tombstoned rows are never scored, merged, or
+                        # looked up — and their doc may be gone from the KV
+                        seg_docs.append((ext, ""))
+                    else:
+                        text = self.doc_store.get(ext)["contents"]
+                        seg_docs.append((ext, text))
+                        self._ext_index[ext] = (i, pos, text)
+            st.seg_docs = seg_docs
+            st.tombstones = tombs
+            st.base_seg = m.base
+            st.deltas = list(m.deltas)
+            st.base_docs = base_docs
+            st.delta_docs = len(seg_docs) - base_docs
+            st.vec_base = m.vec_base
+            st.vec_deltas = list(m.vec_deltas)
+            st.staged_docs = []
+        writer = self.catalog.resolve_generation_writer(manifests[0])
+        self._rr = int(writer.get("rr", self._rr))
+        ref = manifests[0].stats_ref
+        self._stats_ref = list(ref) if ref is not None else None
+        self.gen = gen
+        # revalidate the still-pending batch against the adopted view
+        self.pending_deletes &= set(self._ext_index)
+        for ext, _ in self.pending_adds:
+            if ext in self._ext_index and ext not in self.pending_deletes:
+                raise ValueError(
+                    f"rebase conflict: document {ext!r} was also added by "
+                    "the racing writer (updates = delete + add + commit)")
+        return gen
+
+    def sync(self) -> bool:
+        """Adopt a racing writer's published state outside of a commit.
+        Returns True if the view moved. Same rollback discipline as
+        ``commit``: a rebase conflict restores the pre-sync view."""
+        if self._foreign_gen() is None:
+            return False
+        cp = self._checkpoint()
+        try:
+            self._rebase()
+        except Exception:
+            self._restore(cp)
+            raise
+        return True
+
+    def fork(self, writer_id: int) -> "FleetIndexer":
+        """A SECOND writer over the same catalog, doc store, and runtime —
+        the multi-writer story. The clone shares the published index (it
+        starts from this writer's current view) but stages and commits
+        independently; whichever writer publishes a generation first wins
+        the CAS, and the other rebases on it inside its own ``commit``.
+
+        Distinct handler names (``indexer-w{id}-p{i}``) and segment-id
+        tags keep the two writers' same-generation uploads from colliding
+        before the manifest CAS picks a winner; a loser's uploads become
+        unreferenced orphans the reference-based gc reclaims after it
+        rebases and republishes."""
+        if writer_id == self.writer_id:
+            raise ValueError("forked writer needs a distinct writer_id")
+        w = FleetIndexer(
+            self.catalog, self.doc_store, self.runtime,
+            stats=dict(self.stats, df=dict(self.stats["df"])),
+            vocab=self.vocab, merge_policy=self.merge_policy,
+            sim_write_s=self.sim_write_s,
+            sim_write_per_doc_s=self.sim_write_per_doc_s,
+            stats_asset=self.stats_asset, embedder=self.embedder,
+            vec_dim=self.vec_dim, vec_dtype=self.vec_dtype)
+        w.writer_id = writer_id
+        w.gen = self.gen
+        w._stats_ref = list(self._stats_ref) if self._stats_ref else None
+        w._ext_index = dict(self._ext_index)
+        w._rr = self._rr
+        w._seg_seq = self._seg_seq
+        w.parts = [_PartitionState(
+            asset=st.asset, seg_docs=list(st.seg_docs),
+            tombstones=set(st.tombstones), base_seg=st.base_seg,
+            deltas=list(st.deltas), base_docs=st.base_docs,
+            delta_docs=st.delta_docs, vec_base=st.vec_base,
+            vec_deltas=list(st.vec_deltas)) for st in self.parts]
+        # both writers now publish their round-robin cursor with each
+        # generation, so whichever loses a race can adopt the winner's
+        self._forked = w._forked = True
+        for i in range(len(w.parts)):
+            self.runtime.register(w._writer_fn(i),
+                                  w._make_indexer_handler(i))
+        return w
+
     def commit(self, fn_groups, *, t_arrival: float | None = None,
-               ping_payload: dict | None = None) -> tuple[dict, float]:
+               ping_payload: dict | None = None,
+               max_publish_retries: int = 3) -> tuple[dict, float]:
         """Make staged adds/deletes searchable, atomically, fleet-wide.
 
         Returns (result body, simulated latency). Latency = the writer
@@ -415,17 +584,39 @@ class FleetIndexer:
         On ANY failure the writer state rolls back to the pre-commit
         checkpoint (already-uploaded segments remain as unreferenced
         orphans for gc) and the staged batch stays pending; queries keep
-        pinning the old generation, which every partition still serves."""
+        pinning the old generation, which every partition still serves.
+
+        CONCURRENT WRITERS (``fork``): if a racing writer published past
+        this writer's view, the commit REBASES the staged batch on the
+        winner's generation first (``_rebase``) — and when the race is
+        lost mid-publish (:class:`PublishConflict` from the CAS or the
+        create-once segment upload), it rolls back, rebases on the new
+        winner, and retries, up to ``max_publish_retries`` extra attempts.
+        Exhaustion re-raises the conflict with the checkpoint restored and
+        the batch still staged."""
         t0 = self.runtime.clock if t_arrival is None else t_arrival
         if not self.pending_adds and not self.pending_deletes:
             return {"gen": self.gen, "committed": False}, 0.0
         cp = self._checkpoint()
-        next_gen = max(self.gen, self._published_gen()) + 1
-        try:
-            result, write_lat = self._commit_locked(next_gen, t0)
-        except Exception:
-            self._restore(cp)
-            raise
+        conflicts = rebased = 0
+        while True:
+            try:
+                if self._foreign_gen() is not None:
+                    self._rebase()
+                    rebased += 1
+                next_gen = max(self.gen, self._published_gen()) + 1
+                result, write_lat = self._commit_locked(next_gen, t0)
+                break
+            except PublishConflict:
+                self._restore(cp)
+                conflicts += 1
+                if conflicts > max_publish_retries:
+                    raise
+            except Exception:
+                self._restore(cp)
+                raise
+        result["publish_conflicts"] = conflicts
+        result["rebased"] = rebased
         # KV content changes land only AFTER the publishes succeeded — a
         # rolled-back commit must neither lose deleted docs' content nor
         # orphan never-published adds in the doc store. Deletes skip ext
@@ -516,7 +707,7 @@ class FleetIndexer:
             st.staged_docs = staged[i]
             op = "merge" if do_merge else "delta"
             out, rec = self.runtime.invoke(
-                f"indexer-p{i}", {"op": op, "gen": next_gen},
+                self._writer_fn(i), {"op": op, "gen": next_gen},
                 t_arrival=t0, write=True)
             recs.append(rec)
             plans.append(out)
@@ -549,7 +740,8 @@ class FleetIndexer:
         # ONE shared stats/vocab segment per generation; every partition's
         # manifest references it instead of inlining O(vocab) bytes each
         self._stats_ref = self.catalog.publish_generation_state(
-            self.stats_asset, next_gen, self.stats, self.vocab)
+            self.stats_asset, next_gen, self.stats, self.vocab,
+            writer={"rr": self._rr} if self._forked else None)
         for st in self.parts:
             self.catalog.publish_generation(st.asset, self._manifest(st))
         return {"gen": next_gen, "committed": True, "indexed": n_add,
@@ -1195,7 +1387,8 @@ def build_partitioned_search_app(
         assets.append(asset)
         fn_groups.append(group)
     scatter = ScatterGather(runtime, fn_groups, hedge=rep.hedge,
-                            routing=resolved_routing)
+                            routing=resolved_routing,
+                            degraded_ok=rep.degraded_ok)
     gateway = Gateway(runtime)
     controller = None
     if autoscale_policy:
@@ -1216,7 +1409,12 @@ def build_partitioned_search_app(
         fn_groups=scatter.groups, replicas=rep.replicas,
         controller=controller, indexer=indexer, embedder=embedder)
     gateway.route("GET", "/search", app._search_route)
+    # admission sheds feed the autoscaler: sustained backpressure is a
+    # scale-up signal the latency/queue estimators can't see (shed
+    # arrivals never reach a pool)
     gateway.route_batched("GET", "/search", app._search_route_batch,
-                          policy=gw.window, admit=app._admit_search)
+                          policy=gw.window, admit=app._admit_search,
+                          on_shed=controller.note_shed if controller
+                          else None)
     gateway.route("POST", "/index", app._index_route)
     return app

@@ -136,3 +136,26 @@ def test_checkpoint_restore_across_meshes():
     np.testing.assert_array_equal(np.asarray(back["w"]),
                                   np.asarray(state["w"]))
     assert back["w"].sharding == sh2["w"]
+
+
+def test_straggler_monitor_first_step_never_flags():
+    """The first step's median is ITSELF, so any factor <= 1 would flag a
+    run's very first step on zero evidence — the warmup window guards it,
+    and keeps flagging honest once real history exists."""
+    mon = StragglerMonitor(factor=0.5)
+    assert not mon.record(0, 1.0)          # median-of-one: no evidence
+    for s in range(1, 4):
+        assert not mon.record(s, 1.0)      # still inside warmup (5)
+    assert mon.record(4, 1.0)              # warm: factor<1 flags honestly
+    assert mon.flagged == [4]
+
+
+def test_straggler_monitor_window_smaller_than_warmup_still_flags():
+    """warmup clamps into [2, window]: a window-3 config must be able to
+    flag once its window is full, not wait for 5 samples it can never
+    hold."""
+    mon = StragglerMonitor(factor=3.0, window=3)
+    assert not mon.record(0, 0.1)
+    assert not mon.record(1, 0.1)          # 2 samples < clamped warmup 3
+    assert mon.record(2, 10.0)             # window full: 10 > 3×median(0.1)
+    assert mon.flagged == [2]

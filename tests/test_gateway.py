@@ -281,3 +281,122 @@ def test_flush_is_idempotent(corpus, queries):
                    fetch_docs=False)
     assert h.done()                            # sparse -> immediate
     assert app.flush() == 0
+
+
+# -- admission backpressure (overload shedding) -------------------------------
+
+
+def test_max_batch_boundary_dispatches_once_and_resets_rate(corpus, queries):
+    """A submit landing EXACTLY at max_batch must dispatch the batch once —
+    neither zero times (waiting out a window that will never fill further)
+    nor twice — and the flushed burst's arrivals must not leak into the
+    NEXT window's rate estimate (a spike-sized estimate would collapse the
+    reopened window toward zero and re-flush instantly)."""
+    app = _build(corpus, window=WindowPolicy(
+        max_window_s=10.0, target_batch=8, sparse_qps=2.0,
+        p99_budget_s=None, rate_window_s=1.0, max_batch=4))
+    app.warm()
+    key = ("GET", "/search")
+    coord, admit = app.gateway._batched[key]
+    dispatches = []
+
+    def counting(bodies, arrivals, t_dispatch):
+        dispatches.append(len(bodies))
+        return coord(bodies, arrivals, t_dispatch)
+
+    app.gateway._batched[key] = (counting, admit)
+    t0 = app.runtime.clock + 1.0
+    # the first arrival reads as sparse (rate not yet built) and goes out
+    # alone; the next four land inside one window and fill it to the cap
+    hs = [app.submit(queries[i], k=K, t_arrival=t0 + 1e-4 * i,
+                     fetch_docs=False)
+          for i in range(5)]
+    # the capped window dispatched exactly ONCE, with exactly max_batch
+    assert dispatches == [1, 4]
+    assert all(h.done() for h in hs)
+    # the reopened window's size estimate must not inherit the burst: the
+    # trailing-rate history restarts from just the dispatch instant (not
+    # empty — a falsely-sparse solo dispatch would soft-reset the
+    # backpressure streak under sustained overload)
+    q = app.gateway._queues[key]
+    assert q.arrivals == [pytest.approx(t0 + 4e-4)]
+    h = app.submit(queries[5], k=K, t_arrival=t0 + 0.010, fetch_docs=False)
+    # the follow-up's window is sized from the calm restart rate (2 within
+    # rate_window_s: the reseed + itself -> target_batch/2), NOT the ~5-qps
+    # spike (which would shrink it to target_batch/5)
+    assert not h.done()
+    assert q.window_close - (t0 + 0.010) == pytest.approx(8 / 2.0)
+    app.flush()
+    assert h.done() and h.response.ok
+    assert dispatches == [1, 4, 1]
+
+
+def _bp_policy(threshold=2):
+    from repro.core.gateway import BackpressurePolicy
+    return WindowPolicy(
+        max_window_s=10.0, target_batch=64, sparse_qps=0.0,
+        p99_budget_s=None, max_batch=4,
+        backpressure=BackpressurePolicy(
+            consecutive_hard_flushes=threshold, drain_window_s=1.0,
+            min_retry_after_s=0.050, max_retry_after_s=2.0))
+
+
+def test_backpressure_sheds_with_retry_after_and_bills_nothing(corpus,
+                                                               queries):
+    """Past the consecutive-hard-flush threshold the route sheds: 429 with
+    an honest Retry-After, counted on the ledger's shed line, dispatched
+    nowhere, billed to nothing."""
+    app = _build(corpus, window=_bp_policy(threshold=2))
+    app.warm()
+    led = app.runtime.ledger
+    q = app.gateway._queues[("GET", "/search")]
+    t0 = app.runtime.clock + 1.0
+    # two back-to-back max_batch bursts -> two consecutive hard flushes
+    for i in range(8):
+        app.submit(queries[i % len(queries)], k=K, t_arrival=t0 + 1e-4 * i,
+                   fetch_docs=False)
+    assert q.shed_until > t0            # threshold tripped
+    inv_before = led.invocations
+    t_shed = t0 + 0.001
+    h = app.submit(queries[0], k=K, t_arrival=t_shed, fetch_docs=False)
+    assert h.done() and h.response.status == 429
+    retry_after = h.response.body["retry_after_s"]
+    assert retry_after == pytest.approx(q.shed_until - t_shed)
+    assert retry_after >= 0.050
+    # billed to NOTHING: no invocation, no GB·s — just the shed count
+    assert led.invocations == inv_before
+    assert led.shed_requests == 1 and led.shed_gb_seconds == 0.0
+    assert app.gateway.window_stats("GET", "/search")["sheds"] == 1
+    # recovery: an arrival past the shed horizon is admitted and served
+    h2 = app.submit(queries[1], k=K, t_arrival=q.shed_until + 0.01,
+                    fetch_docs=False)
+    app.flush()
+    assert h2.response.ok and h2.response.body["ext_ids"]
+    assert led.shed_requests == 1       # no further sheds
+
+
+def test_backpressure_soft_flush_resets_hard_streak(corpus, queries):
+    """A window that closes WITHOUT hitting max_batch proves the arrival
+    process fits the pipe again — the consecutive-hard-flush streak must
+    reset, so an isolated burst never pushes a healthy route into
+    shedding."""
+    app = _build(corpus, window=_bp_policy(threshold=2))
+    app.warm()
+    q = app.gateway._queues[("GET", "/search")]
+    t0 = app.runtime.clock + 1.0
+    for i in range(4):                  # ONE hard flush
+        app.submit(queries[i], k=K, t_arrival=t0 + 1e-4 * i,
+                   fetch_docs=False)
+    assert q.hard_flushes == 1 and q.shed_until == 0.0
+    # a soft (window-timed) flush in between resets the streak
+    app.submit(queries[4], k=K, t_arrival=t0 + 0.02, fetch_docs=False)
+    app.submit(queries[5], k=K, t_arrival=t0 + 0.021, fetch_docs=False)
+    app.flush()
+    assert q.hard_flushes == 0
+    # the next burst is the FIRST of a new streak: still no shedding
+    t1 = t0 + 1.0
+    for i in range(4):
+        app.submit(queries[i], k=K, t_arrival=t1 + 1e-4 * i,
+                   fetch_docs=False)
+    assert q.hard_flushes == 1 and q.shed_until == 0.0
+    assert app.runtime.ledger.shed_requests == 0

@@ -211,3 +211,65 @@ def test_total_cost_strictly_increases_with_replication(corpus, queries):
         assert led.hedge_gb_seconds <= led.gb_seconds
         dollars.append(led.total_dollars)
     assert dollars[0] < dollars[1] < dollars[2]
+
+
+# -- hedged-leg retries: attribution stays honest ----------------------------
+
+
+class _ScriptedRng:
+    """Deterministic stand-in for the runtime's failure-injection RNG."""
+
+    def __init__(self, draws):
+        self.draws = list(draws)
+
+    def random(self):
+        return self.draws.pop(0)
+
+
+def test_hedged_leg_retry_bills_as_hedge_not_serving():
+    """When a hedged call's BACKUP leg dies and is client-side retried, the
+    retry must bill on the hedge line — a retry that forgot its attribution
+    flag would shift hedge tax onto the serving line and make
+    ``attribution()`` lie about what tail mitigation costs."""
+    rt = FaaSRuntime(RuntimeConfig(failure_rate=0.5, seed=0))
+    rt.register("a", lambda cache, p: ("a", 0.010))
+    rt.register("b", lambda cache, p: ("b", 0.010))
+    # primary survives; backup dies once, then its retry survives
+    rt._rng = _ScriptedRng([0.9, 0.1, 0.9])
+    led = rt.ledger
+    res, rec = rt.invoke_hedged("a", "b", {}, t_arrival=0.0)
+    assert rec.hedged
+    # the dead attempt billed NOTHING (failure fires before any charge);
+    # the retried backup kept its hedge flag
+    assert led.invocations == 2
+    assert led.hedge_invocations == 1
+    assert led.hedge_gb_seconds > 0.0
+    att = led.attribution()
+    assert sum(att.values()) == pytest.approx(led.compute_dollars)
+    # the serving line carries exactly the primary leg, not the retry
+    serving_gbs = (led.gb_seconds - led.hedge_gb_seconds
+                   - led.idle_gb_seconds - led.write_gb_seconds)
+    assert serving_gbs == pytest.approx(led.hedge_gb_seconds)  # legs equal
+
+
+def test_hedged_call_survives_when_one_leg_exhausts_retries():
+    """A leg whose bounded retries all land on dying instances must not
+    sink the hedged call — the surviving sibling's result is the whole
+    point of sending two legs."""
+    rt = FaaSRuntime(RuntimeConfig(failure_rate=0.5, max_retries=2, seed=0))
+    rt.register("a", lambda cache, p: ("a", 0.010))
+    rt.register("b", lambda cache, p: ("b", 0.010))
+    # primary's 3 attempts all die; backup survives first try
+    rt._rng = _ScriptedRng([0.1, 0.1, 0.1, 0.9])
+    res, rec = rt.invoke_hedged("a", "b", {}, t_arrival=0.0)
+    assert res == "b"
+    assert rec.hedged and rec.fn == "b" and rec.backup_fn == "a"
+    assert rec.loser_latency_s == float("inf")
+    # only the surviving (hedge) leg billed
+    assert rt.ledger.invocations == 1
+    assert rt.ledger.hedge_invocations == 1
+    # both legs dead -> the typed exhaustion error surfaces
+    rt._rng = _ScriptedRng([0.1] * 6)
+    from repro.core.runtime import RetriesExhausted
+    with pytest.raises(RetriesExhausted):
+        rt.invoke_hedged("a", "b", {}, t_arrival=1.0)

@@ -427,11 +427,14 @@ def test_gc_reclaims_merged_away_segments_keeps_serving():
 
 
 def test_failed_commit_rolls_back_and_retries():
-    """A commit that fails mid-publish (a racing writer won one partition's
-    CAS) must restore the writer's state — staged batch included — and a
-    retry must publish a strictly NEWER generation than anything the
-    partial failure left behind, instead of wedging on the stale-base
-    check."""
+    """A commit whose publish conflicts PERSISTENTLY (every in-commit
+    rebase-retry loses another race) must exhaust its bounded attempts,
+    restore the writer's state — staged batch included — and surface the
+    conflict; a later retry must publish a strictly NEWER generation than
+    anything the partial flips left behind, instead of wedging on the
+    stale-base check. (A TRANSIENT conflict no longer reaches the caller:
+    the commit's own retry loop rebases and heals it —
+    test_two_writer_race_converges_to_serialized_oracle.)"""
     docs = synth_corpus(90, vocab=200, seed=9)
     app = build_app(docs[:70], n_parts=2)
     ix = app.indexer
@@ -441,19 +444,23 @@ def test_failed_commit_rolls_back_and_retries():
     before = (dict(ix.stats, df=dict(ix.stats["df"])), dict(ix.vocab),
               [list(st.seg_docs) for st in ix.parts])
 
-    # partition 1's CAS loses: its manifest moved under us
+    # partition 1's CAS loses EVERY attempt: its manifest keeps moving
+    # under us (the in-commit retries leave partition 0 further and
+    # further ahead — exactly the partial-flip debris the heal must clear)
     real = ix.catalog.publish_generation
     calls = {"n": 0}
+    p1_asset = ix.parts[1].asset
 
     def failing(name, manifest):
         calls["n"] += 1
-        if calls["n"] == 2:
+        if name == p1_asset:
             raise PublishConflict("racing writer won")
         return real(name, manifest)
 
     ix.catalog.publish_generation = failing
     r = app.commit()
     assert r.status == 502 and "racing writer" in r.body["error"]
+    assert calls["n"] >= 4            # bounded attempts actually retried
     ix.catalog.publish_generation = real
     # full rollback: gen, stats, vocab, tiers, and the staged batch
     assert ix.gen == 1
@@ -462,12 +469,14 @@ def test_failed_commit_rolls_back_and_retries():
     assert len(ix.pending_adds) == 20 and len(ix.pending_deletes) == 1
     # queries keep serving the old generation, consistently
     assert_fleet_matches_oracle(app, queries)
-    # retry heals past the partial flip: partition 0 already serves gen 2,
-    # so the retry publishes gen 3 everywhere
+    # retry heals past the partial flips: partition 0 is several
+    # generations ahead, so the retry publishes one newer still
+    heal_gen = ix._published_gen() + 1
+    assert heal_gen > 2
     r = app.commit()
-    assert r.ok and r.body["gen"] == 3
-    assert all(ix.catalog.current_version(st.asset) == generation_version(3)
-               for st in ix.parts)
+    assert r.ok and r.body["gen"] == heal_gen
+    assert all(ix.catalog.current_version(st.asset)
+               == generation_version(heal_gen) for st in ix.parts)
     assert_fleet_matches_oracle(app, queries)
 
 
@@ -548,3 +557,173 @@ def test_commit_bills_the_write_line():
     # writer invocations are tagged on the record log too
     writes = [r for r in app.runtime.records if r.write]
     assert len(writes) == 2 and all(r.fn.startswith("indexer-") for r in writes)
+
+
+# -- concurrent multi-writer commits ------------------------------------------
+
+
+PING = {"q": "", "k": 1, "fetch_docs": False}
+
+
+def _serialized_twin(base_docs, batches, n_parts=2):
+    """One writer committing the batches sequentially — the serialized
+    oracle a raced pair of writers must converge to bit-for-bit."""
+    app = build_app(base_docs, n_parts=n_parts)
+    for adds, dels in batches:
+        if dels:
+            app.delete_documents(dels)
+        if adds:
+            app.add_documents(adds)
+        r = app.commit()
+        assert r.ok, r.body
+    return app
+
+
+def test_two_writer_race_converges_to_serialized_oracle():
+    """Seeded sweep: two forked writers stage against the SAME generation
+    and commit back to back. The loser must rebase on the winner — adopting
+    its documents, live stats/vocab, and round-robin cursor — so the final
+    index is bit-identical (placement, stats, merged top-k scores) to one
+    writer committing the two batches serially. Without the rebase the
+    loser's commit would silently publish a generation missing the
+    winner's documents."""
+    for seed in (0, 1, 2):
+        rng = random.Random(seed)
+        docs = synth_corpus(90, vocab=200, seed=40 + seed)
+        base, extra = docs[:60], docs[60:]
+        cut = rng.randrange(5, len(extra) - 5)
+        batch_a, batch_b = extra[:cut], extra[cut:]
+        del_a = [base[rng.randrange(len(base))][0]]
+        del_b = [base[rng.randrange(len(base))][0]]  # may equal del_a
+
+        racing = build_app(base, n_parts=2)
+        a = racing.indexer
+        b = a.fork(1)
+        # both writers stage BEFORE either commits — the race
+        a.stage_delete(del_a)
+        a.stage_add(batch_a)
+        b.stage_delete(del_b)
+        b.stage_add(batch_b)
+        ra, _ = a.commit(racing.fn_groups, ping_payload=PING)
+        rb, _ = b.commit(racing.fn_groups, ping_payload=PING)
+        assert rb["rebased"] == 1 and rb["gen"] == ra["gen"] + 1
+        # the app pins queries to ITS writer's generation — the loser's
+        # publish is foreign to A until A adopts it
+        assert a.sync() is True
+        assert a.gen == rb["gen"] and a.live_corpus() == b.live_corpus()
+
+        serial = _serialized_twin(base, [(batch_a, del_a), (batch_b, del_b)])
+        six = serial.indexer
+        # logical state converged exactly: stats, vocab, placement, cursor
+        assert b.stats == six.stats
+        assert b.vocab == six.vocab
+        assert b._rr == six._rr
+        assert b.live_corpus() == six.live_corpus()
+        # merged top-k bit-identical to the serialized twin AND the oracle
+        queries = synth_queries(docs, 6, seed=70 + seed)
+        for q in queries:
+            r1 = racing.query(q, k=10, t_arrival=racing.runtime.clock + 0.05,
+                              fetch_docs=False)
+            r2 = serial.query(q, k=10, t_arrival=serial.runtime.clock + 0.05,
+                              fetch_docs=False)
+            assert r1.ok and r2.ok
+            assert r1.body["ext_ids"] == r2.body["ext_ids"]
+            assert r1.body["scores"] == r2.body["scores"]
+        assert_fleet_matches_oracle(racing, queries)
+
+
+def test_publish_conflict_loser_rebases_and_orphans_are_collected():
+    """TRUE concurrency: the loser sampled the catalog BEFORE the winner's
+    flip landed, so its first attempt targets the winner's generation and
+    loses the create-once race — after its delta segments already
+    uploaded. The in-commit retry must rebase and republish, and the
+    failed attempt's uploads must be unreferenced orphans the
+    reference-based gc reclaims."""
+    docs = synth_corpus(80, vocab=200, seed=44)
+    app = build_app(docs[:60], n_parts=2)
+    a = app.indexer
+    b = a.fork(1)
+    a.stage_add(docs[60:70])
+    b.stage_add(docs[70:])
+    ra, _ = a.commit(app.fn_groups, ping_payload=PING)
+
+    # freeze B's view of the catalog at the pre-flip instant for ONE
+    # commit-loop iteration (what a truly concurrent reader would have seen)
+    real_fg, real_pg = b._foreign_gen, b._published_gen
+    stale = {"armed": True}
+
+    def stale_fg():
+        return None if stale["armed"] else real_fg()
+
+    def stale_pg():
+        if stale["armed"]:
+            stale["armed"] = False
+            return ra["gen"] - 1
+        return real_pg()
+
+    b._foreign_gen = stale_fg
+    b._published_gen = stale_pg
+    published = []
+    real_pub = b.catalog.publish_segment
+
+    def recording_pub(name, seg, files):
+        published.append((name, seg))
+        return real_pub(name, seg, files)
+
+    b.catalog.publish_segment = recording_pub
+    rb, _ = b.commit(app.fn_groups, ping_payload=PING)
+    b.catalog.publish_segment = real_pub
+
+    assert rb["publish_conflicts"] == 1 and rb["rebased"] == 1
+    assert rb["gen"] == ra["gen"] + 1
+    # attempt 1 uploaded delta segments AT THE WINNER'S generation before
+    # the state segment's create-once check surfaced the conflict
+    orphans = [(name, seg) for name, seg in published
+               if seg.startswith(f"g{ra['gen']:06d}") and "w1-" in seg]
+    assert orphans
+    # ...and every one of them is gone: unreferenced by any surviving
+    # manifest, swept by the reference-based gc the commit already ran
+    for name, seg in orphans:
+        assert app.store.list(app.catalog.segment_prefix(name, seg)) == []
+    assert a.sync() is True
+    queries = synth_queries(docs, 5, seed=46)
+    assert_fleet_matches_oracle(app, queries)
+
+
+def test_sync_adopts_foreign_publish():
+    """A stale writer can adopt a racing writer's published state outside
+    of a commit; a second sync is a no-op."""
+    docs = synth_corpus(70, vocab=200, seed=47)
+    app = build_app(docs[:60], n_parts=2)
+    a = app.indexer
+    b = a.fork(1)
+    app.add_documents(docs[60:])
+    app.commit()
+    assert b.gen == 1
+    assert b.sync() is True
+    assert b.gen == a.gen
+    assert b.live_corpus() == a.live_corpus()
+    assert b._rr == a._rr
+    assert b.sync() is False
+
+
+def test_rebase_conflict_on_same_id_is_loud_and_restores(
+):
+    """Both writers staging an ADD of the same ext id is a real conflict
+    (updates = delete + add): the loser's commit must fail loudly with the
+    checkpoint restored and the batch still staged, never publish a
+    silent duplicate."""
+    docs = synth_corpus(70, vocab=200, seed=48)
+    app = build_app(docs[:60], n_parts=2)
+    a = app.indexer
+    b = a.fork(1)
+    dup = docs[60]
+    a.stage_add([dup])
+    b.stage_add([dup, docs[61]])
+    a.commit(app.fn_groups, ping_payload=PING)
+    with pytest.raises(ValueError, match="rebase conflict"):
+        b.commit(app.fn_groups, ping_payload=PING)
+    # rollback: still staged, view unchanged, index unharmed
+    assert b.gen == 1 and len(b.pending_adds) == 2
+    queries = synth_queries(docs, 4, seed=49)
+    assert_fleet_matches_oracle(app, queries)

@@ -1,0 +1,179 @@
+"""Overload survival: bounded retries with backoff, typed exhaustion, and
+the scatter's degraded-merge path.
+
+The contract under test:
+
+* ``RetryPolicy`` — attempts are bounded, backoff is exponential on the
+  VIRTUAL clock, jitter draws only from the runtime's seeded RNG (and only
+  when a backoff exists, so the zero-backoff default preserves the legacy
+  failure-injection draw sequence bit-for-bit).
+* ``RetriesExhausted`` — a typed error carrying (fn, attempts); the gateway
+  maps it to 503 (retryable capacity exhaustion), not the generic 502.
+* ``degraded_ok`` — a scatter leg whose retries ran out either fails the
+  whole request loudly (default) or is merged around as an EMPTY partition
+  result, with the degraded partitions recorded for introspection.
+"""
+
+import pytest
+
+from repro.core.gateway import Gateway
+from repro.core.partition import FleetSpec, ReplicationSpec
+from repro.core.runtime import (FaaSRuntime, RetriesExhausted, RetryPolicy,
+                                RuntimeConfig, RuntimeError_)
+from repro.data.corpus import synth_corpus, synth_queries
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_partitioned_search_app
+
+K = 10
+
+
+class _ScriptedRng:
+    def __init__(self, draws):
+        self.draws = list(draws)
+
+    def random(self):
+        return self.draws.pop(0)
+
+
+class _NoDrawRng:
+    def random(self):
+        raise AssertionError("jitter must not draw when backoff is zero")
+
+
+# -- RetryPolicy: the schedule itself -----------------------------------------
+
+
+def test_retry_policy_validation():
+    for bad in (dict(max_attempts=0), dict(base_backoff_s=-1.0),
+                dict(max_backoff_s=-0.1), dict(multiplier=0.5),
+                dict(jitter=1.5)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**bad)
+
+
+def test_retry_policy_backoff_schedule_and_cap():
+    pol = RetryPolicy(max_attempts=4, base_backoff_s=0.1, multiplier=2.0,
+                      max_backoff_s=0.35, jitter=0.0)
+    rng = _NoDrawRng()           # jitter=0: never draws
+    assert pol.backoff_s(1, rng) == pytest.approx(0.1)
+    assert pol.backoff_s(2, rng) == pytest.approx(0.2)
+    assert pol.backoff_s(3, rng) == pytest.approx(0.35)   # capped
+
+
+def test_zero_backoff_never_draws_jitter():
+    # the legacy-compat contract: the default policy must not perturb the
+    # seeded failure-injection RNG stream, even with jitter configured
+    assert RetryPolicy(jitter=0.5).backoff_s(1, _NoDrawRng()) == 0.0
+
+
+def test_legacy_max_retries_maps_onto_policy():
+    assert RuntimeConfig(max_retries=4).retry_policy().max_attempts == 5
+    explicit = RetryPolicy(max_attempts=2)
+    assert RuntimeConfig(max_retries=9,
+                         retry=explicit).retry_policy() is explicit
+
+
+def test_retries_exhaust_typed_and_backoff_on_virtual_clock():
+    rt = FaaSRuntime(RuntimeConfig(
+        failure_rate=1.0, seed=1,
+        retry=RetryPolicy(max_attempts=3, base_backoff_s=0.1,
+                          multiplier=2.0, max_backoff_s=0.15, jitter=0.0)))
+    rt.register("f", lambda cache, p: (p, 0.001))
+    with pytest.raises(RetriesExhausted) as ei:
+        rt.invoke("f", {}, t_arrival=0.0)
+    assert ei.value.fn == "f" and ei.value.attempts == 3
+    assert isinstance(ei.value, RuntimeError_)     # legacy handlers still catch
+    # two backoffs elapsed on the virtual clock: 0.1 then min(0.2, 0.15)
+    assert rt.clock == pytest.approx(0.25)
+    # dead attempts billed nothing
+    assert rt.ledger.invocations == 0
+
+
+def test_jittered_backoff_reproducible_per_seed():
+    def run(seed):
+        rt = FaaSRuntime(RuntimeConfig(
+            failure_rate=1.0, seed=seed,
+            retry=RetryPolicy(max_attempts=4, base_backoff_s=0.1,
+                              jitter=0.5)))
+        rt.register("f", lambda cache, p: (p, 0.001))
+        with pytest.raises(RetriesExhausted):
+            rt.invoke("f", {}, t_arrival=0.0)
+        return rt.clock
+
+    assert run(7) == run(7)              # same seed, same schedule
+    assert run(7) != run(8)              # jitter actually drew
+
+
+def test_gateway_maps_exhaustion_to_503():
+    rt = FaaSRuntime(RuntimeConfig(failure_rate=1.0, max_retries=1, seed=3))
+    rt.register("f", lambda cache, p: (p, 0.001))
+    gw = Gateway(rt)
+    gw.route("GET", "/x", "f")
+    r = gw.request("GET", "/x", {}, t_arrival=0.0)
+    assert r.status == 503 and "died" in r.body["error"]
+
+
+# -- degraded_ok: partial-failure merges vs loud errors -----------------------
+
+
+def _build(corpus, degraded_ok):
+    return build_partitioned_search_app(corpus, FleetSpec(
+        n_parts=2,
+        replication=ReplicationSpec(replicas=1, degraded_ok=degraded_ok),
+        search_config=SearchConfig(sim_exec_s=0.002, sim_write_s=0.02)))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return synth_corpus(120, vocab=300, seed=61)
+
+
+def test_degraded_ok_merges_surviving_partitions(corpus):
+    app = _build(corpus, degraded_ok=True)
+    app.warm()
+    q = synth_queries(corpus, 1, seed=63)[0]
+    # partition 0's leg exhausts its 3 attempts; partition 1 survives
+    app.runtime.config.failure_rate = 0.5
+    app.runtime._rng = _ScriptedRng([0.1, 0.1, 0.1, 0.9])
+    r = app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    app.runtime.config.failure_rate = 0.0
+    assert r.ok
+    assert app.scatter.last_degraded == [0]
+    # every hit comes from the surviving partition
+    p1_ids = {ext for ext, _ in app.indexer.parts[1].live_docs()}
+    assert r.body["ext_ids"] and set(r.body["ext_ids"]) <= p1_ids
+
+
+def test_degraded_default_fails_loud_with_503(corpus):
+    app = _build(corpus, degraded_ok=False)
+    app.warm()
+    q = synth_queries(corpus, 1, seed=63)[0]
+    app.runtime.config.failure_rate = 0.5
+    app.runtime._rng = _ScriptedRng([0.1, 0.1, 0.1])
+    r = app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    app.runtime.config.failure_rate = 0.0
+    assert r.status == 503 and "died" in r.body["error"]
+
+
+def test_all_legs_dead_errors_even_when_degraded_ok(corpus):
+    app = _build(corpus, degraded_ok=True)
+    app.warm()
+    q = synth_queries(corpus, 1, seed=63)[0]
+    app.runtime.config.failure_rate = 1.0
+    r = app.query(q, k=K, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+    app.runtime.config.failure_rate = 0.0
+    assert r.status == 503
+
+
+def test_batched_route_maps_exhaustion_to_503_each(corpus):
+    app = _build(corpus, degraded_ok=False)
+    app.warm()
+    q = synth_queries(corpus, 1, seed=63)[0]
+    app.runtime.config.failure_rate = 1.0
+    h = app.submit(q, k=K, t_arrival=app.runtime.clock + 30.0,
+                   fetch_docs=False)
+    app.runtime.config.failure_rate = 0.0
+    assert h.done() and h.response.status == 503
