@@ -7,7 +7,8 @@ Both files must come from ``benchmarks.run --det --seed 0`` — the modeled
 exec clock makes the gated metrics machine-independent, so the committed
 baseline is comparable across CI runners and laptops alike (regenerate it
 with ``--fast --det --seed 0 --only
-b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13,b14,b15 --json BENCH_baseline.json``
+b1,b3,b6,b6b,b7,b8,b9b,b10,b11,b12,b13,b14,b15,b16 --json
+BENCH_baseline.json``
 whenever a deliberate perf change moves a metric).
 
 Gated metrics (lower is better for all of them):
@@ -29,12 +30,16 @@ Gated metrics (lower is better for all of them):
   not a second-class tier" claim)
 * B15 overload survival      — fail on an admitted-under-burst p99 or
   staggered-rollover ratio regression > 25%
-* B7/B11/B12/B13/B14/B15 $-and-GB·s — fail on a regression > 15%
+* B16 structured queries     — fail on a bag-of-words or structured p99
+  regression > 25%, or on the structured-vs-bag p99 ratio drifting past
+  25% (the "structured costs at most 2× bag-of-words" claim)
+* B7/B11/B12/B13/B14/B15/B16 $-and-GB·s — fail on a regression > 15%
 
-B14 and B15 also carry exactness bits (sparse-vs-oracle, dense uint32
+B14, B15 and B16 also carry exactness bits (sparse-vs-oracle, dense uint32
 bitwise, hybrid fused-score, race-vs-serialized-oracle, shed-billed-zero,
-retry-storm-free) gated by PARITY_GATES: the PR value must be exactly 1 —
-parity is pass/fail, a "25% regression" of a bit is meaningless.
+retry-storm-free, structured top-k/facet/phrase/snippet parity) gated by
+PARITY_GATES: the PR value must be exactly 1 — parity is pass/fail, a
+"25% regression" of a bit is meaningless.
 
 A tiny absolute floor per metric class absorbs float jitter without hiding
 real regressions (a forgotten merge-cost term or a doubled invocation count
@@ -102,6 +107,14 @@ GATES: list[tuple[str, float, float]] = [
     ("b15_admitted_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
     ("b15_rollover_p99_vs_steady", LATENCY_LIMIT, 0.05),
     ("b15_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    # B16 structured queries: both paths' tails + cost, and the
+    # structured-vs-bag p99 ratio (dimensionless floor); parity is all
+    # bits, gated below
+    ("b16_bag_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b16_structured_gw_p99_ms", LATENCY_LIMIT, LATENCY_FLOOR_MS),
+    ("b16_structured_p99_vs_bag", LATENCY_LIMIT, 0.05),
+    ("b16_bag_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
+    ("b16_structured_dollars_per_1k_q", COST_LIMIT, COST_FLOOR),
 ]
 
 # exactness bits: the PR value must be exactly 1 (baseline drift is
@@ -113,6 +126,10 @@ PARITY_GATES: list[str] = [
     "b15_race_topk_equals_serialized_oracle",
     "b15_shed_billed_zero",
     "b15_retry_storm_free",
+    "b16_structured_topk_bitwise_equal",
+    "b16_facets_equal_oracle",
+    "b16_phrase_sets_equal_oracle",
+    "b16_snippets_cover_matched_terms",
 ]
 
 

@@ -46,6 +46,12 @@ Paper claims reproduced (Lin, "A Prototype of Serverless Lucene", 2020):
       with no retry storm, two racing writers converging to the
       serialized-oracle answer, and a staggered mid-traffic rollover
       (regression-gated under --det)
+  B16 structured queries: fielded/phrase/facet/snippet mix through the
+      windowed structured (format-v2) fleet vs the bag-of-words baseline
+      on the same fleet — per-phase p50/p99 and $/1k, top-k bit-identical
+      to StructuredOracleSearcher, facets equal to the exact dict twin,
+      phrase result sets exact, snippets covering every matched term
+      (regression-gated under --det)
 
 Determinism: every RNG is seeded per-benchmark from ``--seed`` (so the
 bench-smoke gate and the CI regression diff don't depend on which
@@ -1432,6 +1438,146 @@ def bench_overload(n_docs: int, n_queries: int) -> None:
          f"{n_logical} logical queries; sheds billed $0")
 
 
+def bench_structured(n_docs: int, n_queries: int) -> None:
+    """B16: structured queries — fielded scoring, phrases, facets, snippets
+    through the windowed fleet, vs the bag-of-words baseline on the SAME
+    fleet.
+
+    One 4-partition ×2-replica structured (format-v2) fleet serves two
+    phases over the identical burst arrival schedule: plain ``q``
+    bag-of-words queries (the legacy path — unchanged kernels on the v1
+    lanes of the v2 pack), then a structured-query mix (``synth_structured_
+    queries``: fielded terms, quoted phrases, boosts, conjunctions) with a
+    facet request per query. Gates (regression-rowed under --det):
+
+    * structured top-k (ext ids AND f32 score bits, merge order included)
+      equals ``StructuredOracleSearcher`` over the live corpus;
+    * merged facet counts equal BOTH the oracle's packed count and its
+      dict-based ``exact_facet_counts`` twin (full match set, not top-k);
+    * phrase-query result sets equal the oracle's ``exact_match_set``
+      (position adjacency survives partitioning and the merge);
+    * snippets cover every query term present in each returned doc;
+    * structured p99 ≤ 2× bag-of-words p99 — the structured surface rides
+      the same windows and fleet shape, not a new latency regime.
+
+    Reproduce: PYTHONPATH=src python -m benchmarks.run --fast --det --only b16
+    """
+    print("\nB16: structured queries — fielded/phrase/facet fleet vs oracle")
+    import dataclasses as _dc
+
+    from repro.core.gateway import WindowPolicy
+    from repro.core.partition import (FleetSpec, GatewaySpec, IndexSpec,
+                                      ReplicationSpec)
+    from repro.core.runtime import nearest_rank_percentiles
+    from repro.data.corpus import (synth_fielded_corpus, synth_queries,
+                                   synth_structured_queries)
+    from repro.index.tokenizer import flatten_text, tokenize
+    from repro.search.oracle import StructuredOracleSearcher
+    from repro.search.query import parse_query
+    from repro.search.searcher import SearchConfig
+    from repro.search.service import build_partitioned_search_app
+
+    k = 10
+    docs = synth_fielded_corpus(n_docs, vocab=max(2000, n_docs // 2), seed=0)
+    sqs = synth_structured_queries(docs, n_queries, seed=16)
+    bag = synth_queries([(e, flatten_text(t)) for e, t in docs], n_queries,
+                        seed=17)
+    window = WindowPolicy(max_window_s=0.08, target_batch=8, sparse_qps=2.0,
+                          p99_budget_s=2.0)
+    # k=100 fleet ceiling: requests still default to k=10, but the
+    # phrase-set rows below need the FULL (≤100-doc) match set back — the
+    # app clamps every request's k at the fleet's compiled search_k
+    cfg = _dc.replace(_fleet_search_cfg() or SearchConfig(), k=100)
+    app = build_partitioned_search_app(docs, FleetSpec(
+        n_parts=4,
+        replication=ReplicationSpec(replicas=2),
+        gateway=GatewaySpec(window=window),
+        index=IndexSpec(structured=True, facet_fields=("cat",)),
+        search_config=cfg))
+    app.warm()
+    for q, sq in zip(bag[:4], sqs[:4]):      # compile + hydrate, off-clock
+        app.query(q, k=k, t_arrival=app.runtime.clock + 0.05,
+                  fetch_docs=False)
+        app.query(sq=sq, k=k, facets=["cat"],
+                  t_arrival=app.runtime.clock + 0.05, fetch_docs=False)
+
+    # the SAME burst offsets replayed per phase (B14's window regime)
+    rng = np.random.default_rng(SEED + 16)
+    n_meas = 3 * n_queries
+    offsets = np.cumsum(0.01 * rng.uniform(0.9, 1.1, size=n_meas))
+    led = app.runtime.ledger
+    p99s, results = {}, {}
+    for phase in ("bag", "structured"):
+        t0 = app.runtime.clock + 2.0
+        dollars0 = led.total_dollars
+        handles = []
+        for i, off in enumerate(offsets):
+            if phase == "bag":
+                h = app.submit(bag[i % n_queries], k=k,
+                               t_arrival=t0 + float(off), fetch_docs=False)
+            else:
+                h = app.submit(sq=sqs[i % n_queries], k=k, facets=["cat"],
+                               t_arrival=t0 + float(off), fetch_docs=False)
+            handles.append(h)
+        app.flush()
+        lats = [h.response.latency_s for h in handles]
+        results[phase] = [h.response.body for h in handles]
+        p = nearest_rank_percentiles(lats, qs=(0.5, 0.99))
+        p99s[phase] = p[0.99]
+        emit(f"b16_{phase}_gw_p50_ms", round(p[0.5] * 1e3, 1), "ms")
+        emit(f"b16_{phase}_gw_p99_ms", round(p[0.99] * 1e3, 1), "ms",
+             f"{n_meas} queries, same fleet + schedule per phase")
+        emit(f"b16_{phase}_dollars_per_1k_q",
+             round((led.total_dollars - dollars0) / n_meas * 1000.0, 6), "$")
+    emit("b16_structured_p99_vs_bag",
+         round(p99s["structured"] / p99s["bag"], 2), "x",
+         "gate: <= 2 — same windows, host-side dense eval per partition")
+
+    # oracle parity over the live corpus in fleet partition order
+    live = app.indexer.live_corpus()
+    oracle = StructuredOracleSearcher(live, facet_fields=("cat",))
+    topk_ok = facets_ok = True
+    for i, body in enumerate(results["structured"]):
+        sq = sqs[i % n_queries]
+        want = [(live[d][0], s) for d, s in oracle.search(sq, k)]
+        topk_ok = topk_ok and \
+            list(zip(body["ext_ids"], body["scores"])) == want
+        counts = body["facets"]["cat"]
+        facets_ok = facets_ok and counts == oracle.facet_counts(sq, "cat") \
+            and counts == oracle.exact_facet_counts(sq, "cat")
+    emit("b16_structured_topk_bitwise_equal", int(topk_ok), "bool",
+         "fleet (ext id, f32 score) lists == StructuredOracleSearcher, "
+         "order included")
+    emit("b16_facets_equal_oracle", int(facets_ok), "bool",
+         "merged counts == packed oracle == dict-twin exact counts")
+
+    # phrase-only queries: the RESULT SET is the claim (exact adjacency)
+    phrase_ok, n_ph = True, 0
+    for sq in (s for s in sqs if s.startswith('"')):
+        want_set = {live[d][0] for d in oracle.exact_match_set(sq)}
+        if not want_set or len(want_set) > 100:
+            continue
+        r = app.query(sq=sq, k=100, t_arrival=app.runtime.clock + 0.05,
+                      fetch_docs=False)
+        phrase_ok = phrase_ok and r.ok and set(r.body["ext_ids"]) == want_set
+        n_ph += 1
+    assert n_ph > 0, "query mix produced no checkable phrase queries"
+    emit("b16_phrase_sets_equal_oracle", int(phrase_ok), "bool",
+         f"{n_ph} pure-phrase queries, exact match-set equality")
+
+    # snippets ride the merge's deduped doc fetch: term coverage per hit
+    snip_ok = True
+    for sq in sqs[:8]:
+        r = app.query(sq=sq, k=k, facets=["cat"], snippets=True,
+                      t_arrival=app.runtime.clock + 0.05)
+        terms = set(parse_query(sq).terms)
+        for doc, snip in zip(r.body["docs"], r.body["snippets"]):
+            for t in terms & set(tokenize(doc["contents"])):
+                snip_ok = snip_ok and "<em>" in snip and t in snip.lower()
+    emit("b16_snippets_cover_matched_terms", int(snip_ok), "bool",
+         "every query term present in a returned doc is highlighted")
+
+
 def main() -> None:
     global DET, SEED
     ap = argparse.ArgumentParser()
@@ -1471,6 +1617,7 @@ def main() -> None:
         "b13": lambda: bench_cold_start(min(n_docs, 8_000), min(n_q, 12)),
         "b14": lambda: bench_hybrid(min(n_docs, 1_500), min(n_q, 48)),
         "b15": lambda: bench_overload(min(n_docs, 2_000), min(n_q, 96)),
+        "b16": lambda: bench_structured(min(n_docs, 1_500), min(n_q, 40)),
     }
     only = None
     if args.only:

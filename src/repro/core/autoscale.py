@@ -98,6 +98,20 @@ class AutoscalePolicy:
     # the same invocation rate, which no shared invocations/s threshold
     # can express. None disables (PR 3's escalation triggers only).
     target_utilization: float | None = 0.6
+    # Execution-model scale applied to the warm p50 the concurrency rule
+    # reads — one float for the fleet, or a per-partition sequence. A
+    # PRUNED fleet's observable service time carries the dense-path
+    # constant (the modeled clock charges ``sim_exec_s`` calibrated
+    # against the dense pass; a measured clock still includes the dense
+    # top-k scan), but the work its kernel actually sustains at saturation
+    # is linear in blocks TOUCHED — B9b measures that fraction directly
+    # (the gated ``b9b_pruned_blocks_touched_frac_*`` rows, ~0.02 under
+    # tight single-term bounds). Feed the measured fraction here and
+    # Little's law prices warm service time as frac × p50, so a pruned
+    # fleet stops buying ~50× the pools its own arithmetic needs — and the
+    # over-provisioned drain rule shrinks one that already did. 1.0
+    # (default) keeps every pre-existing decision bit-identical.
+    exec_scale: "float | Sequence[float]" = 1.0
     # newest-N warm records behind every quantile the controller reads —
     # the SAME window HedgePolicy scans, so scaling and hedging judge one
     # latency regime (unwindowed, a long-running fleet would hedge on
@@ -149,6 +163,12 @@ class FleetController:
                 raise ValueError(
                     f"per-partition replica bounds need one entry per group: "
                     f"{len(bound)} bounds for {len(scatter.groups)} groups")
+        scale = self.policy.exec_scale
+        if (not isinstance(scale, (int, float))
+                and len(scale) != len(scatter.groups)):
+            raise ValueError(
+                f"per-partition exec_scale needs one entry per group: "
+                f"{len(scale)} entries for {len(scatter.groups)} groups")
         self.groups = [_GroupState(base=g[0], next_replica=len(g),
                                    last_target=len(g))
                        for g in scatter.groups]
@@ -239,6 +259,13 @@ class FleetController:
               else pol.max_replicas[p])
         return lo, max(lo, hi)
 
+    def _exec_scale(self, p: int) -> float:
+        """Partition ``p``'s execution-model scale — the measured
+        work-per-observed-second ratio (e.g. B9b's blocks-touched fraction
+        on a pruned fleet) the concurrency rule multiplies into warm p50."""
+        scale = self.policy.exec_scale
+        return float(scale if isinstance(scale, (int, float)) else scale[p])
+
     def _overhead_threshold(self, group: list[str]) -> float:
         if self.policy.up_overhead_s is not None:
             return self.policy.up_overhead_s
@@ -324,12 +351,16 @@ class FleetController:
                 group, qs=(0.5,), warm_only=True,
                 window=pol.warm_window)[0.5]
             if not math.isnan(wp50):
-                need = math.ceil(rate * wp50 / pol.target_utilization)
+                # the exec model: observed p50 × this partition's measured
+                # work fraction (B9b's blocks-touched frac on pruned
+                # fleets; 1.0 = the observed time IS the work)
+                svc = wp50 * self._exec_scale(p)
+                need = math.ceil(rate * svc / pol.target_utilization)
                 if need > target:
                     target = need
                     up_reason = (
-                        f"concurrency: {rate:.1f} inv/s × {wp50 * 1e3:.0f} ms "
-                        f"warm p50 ÷ {pol.target_utilization:g} util "
+                        f"concurrency: {rate:.1f} inv/s × {svc * 1e3:.0f} ms "
+                        f"modeled warm p50 ÷ {pol.target_utilization:g} util "
                         f"→ {need} pool(s)")
 
         target = min(target, hi)

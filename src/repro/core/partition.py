@@ -319,12 +319,27 @@ class VectorSpec:
 
 @dataclasses.dataclass
 class IndexSpec:
-    """What is served: the document split, compaction policy, dense tier."""
+    """What is served: the document split, compaction policy, dense tier,
+    and the structured (format-v2) tier.
+
+    ``structured=True`` packs every segment in format v2 — per-posting
+    stored occurrences, per-field lengths, and per-doc values for each
+    ``facet_fields`` entry — which is what lets the fleet serve fielded
+    scoring, positional phrases, facets, and snippets (``sq``/``sqs``
+    bodies). Declaring any ``facet_fields`` implies ``structured``.
+    Fleets that leave both defaulted publish byte-identical v1 segments
+    and reject structured queries at admission (HTTP 400)."""
 
     partition_weights: "list[float] | None" = None
     merge_policy: "MergePolicy | None" = None
     vector: VectorSpec | None = None
     asset_prefix: str = "index"
+    structured: bool = False
+    facet_fields: "tuple[str, ...] | list[str]" = ()
+
+    def __post_init__(self) -> None:
+        self.facet_fields = tuple(self.facet_fields)
+        self.structured = self.structured or bool(self.facet_fields)
 
 
 @dataclasses.dataclass

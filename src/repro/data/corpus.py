@@ -89,6 +89,67 @@ def synth_pruned_blocks(seed: int, *, n_terms: int, max_blocks: int,
     return tf, dl_g, docs, idf_q, ub, valid
 
 
+def synth_fielded_corpus(n_docs: int, *, vocab: int = 5000,
+                         mean_len: int = 60, n_facets: int = 8,
+                         seed: int = 0, zipf_a: float = 1.3
+                         ) -> list[tuple[str, dict]]:
+    """Fielded twin of :func:`synth_corpus` for the structured (v2) tier:
+    every document is ``{"title", "body", "cat"}`` — a short Zipf-sampled
+    title, a :func:`synth_corpus`-shaped body, and one categorical facet
+    value with Zipf-skewed popularity (realistic facet histograms: a fat
+    head value, a long tail)."""
+    rng = np.random.default_rng(seed)
+    lens = np.maximum(4, rng.lognormal(np.log(mean_len), 0.4,
+                                       n_docs)).astype(int)
+    tlens = rng.integers(2, 6, n_docs)
+    docs = []
+    for i in range(n_docs):
+        ttids = rng.zipf(zipf_a, tlens[i]) % vocab
+        btids = rng.zipf(zipf_a, lens[i]) % vocab
+        cat = int(rng.zipf(1.6) - 1) % n_facets
+        docs.append((f"doc{i}", {
+            "title": " ".join(term_string(int(t)) for t in ttids),
+            "body": " ".join(term_string(int(t)) for t in btids),
+            "cat": f"c{cat}",
+        }))
+    return docs
+
+
+def synth_structured_queries(docs: list[tuple[str, dict]], n_queries: int, *,
+                             seed: int = 1) -> list[str]:
+    """A structured-query mix over a fielded corpus, cycling the DSL's
+    clause shapes: bag-of-words, field-scoped terms, quoted phrases
+    (adjacent KEPT tokens of one document's body, so the phrase is
+    guaranteed to match post-analysis), field-scoped phrases, and boosted
+    conjunctions. Terms are sampled from the target document itself, like
+    :func:`synth_queries` — every query has matches."""
+    from repro.index.tokenizer import tokenize
+    rng = np.random.default_rng(seed)
+    out: list[str] = []
+    while len(out) < n_queries:
+        _, text = docs[rng.integers(len(docs))]
+        title = tokenize(text["title"])
+        body = tokenize(text["body"])
+        if len(body) < 3:
+            continue
+        i = int(rng.integers(len(body) - 1))
+        a, b = body[i], body[i + 1]
+        c = body[int(rng.integers(len(body)))]
+        t = title[int(rng.integers(len(title)))] if title else c
+        shape = len(out) % 5
+        if shape == 0:                       # plain bag-of-words
+            out.append(f"{a} {c}")
+        elif shape == 1:                     # fielded term, disjunctive
+            out.append(f"title:{t} OR {c}")
+        elif shape == 2:                     # unscoped phrase
+            out.append(f'"{a} {b}"')
+        elif shape == 3:                     # field-scoped phrase + term
+            out.append(f'body:"{a} {b}" OR {c}')
+        else:                                # boosted conjunction
+            out.append(f"title:{t}^2 AND {c}")
+    return out
+
+
 def hash_embedder(dim: int = 16):
     """Deterministic text → unit-norm f32 embedding (no model weights ship
     with the container, so the dense tier embeds with a content-hash-seeded

@@ -32,11 +32,11 @@ from repro.core.directory import Directory, DirectoryError, StoreDirectory
 from repro.core.object_store import NoSuchKey
 from repro.index.builder import (PAYLOAD_FILE, SUPERINDEX_FILE,
                                  VECTOR_ROWS_FILE, VECTOR_SUPERINDEX_FILE,
-                                 IndexMeta, PackedIndex, VectorMeta,
-                                 combine_segments, payload_row_bytes,
-                                 unpack_payload_rows, unpack_superindex,
-                                 unpack_vector_rows, unpack_vector_superindex,
-                                 vector_row_bytes)
+                                 FieldData, IndexMeta, PackedIndex,
+                                 VectorMeta, combine_segments,
+                                 payload_row_bytes, unpack_payload_rows,
+                                 unpack_superindex, unpack_vector_rows,
+                                 unpack_vector_superindex, vector_row_bytes)
 
 
 class SuperIndexMissing(Exception):
@@ -106,7 +106,8 @@ class PartialSegment:
     def __init__(self, directory: Directory, meta: IndexMeta, vocab: dict,
                  term_offsets: np.ndarray, block_max: np.ndarray,
                  doc_len: np.ndarray, idf: np.ndarray,
-                 header_bytes: int) -> None:
+                 header_bytes: int,
+                 fields_header: "dict | None" = None) -> None:
         self.directory = directory
         self.meta = meta
         self.vocab = vocab
@@ -117,6 +118,17 @@ class PartialSegment:
         NB, B = meta.n_blocks, meta.block
         self.block_docs = np.full((NB, B), meta.n_docs, np.int32)
         self.block_tf = np.zeros((NB, B), np.uint8)
+        # format v2: the header carries field names / per-field lengths /
+        # facet tables; the per-posting occurrence arrays hydrate with the
+        # SAME payload-row ranges as docs/tf (one wider row pitch), masked
+        # rows staying all-zero exactly like tf
+        self.fields_header = fields_header
+        self.pos_slots = fields_header["pos_slots"] if fields_header else 0
+        if fields_header is not None:
+            P = self.pos_slots
+            self.block_nocc = np.zeros((NB, B), np.uint8)
+            self.block_occ_field = np.zeros((NB, B, P), np.uint8)
+            self.block_occ_pos = np.zeros((NB, B, P), np.uint16)
         self._rows_live = np.zeros(NB, bool)
         self._reader = None
         self.bytes_read = header_bytes   # data bytes moved so far (header +
@@ -128,10 +140,11 @@ class PartialSegment:
     def open(cls, directory: Directory) -> "PartialSegment":
         """Read ONLY the header (one GET); no payload rows yet."""
         blob = _read_full(directory, SUPERINDEX_FILE)
-        meta, vocab, (term_offsets, block_max, doc_len, idf) = \
+        meta, vocab, (term_offsets, block_max, doc_len, idf), fields = \
             unpack_superindex(blob)
         return cls(directory, meta, vocab, term_offsets, block_max,
-                   doc_len, idf, header_bytes=len(blob))
+                   doc_len, idf, header_bytes=len(blob),
+                   fields_header=fields)
 
     @property
     def full(self) -> bool:
@@ -155,7 +168,7 @@ class PartialSegment:
             return
         if self._reader is None:
             self._reader = _range_reader(self.directory, PAYLOAD_FILE)
-        row = payload_row_bytes(self.meta.block)
+        row = payload_row_bytes(self.meta.block, self.pos_slots)
         gap = _coalesce_gap_bytes(self.directory)
         spans = coalesce_extents(
             [(lo * row, hi * row) for lo, hi in todo], gap)
@@ -163,7 +176,14 @@ class PartialSegment:
             chunk = self._reader(blo, bhi - blo)
             self.bytes_read += len(chunk)
             lo = blo // row
-            docs, tf = unpack_payload_rows(chunk, self.meta.block)
+            if self.pos_slots:
+                docs, tf, nocc, occf, occp = unpack_payload_rows(
+                    chunk, self.meta.block, self.pos_slots)
+                self.block_nocc[lo:lo + len(docs)] = nocc
+                self.block_occ_field[lo:lo + len(docs)] = occf
+                self.block_occ_pos[lo:lo + len(docs)] = occp
+            else:
+                docs, tf = unpack_payload_rows(chunk, self.meta.block)
             self.block_docs[lo:lo + len(docs)] = docs
             self.block_tf[lo:lo + len(tf)] = tf
             self._rows_live[lo:lo + len(docs)] = True
@@ -183,11 +203,24 @@ class PartialSegment:
 
     def to_packed(self) -> PackedIndex:
         """The current view as a PackedIndex (shares the live arrays)."""
+        fields = None
+        if self.fields_header is not None:
+            fh = self.fields_header
+            fields = FieldData(
+                field_names=list(fh["field_names"]),
+                pos_slots=self.pos_slots,
+                field_len=fh["field_len"],
+                block_nocc=self.block_nocc,
+                block_occ_field=self.block_occ_field,
+                block_occ_pos=self.block_occ_pos,
+                facet_names=list(fh["facet_names"]),
+                facet_values=[list(v) for v in fh["facet_values"]],
+                facet_ids=fh["facet_ids"])
         return PackedIndex(
             meta=self.meta, vocab=self.vocab,
             term_offsets=self.term_offsets, block_docs=self.block_docs,
             block_tf=self.block_tf, block_max=self.block_max,
-            doc_len=self.doc_len, idf=self.idf)
+            doc_len=self.doc_len, idf=self.idf, fields=fields)
 
 
 def open_partial_segment(directory: Directory) -> PartialSegment:

@@ -11,6 +11,16 @@ reference (``dot_topk_batch_ref``), so per-partition fleet scores must be
 uint32-BIT-identical, not merely close. ``hybrid_oracle_fuse`` runs the
 same Reciprocal Rank Fusion the coordinator runs, over the two oracles'
 rankings — the hybrid tier's end-to-end pin.
+
+:class:`StructuredOracleSearcher` extends the pin to the v2 structured
+surface: it packs the FULL corpus into one v2 segment and evaluates with
+the very same :mod:`repro.search.structured` functions the fleet's
+partitions run — top-k scores must be BIT-identical through the merge,
+facet counts and phrase match sets exactly equal. Its ``exact_*``
+methods are an independent dict-based twin computed straight from raw
+text (applying the format's documented POS_SLOTS truncation rule), so
+tests can pin the packed evaluator against an implementation that shares
+none of its code.
 """
 
 from __future__ import annotations
@@ -93,6 +103,115 @@ class DenseOracleSearcher:
                                        self.vectors, kk)
         return [(int(i), float(v))
                 for v, i in zip(np.asarray(vals)[0], np.asarray(ids)[0])]
+
+
+class StructuredOracleSearcher:
+    """Exact structured retrieval over the full corpus — the fleet's pin
+    for fielded scoring, phrases, facets, and match sets.
+
+    Scores come from ONE full-corpus v2 pack evaluated by the shared
+    :func:`repro.search.structured.evaluate_structured` (bit-parity with
+    the partitioned fleet is structural: every per-leaf input is global or
+    per-doc). The ``exact_*`` twins recompute match sets and facet counts
+    from raw text with the identical stored-occurrence truncation, sharing
+    no code with the packer — the independent cross-check."""
+
+    def __init__(self, docs: "list[tuple[str, Any]]", *,
+                 facet_fields: Sequence[str] = (), k1: float = 0.9,
+                 b: float = 0.4) -> None:
+        from repro.index.builder import (IndexWriter, POS_SLOTS,
+                                         compute_global_stats, field_avgdl)
+        self.docs = list(docs)
+        self.doc_ids = [d for d, _ in self.docs]
+        self.pos_slots = POS_SLOTS
+        w = IndexWriter(k1=k1, b=b, structured=True,
+                        facet_fields=tuple(facet_fields))
+        for ext_id, text in self.docs:
+            w.add(ext_id, text)
+        self.packed = w.pack()
+        stats = compute_global_stats(self.docs, fields=True)
+        self.field_avgdl = {f: field_avgdl(stats, f)
+                            for f in stats.get("fields", {})}
+
+    def _query(self, query):
+        from repro.search.query import Query, parse_query
+        return query if isinstance(query, Query) else parse_query(query)
+
+    def evaluate(self, query) -> tuple["np.ndarray", "np.ndarray"]:
+        from repro.search.structured import evaluate_structured
+        return evaluate_structured(self.packed, self._query(query),
+                                   field_avgdl=self.field_avgdl)
+
+    def search(self, query, k: int = 10) -> list[tuple[int, float]]:
+        """Top-k (global doc index, f32 score), ties (-score, index) —
+        the same order the fleet's (-score, partition, doc_id) merge
+        induces on ``live_corpus()`` global indices."""
+        from repro.search.structured import structured_topk
+        scores, _ = self.evaluate(query)
+        vals, ids = structured_topk(scores, k)
+        return [(int(i), float(v)) for v, i in zip(vals, ids) if v > 0.0]
+
+    def match_set(self, query) -> set[int]:
+        _, eligible = self.evaluate(query)
+        import numpy as _np
+        return set(_np.nonzero(eligible)[0].tolist())
+
+    def facet_counts(self, query, facet_field: str) -> dict[str, int]:
+        from repro.search.structured import facet_counts
+        _, eligible = self.evaluate(query)
+        return facet_counts(self.packed, eligible, facet_field)
+
+    # -- independent dict-based twins (no packed-array code shared) --------
+
+    def _stored_occurrences(self, text) -> dict[str, list[tuple[str, int]]]:
+        """term -> first POS_SLOTS (field, position) occurrences, in
+        tokenize_positions order — the format's truncation rule restated
+        from the raw text."""
+        from repro.index.tokenizer import tokenize_positions
+        occ: dict[str, list[tuple[str, int]]] = {}
+        for fld, tok, pos in tokenize_positions(text):
+            lst = occ.setdefault(tok, [])
+            if len(lst) < self.pos_slots:
+                lst.append((fld, pos))
+        return occ
+
+    def _leaf_matches(self, leaf, text) -> bool:
+        occ = self._stored_occurrences(text)
+        if leaf.kind == "term":
+            t = leaf.terms[0]
+            if leaf.field is None:
+                return t in occ      # every present term stores ≥1 occurrence
+            return any(f == leaf.field for f, _ in occ.get(t, ()))
+        sets = [set(occ.get(t, ())) for t in leaf.terms]
+        if not all(sets):
+            return False
+        for f, p in sets[0]:
+            if leaf.field is not None and f != leaf.field:
+                continue
+            if all((f, p + i) in sets[i] for i in range(1, len(sets))):
+                return True
+        return False
+
+    def exact_match_set(self, query) -> set[int]:
+        q = self._query(query)
+        if not q.leaves:
+            return set()
+        out = set()
+        for i, (_, text) in enumerate(self.docs):
+            hits = sum(self._leaf_matches(lf, text) for lf in q.leaves)
+            ok = hits == len(q.leaves) if q.conjunctive else hits > 0
+            if ok:
+                out.add(i)
+        return out
+
+    def exact_facet_counts(self, query, facet_field: str) -> dict[str, int]:
+        from repro.index.tokenizer import field_items
+        counts: dict[str, int] = {}
+        for i in self.exact_match_set(query):
+            val = dict(field_items(self.docs[i][1])).get(facet_field)
+            if val:
+                counts[str(val)] = counts.get(str(val), 0) + 1
+        return counts
 
 
 def hybrid_oracle_fuse(sparse_ranked: Sequence[tuple[int, float]],

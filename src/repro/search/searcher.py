@@ -29,6 +29,10 @@ from repro.index.hydration import (LazyIndex, LazyVectors, SuperIndexMissing,
 from repro.index.tokenizer import tokenize
 from repro.kernels.ops import dot_topk_batch
 from repro.search.bm25 import SearchState, encode_queries, make_search_fn
+from repro.search.query import query_from_payload
+from repro.search.structured import (StructuredUnsupported,
+                                     evaluate_structured, facet_counts,
+                                     structured_topk)
 
 
 @dataclasses.dataclass
@@ -359,7 +363,15 @@ class LazySearcher:
         """Hydrate the posting blocks every term of ``queries`` names;
         (changed, sim_s). On-critical-path: callers account ``sim_s`` as
         hydration."""
-        terms = {t for q in queries for t in tokenize(q)}
+        return self.ensure_terms(
+            {t for q in queries for t in tokenize(q)})
+
+    def ensure_terms(self, terms) -> tuple[bool, float]:
+        """Hydrate specific terms' posting blocks — the structured path
+        hands in its ASTs' term set directly (the same coalesced ranged
+        GETs also pull those rows' field/position payload on v2
+        segments). Priced exactly like :meth:`ensure_queries`."""
+        terms = set(terms)
         return self._billed(lambda: self.index.ensure_terms(terms))
 
     def ensure_top_terms(self, n: int) -> tuple[bool, float]:
@@ -422,6 +434,17 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
     (micro-batch → ``{"results": [...]}``, one vmapped device call for the
     whole batch — how the gateway absorbs concurrent traffic without one
     invocation per query).
+
+    STRUCTURED payloads carry ``sq`` (one AST payload dict) or ``sqs`` (a
+    micro-batch of them) instead of text — the coordinator parsed the DSL
+    at admission; workers never re-parse. They evaluate host-side over
+    the v2 packed arrays (:func:`~repro.search.structured.
+    evaluate_structured`, bit-identical across partitioning), honouring
+    ``facets`` (per-query facet-field requests, counted over the full
+    eligible set) and ``favg`` (the generation's live per-field avgdls).
+    Requires a segment published with field/position data — a structured
+    payload against a v1 segment raises
+    :class:`~repro.search.structured.StructuredUnsupported`.
 
     ``payload["mode"]`` selects the tier(s): ``"sparse"`` (BM25, the
     default — pre-hybrid payloads are unchanged), ``"dense"`` (embedding
@@ -503,34 +526,82 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
 
         need_sparse = mode in ("sparse", "hybrid")
         need_dense = mode in ("dense", "hybrid")
-        batched = "queries" in payload or "qvs" in payload
+        batched = ("queries" in payload or "qvs" in payload
+                   or "sqs" in payload)
         queries = (list(payload["queries"]) if "queries" in payload
                    else [payload["q"]] if "q" in payload else [])
         qvecs = (list(payload["qvs"]) if "qvs" in payload
                  else [payload["qv"]] if "qv" in payload else [])
+        # structured (format-v2) queries arrive as admission-parsed AST
+        # payloads (sq/sqs) — never re-parsed here — with per-query facet
+        # requests and the generation's live field avgdls (favg)
+        sq_payloads = (list(payload["sqs"]) if "sqs" in payload
+                       else [payload["sq"]] if "sq" in payload else None)
+        if sq_payloads is not None and mode != "sparse":
+            raise StructuredUnsupported(
+                "structured queries are sparse-tier only")
         k = int(payload.get("k", cfg.k))
-        n_q = len(qvecs) if mode == "dense" else len(queries)
+        n_q = (len(sq_payloads) if sq_payloads is not None
+               else len(qvecs) if mode == "dense" else len(queries))
         if need_dense and len(qvecs) != n_q:
             raise ValueError("hybrid query needs one vector per text query")
 
         t0 = time.perf_counter()
         exec_s = 0.0
-        sparse_hits = dense_hits = None
+        sparse_hits = dense_hits = facets_out = None
         searcher = dsearcher = None
         entry = None
         if need_sparse:
             entry = cache.get_or_hydrate(asset, version, _hydrate)
-            if isinstance(entry, LazySearcher):
-                # pull exactly this batch's term blocks — on the critical
-                # path, so it accounts as hydration (a warm instance whose
-                # view already covers the terms pays nothing here)
-                changed, sim_s = entry.ensure_queries(queries)
-                if changed:
-                    cache.note_hydration(sim_s)
-                searcher = entry.searcher
+            if sq_payloads is not None:
+                queries_ast = [query_from_payload(d) for d in sq_payloads]
+                if isinstance(entry, LazySearcher):
+                    # pull exactly the ASTs' term blocks — the same
+                    # coalesced ranged GETs bring the v2 field/position
+                    # rows along at the wider pitch
+                    changed, sim_s = entry.ensure_terms(
+                        {t for q in queries_ast for t in q.terms})
+                    if changed:
+                        cache.note_hydration(sim_s)
+                    searcher = entry.searcher
+                else:
+                    searcher = entry
+                packed = searcher.packed
+                if packed.fields is None:
+                    raise StructuredUnsupported(
+                        "structured query against a v1 segment (publish "
+                        "with IndexSpec(structured=True, ...))")
+                favg = payload.get("favg") or {}
+                facet_req = payload.get("facets") or [[]] * n_q
+                n_docs = packed.meta.n_docs
+                sparse_hits, facets_out = [], []
+                for qi, ast in enumerate(queries_ast):
+                    # host-side dense evaluation — ALWAYS, even on pruned
+                    # fleets: field/phrase-modified impacts invalidate the
+                    # v1 block_max ceilings, so block-max pruning would be
+                    # unsound for structured queries
+                    scores, eligible = evaluate_structured(
+                        packed, ast, field_avgdl=favg)
+                    vals, ids = structured_topk(scores, k)
+                    sparse_hits.append(
+                        [(int(i), float(v)) for v, i in zip(vals, ids)
+                         if i < n_docs and v > 0])
+                    facets_out.append(
+                        {f: facet_counts(packed, eligible, f)
+                         for f in facet_req[qi]})
             else:
-                searcher = entry
-            sparse_hits = searcher.search_batch(queries, k)
+                if isinstance(entry, LazySearcher):
+                    # pull exactly this batch's term blocks — on the
+                    # critical path, so it accounts as hydration (a warm
+                    # instance whose view already covers the terms pays
+                    # nothing here)
+                    changed, sim_s = entry.ensure_queries(queries)
+                    if changed:
+                        cache.note_hydration(sim_s)
+                    searcher = entry.searcher
+                else:
+                    searcher = entry
+                sparse_hits = searcher.search_batch(queries, k)
             if cfg.sim_exec_s is not None:
                 exec_s += (cfg.sim_exec_s
                            + cfg.sim_exec_per_query_s * (n_q - 1)
@@ -579,6 +650,10 @@ def make_search_handler(catalog: AssetCatalog, doc_store: KVStore,
                 "ext_ids": ext_ids,
                 "docs": [raw.get(e) for e in ext_ids] if raw else [],
             }
+            if facets_out is not None:
+                # per-partition scatter-add over the FULL eligible match
+                # set; the coordinator merges these at gather like top-k
+                r["facets"] = facets_out[qi]
             if mode == "hybrid":
                 dh = dense_hits[qi]
                 r["dense"] = {

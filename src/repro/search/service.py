@@ -39,22 +39,35 @@ from repro.core.runtime import FaaSRuntime, InvocationRecord, RuntimeConfig
 from repro.data.corpus import hash_embedder
 from repro.index.builder import (IndexWriter, MergePolicy,
                                  compute_global_stats, extend_vocab,
-                                 global_vocab, pack_vectors, read_segment,
-                                 update_stats, write_segment,
+                                 field_avgdl, global_vocab, pack_vectors,
+                                 read_segment, update_stats, write_segment,
                                  write_vector_segment)
-from repro.index.tokenizer import token_counts
+from repro.index.tokenizer import flatten_text, token_counts
 from repro.search.distributed import partition_corpus
+from repro.search.query import Query, QueryParseError, parse_query
 from repro.search.searcher import (PREWARM_TOP_TERMS, SearchConfig,
                                    make_search_handler)
+from repro.search.structured import make_snippet, merge_facet_counts
 
 SEARCH_MODES = ("sparse", "dense", "hybrid")
 
 
 def _search_body(q: "str | list[str] | None", k: int, fetch_docs: bool,
-                 mode: str = "sparse", vector=None) -> dict:
+                 mode: str = "sparse", vector=None, sq=None,
+                 facets=None, snippets: bool = False) -> dict:
     body = {"k": k, "fetch_docs": fetch_docs}
     if mode != "sparse":
         body["mode"] = mode
+    if sq is not None:
+        # structured DSL: one query string, or a micro-batch of them
+        if isinstance(sq, str):
+            body["sq"] = sq
+        else:
+            body["sqs"] = list(sq)
+    if facets:
+        body["facets"] = list(facets)
+    if snippets:
+        body["snippets"] = True
     # batch shape follows the text queries when given, else the vectors:
     # a flat number sequence is ONE query vector, a sequence of sequences
     # is a micro-batch of them
@@ -139,6 +152,18 @@ def build_search_app(
 ENQUEUE_COST_S = 0.0005    # staging one add/delete batch at the coordinator
 
 
+def _copy_stats(stats: dict) -> dict:
+    """Deep-enough copy of compute_global_stats-shaped stats: ``df`` and
+    (on structured fleets) every ``fields`` entry are fresh containers.
+    ``update_stats`` mutates the per-field dicts IN PLACE, so a shallow
+    ``dict(stats, df=...)`` checkpoint would let a failed commit's
+    mutations leak into what gets restored."""
+    out = dict(stats, df=dict(stats["df"]))
+    if "fields" in stats:
+        out["fields"] = {f: dict(e) for f, e in stats["fields"].items()}
+    return out
+
+
 @dataclasses.dataclass
 class _PartitionState:
     """One partition's segment tier, as the writer tracks it."""
@@ -194,7 +219,9 @@ class FleetIndexer:
                  sim_write_per_doc_s: float = 2e-5,
                  stats_asset: str = "index-stats",
                  embedder: "Callable | None" = None,
-                 vec_dim: int = 16, vec_dtype: str = "float32") -> None:
+                 vec_dim: int = 16, vec_dtype: str = "float32",
+                 structured: bool = False,
+                 facet_fields: "tuple[str, ...]" = ()) -> None:
         self.catalog = catalog
         self.doc_store = doc_store
         self.runtime = runtime
@@ -209,6 +236,11 @@ class FleetIndexer:
         self.embedder = embedder
         self.vec_dim = vec_dim
         self.vec_dtype = vec_dtype
+        # structured (format-v2) tier: every segment this writer packs —
+        # base, delta, merge — carries field/position/facet data, so a
+        # rollover can never demote the fleet's structured surface
+        self.structured = structured or bool(facet_fields)
+        self.facet_fields = tuple(facet_fields)
         self.stats_asset = stats_asset    # shared per-generation stats/vocab
         self._stats_ref: list | None = None
         self.gen = 0
@@ -245,7 +277,9 @@ class FleetIndexer:
             self._stats_ref = self.catalog.publish_generation_state(
                 self.stats_asset, self.gen, self.stats, self.vocab)
         i = len(self.parts)
-        writer = IndexWriter(global_stats=self.stats, vocab=self.vocab)
+        writer = IndexWriter(global_stats=self.stats, vocab=self.vocab,
+                             structured=self.structured,
+                             facet_fields=self.facet_fields)
         writer.add_many(docs)
         base_seg = f"g{self.gen:06d}-base"
         self.catalog.publish_segment(asset, base_seg,
@@ -275,8 +309,10 @@ class FleetIndexer:
         """Embed + pack one segment's docs as its dense twin (row r of the
         vector segment IS doc r of the sparse segment)."""
         if docs:
-            vecs = np.stack([self.embedder(text) for _, text in docs]
-                            ).astype(np.float32)
+            # structured corpora carry Mapping texts; the embedder sees the
+            # same flattened view the analyzer tokenizes
+            vecs = np.stack([self.embedder(flatten_text(text))
+                             for _, text in docs]).astype(np.float32)
         else:   # a merge can empty a partition; the tier stays well-formed
             vecs = np.zeros((0, self.vec_dim), dtype=np.float32)
         return pack_vectors(vecs, [ext for ext, _ in docs],
@@ -346,11 +382,16 @@ class FleetIndexer:
             tag = self._seg_tag()
             if op == "delta":
                 docs = list(st.staged_docs)
-                packed = IndexWriter.delta(docs, self.stats, vocab=self.vocab)
+                packed = IndexWriter.delta(docs, self.stats, vocab=self.vocab,
+                                           structured=self.structured,
+                                           facet_fields=self.facet_fields)
                 seg = f"g{gen:06d}-delta-{tag}{self._seg_seq:04d}"
             elif op == "merge":
                 docs = st.live_docs() + list(st.staged_docs)
-                writer = IndexWriter(global_stats=self.stats, vocab=self.vocab)
+                writer = IndexWriter(global_stats=self.stats,
+                                     vocab=self.vocab,
+                                     structured=self.structured,
+                                     facet_fields=self.facet_fields)
                 writer.add_many(docs)
                 packed = writer.pack()
                 seg = f"g{gen:06d}-base-{tag}{self._seg_seq:04d}"
@@ -385,7 +426,7 @@ class FleetIndexer:
         without it, a partial multi-partition publish would wedge every
         future commit and silently drop the pending batch."""
         return {
-            "stats": dict(self.stats, df=dict(self.stats["df"])),
+            "stats": _copy_stats(self.stats),
             "vocab": self.vocab,        # rebound by extend_vocab, never mutated
             "ext_index": dict(self._ext_index),
             "pending_adds": list(self.pending_adds),
@@ -405,7 +446,7 @@ class FleetIndexer:
         # loop restores the same checkpoint repeatedly, and handing out
         # the checkpoint's own objects would let attempt N's mutations
         # corrupt what attempt N+1 restores
-        self.stats = dict(cp["stats"], df=dict(cp["stats"]["df"]))
+        self.stats = _copy_stats(cp["stats"])
         self.vocab = cp["vocab"]        # rebound by extend_vocab, never mutated
         self._ext_index = dict(cp["ext_index"])
         self.pending_adds = list(cp["pending_adds"])
@@ -469,7 +510,7 @@ class FleetIndexer:
         manifests = [self.catalog.read_generation(st.asset)
                      for st in self.parts]
         stats, vocab = self.catalog.resolve_generation_state(manifests[0])
-        self.stats = dict(stats, df=dict(stats["df"]))
+        self.stats = _copy_stats(stats)
         self.vocab = dict(vocab)
         self._ext_index = {}
         for i, (st, m) in enumerate(zip(self.parts, manifests)):
@@ -543,12 +584,13 @@ class FleetIndexer:
             raise ValueError("forked writer needs a distinct writer_id")
         w = FleetIndexer(
             self.catalog, self.doc_store, self.runtime,
-            stats=dict(self.stats, df=dict(self.stats["df"])),
+            stats=_copy_stats(self.stats),
             vocab=self.vocab, merge_policy=self.merge_policy,
             sim_write_s=self.sim_write_s,
             sim_write_per_doc_s=self.sim_write_per_doc_s,
             stats_asset=self.stats_asset, embedder=self.embedder,
-            vec_dim=self.vec_dim, vec_dtype=self.vec_dtype)
+            vec_dim=self.vec_dim, vec_dtype=self.vec_dtype,
+            structured=self.structured, facet_fields=self.facet_fields)
         w.writer_id = writer_id
         w.gen = self.gen
         w._stats_ref = list(self._stats_ref) if self._stats_ref else None
@@ -804,10 +846,15 @@ class PartitionedSearchApp:
     # text → (dim,) f32 query embedder; non-None iff the fleet serves a
     # dense-vector tier (FleetSpec.index.vector)
     embedder: "Callable | None" = None
+    # format-v2 structured tier (IndexSpec.structured/facet_fields):
+    # fielded scoring, phrases, facets, snippets via sq/sqs bodies
+    structured: bool = False
+    facet_fields: tuple = ()
 
-    def query(self, q: "str | list[str] | None", k: int = 10, *,
+    def query(self, q: "str | list[str] | None" = None, k: int = 10, *,
               t_arrival: float | None = None, fetch_docs: bool = True,
-              mode: str = "sparse", vector=None):
+              mode: str = "sparse", vector=None, sq=None, facets=None,
+              snippets: bool = False):
         """One query (str) or a micro-batch (list of str) through the
         gateway; batches evaluate as ONE invocation per partition.
 
@@ -818,16 +865,29 @@ class PartitionedSearchApp:
         fleet's embedder derives them from the text; dense-mode callers
         may pass ``q=None`` with ``vector`` alone.
 
+        ``sq`` is a STRUCTURED query in the v2 DSL (or a list of them —
+        mutually exclusive with ``q``): terms, ``field:term`` scoping,
+        quoted phrases, ``^boost``, AND/OR. Parsed ONCE here at admission
+        (malformed queries 400 before anything dispatches); partitions
+        evaluate the shipped AST. ``facets`` names declared facet fields
+        to count over each query's FULL match set, merged at gather like
+        top-k. ``snippets=True`` cuts highlighted fragments from the
+        fetched docs. All three need a fleet built with
+        ``IndexSpec(structured=True, ...)``.
+
         ``k`` is capped at the per-partition ``SearchConfig.k``: each
         partition's jitted fn returns its top ``search_k`` candidates, so
         merged ranks beyond that are not sound and are never returned."""
         return self.gateway.request(
-            "GET", "/search", _search_body(q, k, fetch_docs, mode, vector),
+            "GET", "/search",
+            _search_body(q, k, fetch_docs, mode, vector, sq, facets,
+                         snippets),
             t_arrival=t_arrival)
 
-    def submit(self, q: "str | list[str] | None", k: int = 10, *,
+    def submit(self, q: "str | list[str] | None" = None, k: int = 10, *,
                t_arrival: float | None = None, fetch_docs: bool = True,
-               mode: str = "sparse", vector=None) -> PendingResponse:
+               mode: str = "sparse", vector=None, sq=None, facets=None,
+               snippets: bool = False) -> PendingResponse:
         """Admit a query to the gateway's adaptive micro-batch window:
         concurrent arrivals inside one window coalesce into ONE
         ``ScatterGather.search_batch`` dispatch — one vmapped invocation
@@ -837,10 +897,13 @@ class PartitionedSearchApp:
         pinned per query AT ADMISSION: a commit landing while the window is
         open splits the flush into per-generation dispatches instead of
         moving an admitted query to an index it didn't arrive under.
-        ``mode``/``vector`` as in :meth:`query`; a window groups dispatches
-        by (generation, mode), so mixed-mode traffic coalesces per mode."""
+        ``mode``/``vector``/``sq``/``facets``/``snippets`` as in
+        :meth:`query`; a window groups dispatches by (generation, mode,
+        structured), so mixed traffic coalesces per dispatch shape."""
         return self.gateway.submit(
-            "GET", "/search", _search_body(q, k, fetch_docs, mode, vector),
+            "GET", "/search",
+            _search_body(q, k, fetch_docs, mode, vector, sq, facets,
+                         snippets),
             t_arrival=t_arrival)
 
     def flush(self, now: float | None = None) -> int:
@@ -939,29 +1002,96 @@ class PartitionedSearchApp:
             return {}, 0.0
         return self.doc_store.batch_get_billed(ext)
 
-    def _materialize(self, hits: list[PartitionHit], raw: dict) -> dict:
+    def _materialize(self, hits: list[PartitionHit], raw: dict, *,
+                     terms: "list[str] | None" = None,
+                     snippets: bool = False) -> dict:
         offsets = (self.indexer.part_doc_offsets()
                    if self.indexer is not None else None)
         ext_ids = [h.ext_id for h in hits]
-        return {
+        docs = [raw.get(e) for e in ext_ids] if raw else []
+        out = {
             "ids": [self._global_id(h, offsets) for h in hits],
             "scores": [h.score for h in hits],
             "ext_ids": ext_ids,
-            "docs": [raw.get(e) for e in ext_ids] if raw else [],
+            "docs": docs,
         }
+        if snippets:
+            # cut from the SAME deduped KV fetch the merge already did —
+            # snippets add zero extra round trips (they need fetch_docs)
+            out["snippets"] = [
+                make_snippet(d["contents"], terms or []) if d else None
+                for d in docs]
+        return out
+
+    def _merged_facets(self, results: list, qi: int, batched: bool,
+                       facet_fields) -> dict:
+        """Gather-side facet merge for one query: each partition counted
+        its FULL eligible match set per requested field; string-keyed
+        summation joins them globally — facets merge at gather exactly
+        like top-k, one more reduction over the same scatter results."""
+        per_part = [(r["results"][qi] if batched else r) for r in results]
+        return {f: merge_facet_counts(
+                    [pp.get("facets", {}).get(f, {}) for pp in per_part])
+                for f in facet_fields}
+
+    def _field_avgdl(self) -> dict:
+        """Live per-field average lengths from the writer's global stats —
+        partition-invariant scoring inputs, shipped with every structured
+        scatter (resolved at the same instant the generation is pinned,
+        so legs never score a field under a different corpus state than
+        the generation they serve)."""
+        stats = self.indexer.stats
+        return {f: field_avgdl(stats, f) for f in stats.get("fields", {})}
+
+    def _structured_plan(self, body: dict, mode: str
+                         ) -> tuple[str, bool, list, None, "list[Query]"]:
+        """The structured (``sq``/``sqs``) half of :meth:`_query_plan`:
+        parse the DSL ONCE here at admission — workers only ever see the
+        shipped AST payloads — and reject everything the fleet cannot
+        serve (no structured tier, undeclared facet field, malformed
+        query) BEFORE anything dispatches."""
+        if mode != "sparse":
+            raise BadRequest("structured queries are sparse-tier only "
+                             f"(got mode={mode!r})")
+        if not self.structured:
+            raise BadRequest(
+                "this fleet serves no structured tier (build it with "
+                "FleetSpec(index=IndexSpec(structured=True, ...)))")
+        if "q" in body or "queries" in body:
+            raise BadRequest("pass either q/queries or sq/sqs, not both")
+        batched = "sqs" in body
+        raw = list(body["sqs"]) if batched else [body["sq"]]
+        if batched and not raw:
+            raise BadRequest("sqs=[] — an empty micro-batch has nothing "
+                             "to dispatch")
+        try:
+            asts = [parse_query(s) for s in raw]
+        except QueryParseError as e:
+            raise BadRequest(str(e)) from None
+        for f in body.get("facets", ()):
+            if f not in self.facet_fields:
+                raise BadRequest(
+                    f"facet field {f!r} not declared "
+                    f"(declared: {list(self.facet_fields)})")
+        return mode, batched, raw, None, asts
 
     def _query_plan(self, body: dict) -> tuple[str, bool, "list | None",
-                                               "list | None"]:
+                                               "list | None",
+                                               "list[Query] | None"]:
         """Validate a /search body and resolve its tiers' inputs:
-        (mode, batched, texts, vectors). Texts is None for a vector-only
-        dense query; vectors is None for sparse. Embeds text queries at
-        the COORDINATOR when the client sent no vectors — every scatter
+        (mode, batched, texts, vectors, structured ASTs). Texts is None
+        for a vector-only dense query; vectors is None for sparse; ASTs
+        are non-None iff the body carries ``sq``/``sqs`` (texts then
+        holds the raw DSL strings). Embeds text queries at the
+        COORDINATOR when the client sent no vectors — every scatter
         leg (and the oracle) then scores identical floats. Raises
         :class:`BadRequest` for anything the fleet cannot serve."""
         mode = body.get("mode", "sparse")
         if mode not in SEARCH_MODES:
             raise BadRequest(f"mode must be one of {SEARCH_MODES}, "
                              f"got {mode!r}")
+        if "sq" in body or "sqs" in body:
+            return self._structured_plan(body, mode)
         batched = "queries" in body or "qvs" in body
         if "queries" in body:
             texts = list(body["queries"])
@@ -979,7 +1109,7 @@ class PartitionedSearchApp:
                 # maps this to a 400 — the client's error, not a 502)
                 raise BadRequest("queries=[] — an empty micro-batch has "
                                  "nothing to dispatch")
-            return mode, batched, texts, None
+            return mode, batched, texts, None, None
         if self.embedder is None:
             raise BadRequest("this fleet serves no dense-vector tier "
                              "(build it with FleetSpec(index=IndexSpec("
@@ -1004,7 +1134,7 @@ class PartitionedSearchApp:
         if batched and not vecs:
             raise BadRequest("qvs=[] — an empty micro-batch has nothing "
                              "to dispatch")
-        return mode, batched, texts, vecs
+        return mode, batched, texts, vecs, None
 
     def _merged_hitlists(self, results: list, n_q: int, batched: bool,
                          mode: str, k: int) -> list[list[PartitionHit]]:
@@ -1046,8 +1176,11 @@ class PartitionedSearchApp:
         # rank past that could silently miss docs, so clamp rather than lie
         k = min(int(body.get("k", self.search_k)), self.search_k)
         fetch_docs = body.get("fetch_docs", True)
-        mode, batched, texts, vecs = self._query_plan(body)
-        n_q = len(texts) if texts is not None else len(vecs)
+        mode, batched, texts, vecs, asts = self._query_plan(body)
+        n_q = len(asts) if asts is not None else \
+            len(texts) if texts is not None else len(vecs)
+        facet_req = list(body.get("facets", ())) if asts is not None else []
+        snippets = bool(body.get("snippets")) and asts is not None
         # hybrid legs return their full search_k per tier — RRF ranks are
         # only sound at the deepest per-tier depth; the fused list then
         # truncates to the caller's k
@@ -1062,7 +1195,17 @@ class PartitionedSearchApp:
             # generations (ScatterGather additionally asserts this, across
             # BOTH tiers of a hybrid result)
             payload["gen"] = self.indexer.gen
-        if batched:
+        if asts is not None:
+            # ship the admission-parsed ASTs (workers never re-parse) with
+            # the per-query facet requests and the live field avgdls —
+            # resolved HERE, the same instant the generation was pinned
+            if batched:
+                payload["sqs"] = [a.to_payload() for a in asts]
+            else:
+                payload["sq"] = asts[0].to_payload()
+            payload["facets"] = [facet_req] * n_q
+            payload["favg"] = self._field_avgdl()
+        elif batched:
             if texts is not None:
                 payload["queries"] = texts
             if vecs is not None:
@@ -1076,11 +1219,21 @@ class PartitionedSearchApp:
             payload, t_arrival=t_arrival)
         merged = self._merged_hitlists(results, n_q, batched, mode, k)
         raw, fetch_s = self._fetch_raw(merged, fetch_docs)
+
+        def _mat(qi: int) -> dict:
+            r = self._materialize(
+                merged[qi], raw,
+                terms=asts[qi].terms if asts is not None else None,
+                snippets=snippets)
+            if facet_req:
+                r["facets"] = self._merged_facets(results, qi, batched,
+                                                  facet_req)
+            return r
+
         if batched:
-            result: dict = {"results": [self._materialize(hits, raw)
-                                        for hits in merged]}
+            result: dict = {"results": [_mat(qi) for qi in range(n_q)]}
         else:
-            result = self._materialize(merged[0], raw)
+            result = _mat(0)
         result["partitions"] = [
             {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
              "backfill_s": r.backfill_s, "latency_s": r.latency_s,
@@ -1111,10 +1264,16 @@ class PartitionedSearchApp:
         into one scatter per pinned generation; every one of them still
         merges hits from exactly one generation). Dense/hybrid bodies also
         resolve their query vectors here (embedding the text when the
-        client sent none), so a flush never has to reject."""
-        mode, _, texts, vecs = self._query_plan(body)
+        client sent none), so a flush never has to reject. Structured
+        bodies parse their DSL here (malformed → 400 before the window)
+        and pin the live field avgdls alongside the generation — the
+        scoring state a commit inside the open window must not move."""
+        mode, _, texts, vecs, asts = self._query_plan(body)
         body = dict(body)
         body["_texts"], body["_vecs"], body["_mode"] = texts, vecs, mode
+        body["_asts"] = asts
+        if asts is not None:
+            body["_favg"] = self._field_avgdl()
         if self.indexer is not None:
             body["_gen"] = self.indexer.gen
         return body
@@ -1130,51 +1289,69 @@ class PartitionedSearchApp:
         that merge). Duplicate query strings across (or within) bodies are
         NOT coalesced: every admitted query gets its own slot in the batch
         and its own full result."""
-        # (batched, texts, vecs, mode, n_q, k, fetch_docs, gen) per body —
-        # _admit_search already validated and resolved _texts/_vecs/_mode
+        # (batched, texts, vecs, mode, n_q, k, fetch_docs, gen, asts,
+        #  facets, snippets, favg) per body — _admit_search already
+        # validated and resolved _texts/_vecs/_mode/_asts/_favg
         per_body = []
         for body in bodies:
             texts, vecs = body["_texts"], body["_vecs"]
             mode = body["_mode"]
+            asts = body.get("_asts")
             per_body.append((
-                "queries" in body or "qvs" in body,
+                "queries" in body or "qvs" in body or "sqs" in body,
                 texts, vecs, mode,
+                len(asts) if asts is not None else
                 len(texts) if texts is not None else len(vecs),
                 min(int(body.get("k", self.search_k)), self.search_k),
                 body.get("fetch_docs", True),
-                body.get("_gen")))
-        # one scatter per (pinned generation, mode), in admission order —
-        # normally exactly one; more when a commit landed inside the open
-        # window or modes mix (tiers hydrate per leg, so a mode is part of
-        # the dispatch identity, not a per-query flag inside one payload)
+                body.get("_gen"),
+                asts,
+                list(body.get("facets", ())) if asts is not None else [],
+                bool(body.get("snippets")) and asts is not None,
+                body.get("_favg")))
+        # one scatter per (pinned generation, mode, structured), in
+        # admission order — normally exactly one; more when a commit
+        # landed inside the open window or dispatch shapes mix (tiers
+        # hydrate per leg and structured payloads ship ASTs, so shape is
+        # part of the dispatch identity, not a per-query flag)
         group_order: list = []
         group_members: dict = {}
-        for bi, (_, _, _, mode, _, _, _, gen) in enumerate(per_body):
-            gkey = (gen, mode)
+        for bi, pb in enumerate(per_body):
+            gkey = (pb[7], pb[3], pb[8] is not None)
             if gkey not in group_members:
                 group_order.append(gkey)
                 group_members[gkey] = []
             group_members[gkey].append(bi)
         merged_by_body: dict[int, list] = {}
+        facets_by_body: dict[int, list] = {}
         lat_by_body: dict[int, float] = {}
         recs_by_body: dict[int, list] = {}
         for gkey in group_order:
-            gen, mode = gkey
+            gen, mode, structured = gkey
             idxs = group_members[gkey]
             payload: dict = {"k": self.search_k, "fetch_docs": False}
-            if mode != "sparse":
-                payload["mode"] = mode
-                payload["qvs"] = [v for bi in idxs
-                                  for v in per_body[bi][2]]
-            if mode != "dense":
-                payload["queries"] = [q for bi in idxs
-                                      for q in per_body[bi][1]]
-            elif any(per_body[bi][1] is not None for bi in idxs):
-                # text-less dense bodies leave queries out entirely; mixed
-                # groups substitute "" so counts stay aligned for handlers
-                payload["queries"] = [q for bi in idxs for q in
-                                      (per_body[bi][1] or
-                                       [""] * per_body[bi][4])]
+            if structured:
+                # flat AST micro-batch + per-query facet requests; favg is
+                # generation-pinned, so any member's pin serves the group
+                payload["sqs"] = [a.to_payload() for bi in idxs
+                                  for a in per_body[bi][8]]
+                payload["facets"] = [per_body[bi][9] for bi in idxs
+                                     for _ in per_body[bi][8]]
+                payload["favg"] = per_body[idxs[0]][11] or {}
+            else:
+                if mode != "sparse":
+                    payload["mode"] = mode
+                    payload["qvs"] = [v for bi in idxs
+                                      for v in per_body[bi][2]]
+                if mode != "dense":
+                    payload["queries"] = [q for bi in idxs
+                                          for q in per_body[bi][1]]
+                elif any(per_body[bi][1] is not None for bi in idxs):
+                    # text-less dense bodies leave queries out entirely;
+                    # mixed groups substitute "" so counts stay aligned
+                    payload["queries"] = [q for bi in idxs for q in
+                                          (per_body[bi][1] or
+                                           [""] * per_body[bi][4])]
             if gen is not None:
                 payload["gen"] = gen
             results, lat, records = self.scatter.scatter(
@@ -1186,6 +1363,11 @@ class PartitionedSearchApp:
             for bi in idxs:
                 n = per_body[bi][4]
                 merged_by_body[bi] = merged[at: at + n]
+                freq = per_body[bi][9]
+                if freq:
+                    facets_by_body[bi] = [
+                        self._merged_facets(results, at + j, True, freq)
+                        for j in range(n)]
                 at += n
                 lat_by_body[bi] = lat
                 recs_by_body[bi] = records
@@ -1195,15 +1377,24 @@ class PartitionedSearchApp:
                 if pb[6] for hits in merged_by_body[bi]]
         raw, fetch_s = self._fetch_raw(need, True) if need else ({}, 0.0)
         out = []
-        for bi, (batched, texts, vecs, mode, n_q, k,
-                 fetch_docs, gen) in enumerate(per_body):
+        for bi, (batched, texts, vecs, mode, n_q, k, fetch_docs, gen,
+                 asts, freq, snip, _favg) in enumerate(per_body):
             braw = raw if fetch_docs else {}
             hit_lists = [hits[:k] for hits in merged_by_body[bi]]
+
+            def _mat(j: int) -> dict:
+                r = self._materialize(
+                    hit_lists[j], braw,
+                    terms=asts[j].terms if asts is not None else None,
+                    snippets=snip)
+                if freq:
+                    r["facets"] = facets_by_body[bi][j]
+                return r
+
             if batched:
-                result: dict = {"results": [self._materialize(h, braw)
-                                            for h in hit_lists]}
+                result: dict = {"results": [_mat(j) for j in range(n_q)]}
             else:
-                result = self._materialize(hit_lists[0], braw)
+                result = _mat(0)
             result["partitions"] = [
                 {"fn": r.fn, "cold": r.cold, "hydrate_s": r.hydrate_s,
                  "backfill_s": r.backfill_s, "latency_s": r.latency_s,
@@ -1358,7 +1549,9 @@ def build_partitioned_search_app(
     doc_store = KVStore()
     catalog = AssetCatalog(store)
     runtime = FaaSRuntime(spec.runtime_config)
-    gstats = compute_global_stats(docs)
+    # structured fleets carry per-field stats for BM25F avgdl; v1 fleets
+    # must not grow the stats blob (its bytes feed hydration pricing)
+    gstats = compute_global_stats(docs, fields=ix.structured)
     # every partition packs against the corpus-global vocab: queries then
     # encode (and idf-truncate, for > max_terms) identically per partition
     gvocab = global_vocab(gstats)
@@ -1371,7 +1564,8 @@ def build_partitioned_search_app(
         stats_asset=f"{ix.asset_prefix}-stats",
         embedder=embedder,
         vec_dim=ix.vector.dim if ix.vector else 16,
-        vec_dtype=ix.vector.dtype if ix.vector else "float32")
+        vec_dtype=ix.vector.dtype if ix.vector else "float32",
+        structured=ix.structured, facet_fields=ix.facet_fields)
     assets, fn_groups = [], []
     for p, pdocs in enumerate(parts):
         if not pdocs:        # corpus didn't fill the last partition(s)
@@ -1407,7 +1601,8 @@ def build_partitioned_search_app(
         fn_names=scatter.fn_names, n_parts=spec.n_parts, n_docs_local=per,
         search_k=scfg.k,
         fn_groups=scatter.groups, replicas=rep.replicas,
-        controller=controller, indexer=indexer, embedder=embedder)
+        controller=controller, indexer=indexer, embedder=embedder,
+        structured=ix.structured, facet_fields=tuple(ix.facet_fields))
     gateway.route("GET", "/search", app._search_route)
     # admission sheds feed the autoscaler: sustained backpressure is a
     # scale-up signal the latency/queue estimators can't see (shed

@@ -1,0 +1,321 @@
+"""Structured-query evaluation over a format-v2 packed index.
+
+ONE host-side (numpy float32) evaluator shared verbatim by the fleet's
+per-partition handler and the extended oracle — parity by construction:
+
+* Each :class:`~repro.search.query.Leaf` produces a dense per-document
+  contribution vector plus a boolean match mask, from the SAME packed
+  arrays both sides hold (partition pack on the fleet, one full-corpus
+  pack in the oracle). Every per-leaf input is partition-invariant: idf
+  and avgdl (doc- and field-level) come from the generation's LIVE global
+  stats, per-doc tf / lengths / occurrences from the doc's own rows.
+* A document's score is the leaf contributions added in LEAF ORDER (one
+  f32 add per leaf — doc ids are unique within a leaf), so fleet and
+  oracle sums are bit-identical regardless of how docs are partitioned.
+* Eligibility is one mask: a doc scores iff it matches ALL leaves
+  (conjunctive) or ANY leaf (disjunctive); ineligible docs score 0.
+
+Structured queries always evaluate on this dense path, even on fleets
+configured with the ``pruned`` accumulator: field- and phrase-modified
+impacts invalidate the v1 ``block_max`` ceilings, so block-max pruning
+would be unsound (documented in README — the pruned fast path stays
+bag-of-words-only).
+
+Fielded tf and phrase adjacency are computed from the STORED occurrences
+(first :data:`~repro.index.builder.POS_SLOTS` per posting, the format's
+fixed-pitch truncation); the oracle holds v2 data built by the same
+packer, so exact-set parity for phrases and facets is structural.
+
+Also here: the facet counter (one bincount over the FULL eligible match
+set — not the top-k — merged coordinator-side by string-keyed summation)
+and the snippet cutter (coordinator-side, over the doc texts the merge's
+deduped KV fetch already pulled).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.index.builder import PackedIndex
+from repro.index.tokenizer import field_items, tokenize_spans
+from repro.search.query import Leaf, Query
+
+
+class StructuredUnsupported(Exception):
+    """Structured query against a v1 (no field/position data) index —
+    admission maps this to HTTP 400."""
+
+
+def _f32(x) -> np.float32:
+    return np.float32(x)
+
+
+def _term_postings(packed: PackedIndex, tid: int):
+    """Flat live postings of one term: (docs, tf) with pad slots dropped."""
+    off = np.asarray(packed.term_offsets)
+    lo, hi = int(off[tid]), int(off[tid + 1])
+    docs = np.asarray(packed.block_docs)[lo:hi].reshape(-1).astype(np.int64)
+    tf = np.asarray(packed.block_tf)[lo:hi].reshape(-1)
+    live = (docs < packed.meta.n_docs) & (tf > 0)
+    return docs[live], tf[live], (lo, hi), live
+
+
+def term_occurrences(packed: PackedIndex, tid: int):
+    """Stored occurrences of one term over ALL its blocks (no max_blocks
+    truncation — occurrence scans are exact-set): per live posting, a dict
+    ``doc -> set[(field_id, position)]``."""
+    fd = packed.fields
+    docs, _, (lo, hi), live = _term_postings(packed, tid)
+    P = fd.pos_slots
+    nocc = np.asarray(fd.block_nocc)[lo:hi].reshape(-1)[live]
+    occf = np.asarray(fd.block_occ_field)[lo:hi].reshape(-1, P)[live]
+    occp = np.asarray(fd.block_occ_pos)[lo:hi].reshape(-1, P)[live]
+    out: dict[int, set] = {}
+    for i, d in enumerate(docs):
+        n = int(nocc[i])
+        if n:
+            out[int(d)] = {(int(occf[i, s]), int(occp[i, s]))
+                           for s in range(n)}
+    return out
+
+
+def _fielded_tf(packed: PackedIndex, tid: int, fid: int):
+    """(docs, tf_field) of one term restricted to field ``fid``, from the
+    stored occurrences (the format's documented undercount past P)."""
+    fd = packed.fields
+    docs, _, (lo, hi), live = _term_postings(packed, tid)
+    P = fd.pos_slots
+    nocc = np.asarray(fd.block_nocc)[lo:hi].reshape(-1)[live]
+    occf = np.asarray(fd.block_occ_field)[lo:hi].reshape(-1, P)[live]
+    slot_live = np.arange(P)[None, :] < nocc[:, None]
+    tf_f = ((occf == fid) & slot_live).sum(axis=1).astype(np.float32)
+    sel = tf_f > 0
+    return docs[sel], tf_f[sel]
+
+
+def _bm25_leaf(tf: np.ndarray, dl: np.ndarray, weight: np.float32,
+               k1: float, b: float, avgdl: float) -> np.ndarray:
+    """The shared f32 leaf formula (Lucene variant, no (k1+1) numerator)."""
+    tf = tf.astype(np.float32)
+    dl = dl.astype(np.float32)
+    denom = tf + _f32(k1) * (_f32(1.0) - _f32(b) + _f32(b) * dl / _f32(avgdl))
+    return (weight * tf / denom).astype(np.float32)
+
+
+def leaf_contribution(packed: PackedIndex, leaf: Leaf, *,
+                      field_avgdl: dict[str, float]
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """One leaf's dense (contrib f32 (n_docs,), match bool (n_docs,)).
+
+    ``field_avgdl`` maps field name -> live per-field average length (the
+    generation's global stats) — partition-invariant like idf/avgdl.
+    """
+    m = packed.meta
+    n = m.n_docs
+    contrib = np.zeros(n, np.float32)
+    match = np.zeros(n, bool)
+    vocab = packed.vocab
+    idf = np.asarray(packed.idf, dtype=np.float32)
+    fd = packed.fields
+
+    if leaf.kind == "term":
+        term = leaf.terms[0]
+        tid = vocab.get(term, -1)
+        if tid < 0:
+            return contrib, match
+        weight = _f32(leaf.boost) * _f32(leaf.qtf) * _f32(idf[tid])
+        if leaf.field is None:
+            docs, tf, _, _ = _term_postings(packed, tid)
+            dl = np.asarray(packed.doc_len)[docs]
+            contrib[docs] = _bm25_leaf(tf, dl, weight, m.k1, m.b, m.avgdl)
+            match[docs] = True
+        else:
+            if fd is None:
+                raise StructuredUnsupported("fielded term on a v1 index")
+            fid = fd.field_id(leaf.field)
+            if fid < 0:
+                return contrib, match
+            docs, tf_f = _fielded_tf(packed, tid, fid)
+            dl_f = np.asarray(fd.field_len)[docs, fid]
+            contrib[docs] = _bm25_leaf(
+                tf_f, dl_f, weight, m.k1, m.b,
+                field_avgdl.get(leaf.field, 1.0))
+            match[docs] = True
+        return contrib, match
+
+    # phrase: adjacency over stored (field, position) occurrences —
+    # consecutive kept tokens of the SAME field, field fixed when scoped
+    if fd is None:
+        raise StructuredUnsupported("phrase on a v1 index")
+    fid = -2
+    if leaf.field is not None:
+        fid = fd.field_id(leaf.field)
+        if fid < 0:
+            return contrib, match
+    tids = [vocab.get(t, -1) for t in leaf.terms]
+    if any(t < 0 for t in tids):
+        return contrib, match
+    occ = [term_occurrences(packed, t) for t in tids]
+    weight = _f32(leaf.boost) * _f32(
+        np.sum(idf[np.asarray(tids)], dtype=np.float32))
+    cand = set(occ[0])
+    for o in occ[1:]:
+        cand &= set(o)
+    hits: list[tuple[int, int]] = []
+    for d in cand:
+        base = occ[0][d]
+        tf_ph = 0
+        for f, p in base:
+            if fid != -2 and f != fid:
+                continue
+            if all((f, p + i) in occ[i][d] for i in range(1, len(occ))):
+                tf_ph += 1
+        if tf_ph:
+            hits.append((d, tf_ph))
+    if not hits:
+        return contrib, match
+    docs = np.asarray([d for d, _ in hits], np.int64)
+    tf_ph = np.asarray([c for _, c in hits], np.float32)
+    if leaf.field is None:
+        dl = np.asarray(packed.doc_len)[docs]
+        avg = m.avgdl
+    else:
+        dl = np.asarray(fd.field_len)[docs, fid]
+        avg = field_avgdl.get(leaf.field, 1.0)
+    contrib[docs] = _bm25_leaf(tf_ph, dl, weight, m.k1, m.b, avg)
+    match[docs] = True
+    return contrib, match
+
+
+def evaluate_structured(packed: PackedIndex, query: Query, *,
+                        field_avgdl: dict[str, float]
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """(scores f32 (n_docs,), eligible bool (n_docs,)) for one query.
+
+    Leaf contributions accumulate in leaf order (bit-reproducible f32
+    sums); ineligible docs — failing the AND/OR predicate — score 0.
+    Tombstoned docs carry tf = 0 everywhere in the fused pack, so they
+    match no leaf and drop out with no special casing.
+    """
+    n = packed.meta.n_docs
+    acc = np.zeros(n, np.float32)
+    nmatch = np.zeros(n, np.int32)
+    for leaf in query.leaves:
+        contrib, match = leaf_contribution(packed, leaf,
+                                           field_avgdl=field_avgdl)
+        acc += contrib
+        nmatch += match
+    if query.conjunctive:
+        eligible = nmatch == len(query.leaves) if query.leaves \
+            else np.zeros(n, bool)
+    else:
+        eligible = nmatch > 0
+    return np.where(eligible, acc, np.float32(0.0)), eligible
+
+
+def structured_topk(scores: np.ndarray, k: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k with ``lax.top_k`` tie-breaks (descending value, ascending
+    index among equals), padded to k with (0.0, n_docs) like the dense
+    path's contract."""
+    n = len(scores)
+    kk = min(k, n)
+    order = np.argsort(-scores, kind="stable")[:kk]
+    vals = scores[order].astype(np.float32)
+    ids = order.astype(np.int32)
+    if kk < k:
+        vals = np.concatenate([vals, np.zeros(k - kk, np.float32)])
+        ids = np.concatenate([ids, np.full(k - kk, n, np.int32)])
+    return vals, ids
+
+
+def facet_counts(packed: PackedIndex, eligible: np.ndarray,
+                 facet_field: str) -> dict[str, int]:
+    """value -> doc count over the FULL eligible set (not the top-k) for
+    one declared facet field; absent docs (facet id -1) don't count."""
+    fd = packed.fields
+    if fd is None:
+        raise StructuredUnsupported("facets on a v1 index")
+    try:
+        fi = fd.facet_names.index(facet_field)
+    except ValueError:
+        raise StructuredUnsupported(
+            f"facet field {facet_field!r} not declared "
+            f"(declared: {fd.facet_names})") from None
+    col = np.asarray(fd.facet_ids)[:, fi]
+    sel = eligible & (col >= 0)
+    values = fd.facet_values[fi]
+    counts = np.bincount(col[sel], minlength=len(values))
+    return {values[v]: int(c) for v, c in enumerate(counts) if c > 0}
+
+
+def merge_facet_counts(parts: list[dict[str, int]]) -> dict[str, int]:
+    """String-keyed summation across partitions (facet value ids are
+    segment-local; strings are the global join key), deterministically
+    ordered: count desc, then value asc."""
+    total: dict[str, int] = {}
+    for p in parts:
+        for v, c in p.items():
+            total[v] = total.get(v, 0) + c
+    return dict(sorted(total.items(), key=lambda kv: (-kv[1], kv[0])))
+
+
+# -- snippets -------------------------------------------------------------------
+
+
+def make_snippet(text, terms, *, width: int = 40, max_fragments: int = 4,
+                 em: tuple[str, str] = ("<em>", "</em>")) -> str:
+    """Highlighted fragments of one document covering EVERY matched term.
+
+    Greedy anchor selection: walking fields in document order, each query
+    term present in the doc anchors one fragment at its first occurrence;
+    overlapping windows merge. Within a chosen window every query-term
+    occurrence is wrapped in ``em`` tags, so snippets read naturally while
+    the coverage guarantee stays per-term. Slices index the ORIGINAL text
+    (casing and punctuation preserved); clipped edges get an ellipsis.
+
+    Falls back to the head of the first field when nothing matches.
+    """
+    terms = set(terms)
+    fields = field_items(text)
+    # per field: all query-term token spans
+    field_spans = [[(tok, s, e) for tok, s, e in tokenize_spans(ftext)
+                    if tok in terms] for _, ftext in fields]
+    covered: set[str] = set()
+    anchors: list[tuple[int, int, int]] = []      # (field idx, start, end)
+    for fi, spans in enumerate(field_spans):
+        for tok, s, e in spans:
+            if tok not in covered:
+                covered.add(tok)
+                anchors.append((fi, s, e))
+    if not anchors:
+        head = fields[0][1] if fields else ""
+        frag = head[:2 * width]
+        return frag + ("…" if len(head) > len(frag) else "")
+    anchors = anchors[:max_fragments]
+    # windows per field, merged when overlapping
+    windows: dict[int, list[tuple[int, int]]] = {}
+    for fi, s, e in anchors:
+        ftext = fields[fi][1]
+        windows.setdefault(fi, []).append(
+            (max(0, s - width), min(len(ftext), e + width)))
+    frags: list[str] = []
+    for fi in sorted(windows):
+        ftext = fields[fi][1]
+        merged: list[list[int]] = []
+        for lo, hi in sorted(windows[fi]):
+            if merged and lo <= merged[-1][1]:
+                merged[-1][1] = max(merged[-1][1], hi)
+            else:
+                merged.append([lo, hi])
+        for lo, hi in merged:
+            piece = ftext[lo:hi]
+            # wrap every query-term occurrence inside the window
+            marks = [(s - lo, e - lo) for tok, s, e in field_spans[fi]
+                     if s >= lo and e <= hi]
+            for s, e in sorted(marks, reverse=True):
+                piece = piece[:s] + em[0] + piece[s:e] + em[1] + piece[e:]
+            pre = "…" if lo > 0 else ""
+            post = "…" if hi < len(ftext) else ""
+            frags.append(pre + piece + post)
+    return " ".join(frags)

@@ -415,6 +415,56 @@ def test_heterogeneous_targets_scale_head_not_tail():
     assert app.controller.replica_counts() == [1, 1]
 
 
+def test_exec_scale_feeds_b9b_fraction_into_concurrency_rule():
+    """B9b feed-forward: a pruned fleet's OBSERVED warm p50 carries the
+    dense-path constant (the modeled clock charges ``sim_exec_s``
+    calibrated against the dense pass), but the work its kernel sustains
+    is linear in blocks touched — ~0.02 of the dense pass under tight
+    bounds (the gated ``b9b_pruned_blocks_touched_frac_*`` rows). Fed that
+    fraction, the concurrency rule must NOT buy the pools the raw p50
+    says it needs: identical traffic, identical observed latencies,
+    opposite decision. Per-partition sequences let a mixed fleet scale
+    only its dense partitions off the unscaled constant."""
+    def run(exec_scale):
+        corpus = synth_corpus(350, vocab=400, seed=45)
+        queries = synth_queries(corpus, 40, seed=46)
+        app = build_partitioned_search_app(
+            corpus, n_parts=2, replicas=1, hedge=HedgePolicy(),
+            autoscale=AutoscalePolicy(
+                min_replicas=1, max_replicas=3, tick_s=0.25,
+                rate_window_s=1.0, up_qps_per_replica=float("inf"),
+                down_qps_per_replica=1.0, idle_ticks_to_retire=2,
+                target_utilization=0.6, exec_scale=exec_scale),
+            partition_weights=[6.0, 1.0],
+            runtime_config=RuntimeConfig(idle_timeout_s=60.0),
+            search_config=SearchConfig(sim_exec_s=0.002,
+                                       sim_exec_per_kdoc_s=0.4))
+        app.warm()
+        t0 = app.runtime.clock + 1.0
+        for i, q in enumerate(queries):
+            r = app.query(q, k=K, t_arrival=t0 + (1 / 6) * i,
+                          fetch_docs=False)
+            assert r.ok, r.body
+        return app
+
+    dense = run(1.0)                 # the default: observed time IS the work
+    assert dense.controller.replica_counts() == [2, 1]
+    pruned = run(0.02)               # B9b's measured blocks-touched fraction
+    assert pruned.controller.replica_counts() == [1, 1]
+    assert not any(e["action"] == "scale_up"
+                   for e in pruned.controller.events)
+    # per-partition feed: scale only partition 1's model down — the head
+    # still buys its pool off the unscaled constant
+    mixed = run([1.0, 0.02])
+    assert mixed.controller.replica_counts() == [2, 1]
+    # a wrong-length sequence is rejected at construction, like bounds
+    from repro.core.autoscale import FleetController
+    with pytest.raises(ValueError, match="per-partition exec_scale"):
+        FleetController(mixed.runtime, mixed.scatter,
+                        [lambda: _sleepy_handler] * 2,
+                        AutoscalePolicy(exec_scale=[1.0, 0.5, 0.2]))
+
+
 def test_over_provisioned_group_drains_under_live_traffic():
     """A transient (here: simply starting at R=2) must not pin capacity
     forever just because traffic keeps flowing: when the group's own

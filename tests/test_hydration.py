@@ -63,8 +63,9 @@ def _publish(packed, name="idx", version="v1"):
 
 
 def test_superindex_roundtrip(packed):
-    meta, vocab, (off, bmax, dlen, idf) = unpack_superindex(
+    meta, vocab, (off, bmax, dlen, idf), fields = unpack_superindex(
         pack_superindex(packed))
+    assert fields is None  # v1 pack → no fields header
     assert meta.n_docs == packed.meta.n_docs
     assert meta.n_blocks == packed.meta.n_blocks
     assert vocab == packed.vocab

@@ -1,0 +1,367 @@
+"""Structured retrieval, layer by layer (PR 10 unit tier).
+
+* tokenizer — the fielded views the v2 format builds on: empty and
+  stopword-only fields, duplicate terms keeping distinct positions, and
+  the flatten invariant (a fielded doc's bag-of-words identity equals its
+  concatenation's).
+* query DSL — parse/payload round-trips, duplicate-term qtf merging,
+  conjunction detection, and every admission-mapped parse error.
+* format — v1 superindex/payload bytes pinned against a hand-framed
+  serialization (backward compat is a byte contract, not a behaviour);
+  v2 blobs extend v1 as a strict prefix at the section AND payload-row
+  level, and round-trip their occurrence arrays exactly.
+* evaluator — packed-array scoring vs the oracle's dict-based ``exact_*``
+  twins (no shared code), POS_SLOTS truncation on both sides, facet
+  merging determinism, snippet coverage guarantees.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.index.builder import (POS_SLOTS, IndexWriter, compute_global_stats,
+                                 field_avgdl, pack_payload, pack_superindex,
+                                 payload_row_bytes, unpack_payload_rows,
+                                 unpack_superindex)
+from repro.index.tokenizer import (field_items, field_token_counts,
+                                   flatten_text, tokenize, tokenize_positions,
+                                   tokenize_spans)
+from repro.search.oracle import OracleSearcher, StructuredOracleSearcher
+from repro.search.query import (QueryParseError, parse_query,
+                                query_from_payload)
+from repro.search.structured import (facet_counts, make_snippet,
+                                     merge_facet_counts)
+
+# -- tokenizer: the edge cases the field split exposes -------------------------
+
+
+def test_empty_field_contributes_nothing_but_stays_declared():
+    doc = {"title": "", "body": "hello world"}
+    assert field_items(doc) == [("title", ""), ("body", "hello world")]
+    assert tokenize(doc) == ["hello", "world"]
+    assert tokenize_positions(doc) == [("body", "hello", 0),
+                                       ("body", "world", 1)]
+    # the per-field length table still carries the empty field at length 0
+    assert field_token_counts(doc) == {"title": 0, "body": 2}
+
+
+def test_stopword_only_field_has_zero_kept_length():
+    doc = {"title": "the of and a", "body": "serverless lucene"}
+    assert tokenize(doc) == ["serverless", "lucene"]
+    assert [p for p in tokenize_positions(doc) if p[0] == "title"] == []
+    assert field_token_counts(doc)["title"] == 0
+    # an overlength token is dropped by the same keep rule
+    long = "x" * 65
+    assert tokenize({"t": long}) == []
+    assert tokenize_positions({"t": f"{long} ok"}) == [("t", "ok", 0)]
+
+
+def test_duplicate_terms_keep_distinct_positions():
+    doc = {"body": "data big data"}
+    assert tokenize_positions(doc) == [("body", "data", 0), ("body", "big", 1),
+                                       ("body", "data", 2)]
+    # positions index the KEPT stream: the stopword consumes no slot
+    assert tokenize_positions("the big data") == [("body", "big", 0),
+                                                  ("body", "data", 1)]
+    # the same term in two fields restarts at 0 per field
+    two = {"title": "data", "body": "data"}
+    assert tokenize_positions(two) == [("title", "data", 0),
+                                       ("body", "data", 0)]
+
+
+def test_flatten_invariant_fielded_doc_equals_concatenation():
+    doc = {"title": "Serverless Lucene", "body": "big data engines"}
+    assert flatten_text(doc) == "Serverless Lucene big data engines"
+    assert tokenize(doc) == tokenize(flatten_text(doc))
+    assert sum(field_token_counts(doc).values()) == len(tokenize(doc))
+    # a plain string is one implicit body field
+    assert field_items("hi world") == [("body", "hi world")]
+    assert tokenize_positions("hi world") == [("body", "hi", 0),
+                                              ("body", "world", 1)]
+
+
+def test_spans_index_the_original_text():
+    text = "The BIG-data engine"
+    spans = tokenize_spans(text)
+    assert [t for t, _, _ in spans] == ["big", "data", "engine"]
+    for tok, s, e in spans:
+        assert text[s:e].lower() == tok      # casing preserved by slicing
+
+
+# -- query DSL -----------------------------------------------------------------
+
+
+def test_parse_clause_shapes():
+    q = parse_query('title:"serverless lucene" body:big^2 data')
+    assert not q.conjunctive
+    ph, bt, dt = q.leaves
+    assert (ph.kind, ph.field, ph.terms) == ("phrase", "title",
+                                             ["serverless", "lucene"])
+    assert (bt.kind, bt.field, bt.boost) == ("term", "body", 2.0)
+    assert (dt.kind, dt.field, dt.terms) == ("term", None, ["data"])
+    assert q.terms == ["serverless", "lucene", "big", "data"]
+
+
+def test_any_and_makes_the_query_conjunctive():
+    assert not parse_query("a1 OR b1").conjunctive
+    assert parse_query("a1 AND b1").conjunctive
+    assert parse_query("a1 AND b1 OR c1").conjunctive   # one AND flips all
+
+
+def test_duplicate_terms_merge_qtf_but_phrases_never_merge():
+    q = parse_query("data data title:data")
+    assert [(lf.terms[0], lf.field, lf.qtf) for lf in q.leaves] == [
+        ("data", None, 2), ("data", "title", 1)]
+    p = parse_query('"big data" "big data"')
+    assert [lf.kind for lf in p.leaves] == ["phrase", "phrase"]
+    # a one-token phrase is just a term (and merges like one)
+    assert parse_query('"data" data').leaves[0].qtf == 2
+
+
+def test_analyzer_runs_inside_clauses():
+    q = parse_query('"the big data" of')
+    # stopword dropped from the phrase; the stopword-only clause vanishes
+    assert q.leaves[0].terms == ["big", "data"]
+    assert len(q.leaves) == 1
+    assert parse_query("of the").leaves == []      # zero leaves is legal
+
+
+def test_parse_errors():
+    for bad in ('"unbalanced', "x^nope", "x^0", "x^-1", "AND x", "x AND"):
+        with pytest.raises(QueryParseError):
+            parse_query(bad)
+    with pytest.raises(QueryParseError):
+        parse_query(None)
+
+
+def test_payload_round_trip():
+    q = parse_query('title:"serverless lucene"^1.5 AND body:big data data')
+    rt = query_from_payload(q.to_payload())
+    assert rt == q
+
+
+# -- format: v1 byte identity, v2 prefix + round-trip --------------------------
+
+DOCS = [
+    ("d0", {"title": "serverless lucene", "body": "a prototype of serverless "
+            "lucene", "cat": "systems"}),
+    ("d1", {"title": "big data", "body": "serverless big data engines",
+            "cat": "systems"}),
+    ("d2", {"title": "tails", "body": "tail latency in big fleets",
+            "cat": "cloud"}),
+    ("d3", {"title": "facets", "body": "faceted navigation data data data",
+            "cat": "ir"}),
+]
+FLAT = [(e, flatten_text(t)) for e, t in DOCS]
+
+
+def _pack(docs, **kw):
+    w = IndexWriter(**kw)
+    for e, t in docs:
+        w.add(e, t)
+    return w.pack()
+
+
+def test_v1_superindex_bytes_pinned_to_hand_framed_serialization():
+    """Backward compat is a byte contract: a segment packed WITHOUT the
+    structured option must serialize to exactly the v1 framing — SUPX
+    magic, six length-prefixed sections, nothing else."""
+    from repro.core import jsonutil as orjson
+    from repro.index.builder import _npy_bytes
+    packed = _pack(FLAT)
+    assert packed.fields is None
+    blob = pack_superindex(packed)
+    want = b"SUPX"
+    for s in (packed.meta.to_json(), orjson.dumps(packed.vocab),
+              _npy_bytes(packed.term_offsets), _npy_bytes(packed.block_max),
+              _npy_bytes(packed.doc_len), _npy_bytes(packed.idf)):
+        want += len(s).to_bytes(4, "little") + s
+    assert blob == want
+    meta, vocab, arrays, fh = unpack_superindex(blob)
+    assert fh is None and vocab == packed.vocab
+    # v1 payload rows stay at the 5 B/lane pitch
+    pay = pack_payload(packed)
+    assert len(pay) == packed.meta.n_blocks * payload_row_bytes(
+        packed.meta.block)
+    docs, tf = unpack_payload_rows(pay, packed.meta.block)
+    np.testing.assert_array_equal(docs, np.asarray(packed.block_docs))
+    np.testing.assert_array_equal(tf, np.asarray(packed.block_tf))
+
+
+def test_v2_extends_v1_as_a_strict_prefix():
+    """A v2 pack of fielded docs and a v1 pack of their flattened texts
+    must agree on every v1 array — and the v2 superindex's first six
+    sections / each payload row's first 5·B bytes must equal the v1
+    serialization byte-for-byte, so a v1 reader's view is untouched."""
+    v1 = _pack(FLAT)
+    v2 = _pack(DOCS, structured=True, facet_fields=("cat",))
+    assert v2.fields is not None and v2.fields.pos_slots == POS_SLOTS
+    for name in ("term_offsets", "block_docs", "block_tf", "block_max",
+                 "doc_len", "idf"):
+        np.testing.assert_array_equal(np.asarray(getattr(v1, name)),
+                                      np.asarray(getattr(v2, name)), name)
+    b1, b2 = pack_superindex(v1), pack_superindex(v2)
+    assert b1[:4] == b"SUPX" and b2[:4] == b"SUP2"
+    assert b2[4:4 + len(b1) - 4] == b1[4:]        # section-level prefix
+    B = v1.meta.block
+    r1 = np.frombuffer(pack_payload(v1), np.uint8).reshape(
+        -1, payload_row_bytes(B))
+    r2 = np.frombuffer(pack_payload(v2), np.uint8).reshape(
+        -1, payload_row_bytes(B, POS_SLOTS))
+    np.testing.assert_array_equal(r1, r2[:, :payload_row_bytes(B)])
+
+
+def test_v2_round_trip_restores_occurrence_arrays():
+    v2 = _pack(DOCS, structured=True, facet_fields=("cat",))
+    fd = v2.fields
+    meta, vocab, arrays, fh = unpack_superindex(pack_superindex(v2))
+    assert fh["field_names"] == fd.field_names
+    assert fh["pos_slots"] == fd.pos_slots
+    assert fh["facet_names"] == fd.facet_names
+    assert fh["facet_values"] == fd.facet_values
+    np.testing.assert_array_equal(fh["field_len"], np.asarray(fd.field_len))
+    np.testing.assert_array_equal(fh["facet_ids"], np.asarray(fd.facet_ids))
+    out = unpack_payload_rows(pack_payload(v2), meta.block, fh["pos_slots"])
+    docs, tf, nocc, occf, occp = out
+    np.testing.assert_array_equal(nocc, np.asarray(fd.block_nocc))
+    np.testing.assert_array_equal(occf, np.asarray(fd.block_occ_field))
+    np.testing.assert_array_equal(occp, np.asarray(fd.block_occ_pos))
+
+
+def test_stripping_fields_restores_v1_bytes_exactly():
+    """The SuperIndexMissing-style fallback shape: dropping the fields
+    attachment from a v2 pack yields a pack whose v1 serialization is
+    byte-identical to one never built with fields — nothing v2 leaks
+    into the v1 sections."""
+    v1 = _pack(FLAT)
+    v2 = _pack(DOCS, structured=True, facet_fields=("cat",))
+    stripped = dataclasses.replace(v2, fields=None)
+    assert pack_superindex(stripped) == pack_superindex(v1)
+    assert pack_payload(stripped) == pack_payload(v1)
+
+
+# -- evaluator vs the oracle's independent twins -------------------------------
+
+CORPUS = DOCS + [
+    ("d4", {"title": "big big big", "body": " ".join(["big"] * 12),
+            "cat": "systems"}),               # > POS_SLOTS occurrences
+    ("d5", {"title": "", "body": "the of and", "cat": "cloud"}),  # empty-ish
+]
+
+QUERIES = [
+    'title:"serverless lucene" OR big',
+    'body:big AND data',
+    '"big data"^2 systems',
+    'cat:systems',
+    'title:big',
+    'serverless lucene',                      # plain bag-of-words
+    '"big big" OR facets',                    # repeated-term phrase
+]
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    return StructuredOracleSearcher(CORPUS, facet_fields=("cat",))
+
+
+@pytest.mark.parametrize("sq", QUERIES)
+def test_packed_match_sets_equal_dict_twins(oracle, sq):
+    assert oracle.match_set(sq) == oracle.exact_match_set(sq), sq
+
+
+@pytest.mark.parametrize("sq", QUERIES)
+def test_packed_facets_equal_dict_twins(oracle, sq):
+    assert oracle.facet_counts(sq, "cat") == \
+        oracle.exact_facet_counts(sq, "cat"), sq
+
+
+def test_pos_slots_truncation_is_symmetric(oracle):
+    """d4's body holds 12 'big' occurrences but the format stores only the
+    first POS_SLOTS per posting — both evaluator and dict twin apply the
+    truncation, so a phrase needing a late occurrence misses on BOTH."""
+    assert POS_SLOTS < 12
+    d4 = next(i for i, (e, _) in enumerate(CORPUS) if e == "d4")
+    m = oracle.match_set('body:"big big"')
+    assert d4 in m and m == oracle.exact_match_set('body:"big big"')
+
+
+def test_bag_of_words_structured_matches_legacy_oracle_ranking(oracle):
+    """A structured query with no field/phrase syntax must rank exactly
+    like the legacy analyzer path (same docs, same tie-breaks) — the
+    grammar is a superset, not a fork."""
+    legacy = OracleSearcher([(e, flatten_text(t)) for e, t in CORPUS])
+    for q in ("serverless lucene", "big data", "data data big"):
+        want = legacy.search(q, 10)
+        got = oracle.search(q, 10)
+        assert [d for d, _ in got] == [d for d, _ in want], q
+        for (_, a), (_, b) in zip(got, want):
+            assert a == pytest.approx(b, rel=1e-5), q
+
+
+def test_unknown_terms_fields_and_values_match_nothing(oracle):
+    assert oracle.match_set("zzzz") == set()
+    assert oracle.match_set("nofield:big") == set()
+    assert oracle.match_set('"serverless zzzz"') == set()
+    assert oracle.search("zzzz", 5) == []
+    assert oracle.facet_counts("zzzz", "cat") == {}
+
+
+def test_conjunction_needs_every_leaf(oracle):
+    both = oracle.match_set("serverless AND data")
+    assert both == oracle.match_set("serverless") & oracle.match_set("data")
+    assert oracle.match_set("serverless OR data") == \
+        oracle.match_set("serverless") | oracle.match_set("data")
+
+
+def test_facet_counts_cover_full_match_set_not_topk():
+    oracle = StructuredOracleSearcher(CORPUS, facet_fields=("cat",))
+    _, eligible = oracle.evaluate("big")
+    got = facet_counts(oracle.packed, eligible, "cat")
+    assert sum(got.values()) == int(eligible.sum())
+    with pytest.raises(Exception, match="not declared"):
+        facet_counts(oracle.packed, eligible, "title")
+
+
+def test_merge_facet_counts_orders_deterministically():
+    merged = merge_facet_counts([{"b": 2, "a": 1}, {"a": 1, "c": 2}])
+    assert list(merged.items()) == [("a", 2), ("b", 2), ("c", 2)]
+    assert merge_facet_counts([]) == {}
+
+
+# -- snippets ------------------------------------------------------------------
+
+
+def test_snippet_covers_every_matched_term():
+    doc = {"title": "Serverless Lucene", "body":
+           "A prototype of serverless Lucene running on cloud functions, "
+           "where big data workloads meet pay-per-query economics."}
+    snip = make_snippet(doc, ["serverless", "big", "economics"])
+    for t in ("serverless", "big", "economics"):
+        assert f"<em>" in snip and t in snip.lower()
+    # original casing survives (slices index the raw text)
+    assert "<em>Serverless</em>" in snip
+
+
+def test_snippet_falls_back_to_head_when_nothing_matches():
+    doc = {"body": "x" * 200}
+    snip = make_snippet(doc, ["absent"])
+    assert snip.startswith("x") and snip.endswith("…")
+    assert "<em>" not in snip
+    assert make_snippet({"body": ""}, ["absent"]) == ""
+
+
+def test_snippet_merges_overlapping_windows():
+    body = "alpha beta gamma " * 3 + "delta"
+    snip = make_snippet({"body": body}, ["beta", "gamma"])
+    assert "<em>beta</em> <em>gamma</em>" in snip
+
+
+# -- per-field stats -----------------------------------------------------------
+
+
+def test_field_avgdl_from_global_stats():
+    stats = compute_global_stats(DOCS, fields=True)
+    lens = [field_token_counts(t)["title"] for _, t in DOCS]
+    assert field_avgdl(stats, "title") == pytest.approx(sum(lens) / len(DOCS))
+    assert field_avgdl(stats, "absent") == 1.0

@@ -1,0 +1,191 @@
+"""Structured queries end-to-end through the partitioned fleet (PR 10).
+
+The acceptance pin: a ``field:``-scoped phrase query with a facet request,
+through a 4-partition ×2-replica fleet, returns top-k scores BIT-identical
+to :class:`StructuredOracleSearcher` over the live corpus (same order,
+same f32 bits), facet counts exactly equal to a full-corpus count, and
+snippets containing every matched term — including across a mid-window
+delta commit (admitted queries stay pinned to their generation) and on
+lazily-hydrated all-cold instances.
+"""
+
+import pytest
+
+from repro.core.gateway import WindowPolicy
+from repro.core.partition import (FleetSpec, GatewaySpec, IndexSpec,
+                                  ReplicationSpec)
+from repro.index.tokenizer import flatten_text, tokenize
+from repro.search.oracle import StructuredOracleSearcher
+from repro.search.query import parse_query
+from repro.search.searcher import SearchConfig
+from repro.search.service import build_partitioned_search_app
+
+DOCS = [
+    (f"d{i:03d}", {"title": t, "body": b, "cat": c})
+    for i, (t, b, c) in enumerate([
+        ("serverless lucene", "a prototype of serverless lucene on lambda",
+         "systems"),
+        ("big data systems", "serverless big data engines at scale",
+         "systems"),
+        ("cloud functions", "functions as a service with big latency tails",
+         "cloud"),
+        ("information retrieval", "bm25 ranking for information retrieval",
+         "ir"),
+        ("vector search", "dense vector retrieval with big data", "ir"),
+        ("lambda tails", "tail latency in serverless lambda fleets", "cloud"),
+        ("index formats", "packed segment formats for lucene indexes",
+         "systems"),
+        ("query parsing", "structured query parsing with phrases", "ir"),
+        ("scatter gather", "scatter gather merge over partitions", "systems"),
+        ("facet counts", "faceted navigation over categorical fields", "ir"),
+        ("cold starts", "cold start hydration of serverless search", "cloud"),
+        ("phrase search", "positional phrase search needs positions", "ir"),
+    ])
+]
+
+
+def _build(**fleet_kw):
+    spec = FleetSpec(
+        n_parts=4,
+        replication=ReplicationSpec(replicas=2),
+        index=IndexSpec(structured=True, facet_fields=("cat",)),
+        search_config=SearchConfig(k=10, sim_exec_s=0.0002),
+        **fleet_kw)
+    return build_partitioned_search_app(DOCS, spec)
+
+
+def _check(app, sq, *, facets=("cat",), k=10, resp=None, corpus=None):
+    """Fleet response vs oracle over the live corpus: exact (ext_id, score)
+    list equality — order AND f32 bits — plus exact facets and snippet
+    term coverage."""
+    live = corpus if corpus is not None else app.indexer.live_corpus()
+    oracle = StructuredOracleSearcher(live, facet_fields=("cat",))
+    if resp is None:
+        resp = app.query(sq=sq, k=k, facets=list(facets), snippets=True)
+    assert resp.status == 200, (resp.status, resp.body)
+    r = resp.body
+    want = [(live[i][0], s) for i, s in oracle.search(sq, k)]
+    assert list(zip(r["ext_ids"], r["scores"])) == want, sq
+    for f in facets:
+        assert r["facets"][f] == oracle.facet_counts(sq, f), (sq, f)
+        assert r["facets"][f] == oracle.exact_facet_counts(sq, f), (sq, f)
+    if "snippets" in r:
+        terms = set(parse_query(sq).terms)
+        for doc, snip in zip(r["docs"], r["snippets"]):
+            for t in terms & set(tokenize(doc["contents"])):
+                assert "<em>" in snip and t in snip.lower(), (sq, t, snip)
+    return r
+
+
+@pytest.fixture()
+def app():
+    return _build()
+
+
+QUERIES = [
+    'title:"serverless lucene" OR big',      # the acceptance query shape
+    'body:big AND data',
+    '"big data"^2 systems',
+    'cat:systems',
+    'serverless',                            # structured bag-of-words
+]
+
+
+@pytest.mark.parametrize("sq", QUERIES)
+def test_fleet_matches_oracle_bit_for_bit(app, sq):
+    _check(app, sq)
+
+
+def test_legacy_path_serves_unchanged_on_a_structured_fleet(app):
+    """Plain ``q`` queries on a v2 fleet return bit-identical results to a
+    v1 fleet over the flattened texts — the structured option must not
+    perturb the bag-of-words path (same packs at the v1 lanes, same
+    kernels, same merge)."""
+    v1 = build_partitioned_search_app(
+        [(e, flatten_text(t)) for e, t in DOCS],
+        FleetSpec(n_parts=4, replication=ReplicationSpec(replicas=2),
+                  search_config=SearchConfig(k=10, sim_exec_s=0.0002)))
+    for q in ("serverless lucene", "big data", "latency"):
+        a = app.query(q, k=10, fetch_docs=False)
+        b = v1.query(q, k=10, fetch_docs=False)
+        assert a.status == b.status == 200
+        assert a.body["ext_ids"] == b.body["ext_ids"], q
+        assert a.body["scores"] == b.body["scores"], q
+
+
+def test_structured_on_v1_fleet_and_bad_queries_rejected_at_admission(app):
+    v1 = build_partitioned_search_app(
+        [(e, flatten_text(t)) for e, t in DOCS], FleetSpec(n_parts=2))
+    assert v1.query(sq="title:foo").status == 400
+    assert app.query(sq="x", facets=["nope"]).status == 400   # undeclared
+    assert app.query(sq='"unbalanced').status == 400
+    assert app.query(sq="AND x").status == 400
+    assert app.query(sq="x", mode="dense").status == 400
+    # and nothing above poisoned the fleet
+    assert app.query(sq="serverless").status == 200
+
+
+def test_parity_holds_across_delta_commit_with_new_facet_value(app):
+    _check(app, 'body:big AND data')
+    app.add_documents([
+        ("n000", {"title": "stream processing",
+                  "body": "serverless big data streams", "cat": "streams"}),
+        ("n001", {"title": "big graphs",
+                  "body": "graph systems with big data", "cat": "systems"}),
+    ])
+    app.delete_documents(["d001"])           # was 'big data systems'
+    resp = app.commit()
+    assert resp.status == 200 and resp.body["committed"], resp.body
+    _check(app, 'body:big AND data')
+    _check(app, '"big data" OR title:big')
+    _check(app, 'cat:streams OR serverless')  # the new facet value counts
+
+
+def test_mid_window_commit_pins_admitted_queries_to_their_generation():
+    """Queries admitted before a commit that lands inside the same open
+    batching window score against generation 1's corpus and stats; a query
+    admitted after it scores against generation 2 — same flush."""
+    app = _build(gateway=GatewaySpec(window=WindowPolicy(
+        max_window_s=0.5, sparse_qps=0.0, max_batch=64)))
+    t0 = app.runtime.clock
+    corpus_g1 = app.indexer.live_corpus()
+    h1 = app.submit(sq='title:"serverless lucene" OR big', facets=["cat"],
+                    t_arrival=t0 + 0.01)
+    h2 = app.submit(sq='body:big AND data', facets=["cat"],
+                    t_arrival=t0 + 0.02)
+    h3 = app.submit("serverless", t_arrival=t0 + 0.03)   # plain, same window
+    app.add_documents([("n000", {"title": "streams",
+                                 "body": "big data streams",
+                                 "cat": "streams"})], t_arrival=t0 + 0.05)
+    assert app.commit(t_arrival=t0 + 0.06).body["committed"]
+    corpus_g2 = app.indexer.live_corpus()
+    h4 = app.submit(sq='cat:streams OR serverless', facets=["cat"],
+                    t_arrival=app.runtime.clock + 0.01)
+    app.flush(None)
+    r1, r2, r3, r4 = h1.response, h2.response, h3.response, h4.response
+    assert r1.status == r2.status == r3.status == r4.status == 200
+    assert r1.body["generation"] == 1 and r2.body["generation"] == 1
+    assert r4.body["generation"] == 2
+    _check(app, 'title:"serverless lucene" OR big', resp=r1, corpus=corpus_g1)
+    _check(app, 'body:big AND data', resp=r2, corpus=corpus_g1)
+    _check(app, 'cat:streams OR serverless', resp=r4, corpus=corpus_g2)
+    assert r3.body["ext_ids"]
+    # windowed admission still 400s malformed structured bodies
+    bad = app.submit(sq='"unbalanced', t_arrival=app.runtime.clock + 0.01)
+    assert bad.response.status == 400
+
+
+def test_cold_lazy_instances_hold_bit_parity(app):
+    """Kill EVERY instance: the next structured query cold-starts each leg
+    through lazy block-range hydration (only the queried terms' v2 rows)
+    and must still match the oracle bit-for-bit, facets and snippets
+    included."""
+    assert app.query(sq="serverless").status == 200   # warm the fleet first
+    killed = 0
+    while app.runtime.kill_instance():
+        killed += 1
+    assert killed > 0
+    resp = app.query(sq='"big data" OR title:phrase', facets=["cat"],
+                     snippets=True)
+    r = _check(app, '"big data" OR title:phrase', resp=resp)
+    assert any(p["cold"] for p in r["partitions"])
